@@ -1,0 +1,192 @@
+"""Shared experiment harness for the paper-reproduction benchmarks.
+
+Trains a backbone (GMF / NeuMF / SASRec) with a chosen embedding scheme
+on the ML-1M-like synthetic set (personalized + sequential tasks) or an
+AAR-like relevance set (item-to-item task), and evaluates HR@10 / RMSE
+exactly as the paper does (§3.5): for HR@10, rank the withheld test
+item against 100 sampled negatives per user.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.sampler import PointwiseSampler, SequenceSampler
+from repro.data.synthetic import InteractionData, aar_like, movielens_like
+from repro.models.recsys.backbones import (GMF, BackboneConfig, SASRec,
+                                           make_backbone)
+from repro.train import optimizer as opt_lib
+from repro.train.optimizer import TrainState
+
+
+@dataclasses.dataclass
+class RunResult:
+    scheme: str
+    metric: float            # HR@10 (higher better) or RMSE (lower better)
+    size_bits: int
+    size_pct: float          # % of full-embedding size
+    losses: List[float]
+    seconds: float
+
+
+# ----------------------------------------------------------------------
+# evaluation (paper §3.5: HR@10 vs 100 sampled negatives)
+# ----------------------------------------------------------------------
+
+def hr_at_10_pointwise(model, params, data: InteractionData,
+                       n_users_eval: int = 500, n_neg: int = 100,
+                       seed: int = 7) -> float:
+    rng = np.random.default_rng(seed)
+    users = rng.choice(data.n_users, min(n_users_eval, data.n_users),
+                       replace=False)
+    cand = np.concatenate(
+        [data.test_item[users][:, None],
+         rng.integers(0, data.n_items, (len(users), n_neg))], axis=1)
+    u_rep = np.repeat(users, n_neg + 1)
+    scores, _ = jax.jit(model.score)(params, jnp.asarray(u_rep),
+                                     jnp.asarray(cand.reshape(-1)))
+    scores = np.asarray(scores).reshape(len(users), n_neg + 1)
+    rank = (scores[:, 1:] >= scores[:, :1]).sum(axis=1)
+    return float((rank < 10).mean())
+
+
+def hr_at_10_sasrec(model: SASRec, params, data: InteractionData,
+                    maxlen: int, n_users_eval: int = 500,
+                    n_neg: int = 100, seed: int = 7) -> float:
+    rng = np.random.default_rng(seed)
+    users = rng.choice(data.n_users, min(n_users_eval, data.n_users),
+                       replace=False)
+    seqs = np.zeros((len(users), maxlen), np.int64)
+    for i, u in enumerate(users):
+        s = data.train_seqs[u][-maxlen:] + 1          # shift: 0 = pad
+        seqs[i, maxlen - len(s):] = s
+    hidden, _ = jax.jit(model.trunk)(params, jnp.asarray(seqs))
+    last = np.asarray(hidden[:, -1])                  # (U, d)
+    cand = np.concatenate(
+        [data.test_item[users][:, None] + 1,
+         rng.integers(1, data.n_items + 1, (len(users), n_neg))], axis=1)
+    e, _ = model.item_emb.apply(params["item_emb"],
+                                jnp.asarray(cand.reshape(-1)))
+    e = np.asarray(e).reshape(len(users), n_neg + 1, -1)
+    scores = np.einsum("ud,ukd->uk", last, e)
+    rank = (scores[:, 1:] >= scores[:, :1]).sum(axis=1)
+    return float((rank < 10).mean())
+
+
+# ----------------------------------------------------------------------
+# training drivers
+# ----------------------------------------------------------------------
+
+def _fit(model, params, loss_fn, data_iter, steps: int, lr: float,
+         log_every: int = 0) -> Tuple[TrainState, List[float]]:
+    ocfg = opt_lib.OptimizerConfig(kind="adam", lr=lr, grad_clip=None)
+    state = TrainState.create(ocfg, params)
+    step = jax.jit(opt_lib.make_step_fn(ocfg, loss_fn))
+    losses = []
+    for i in range(steps):
+        batch = next(data_iter)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, metrics = step(state, batch)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            losses.append(float(metrics["bce" if "bce" in metrics
+                                        else "loss"]))
+    return state, losses
+
+
+def run_pointwise(model_name: str, scheme_cfg: BackboneConfig,
+                  data: InteractionData, steps: int = 400,
+                  lr: float = 2e-3, eval_users: int = 500) -> RunResult:
+    """Task 1 (personalized): GMF / NeuMF on ML-like implicit feedback."""
+    t0 = time.time()
+    model = make_backbone(scheme_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sampler = iter(PointwiseSampler(data, batch_pos=512, n_neg=4))
+    state, losses = _fit(model, params, model.loss, sampler, steps, lr,
+                         log_every=max(steps // 40, 1))
+    hr = hr_at_10_pointwise(model, state.params, data,
+                            n_users_eval=eval_users)
+    full_bits = 32 * scheme_cfg.dim * (
+        scheme_cfg.n_users + scheme_cfg.n_items) * (
+        2 if model_name == "neumf" else 1)
+    bits = make_backbone(scheme_cfg).serving_size_bits()
+    return RunResult(scheme_cfg.embed_kind, hr, bits,
+                     100.0 * bits / full_bits, losses, time.time() - t0)
+
+
+def run_sasrec(scheme_cfg: BackboneConfig, data: InteractionData,
+               steps: int = 400, lr: float = 1e-3,
+               eval_users: int = 500) -> RunResult:
+    """Task 2 (sequential): SASRec next-item prediction."""
+    t0 = time.time()
+    model = SASRec(scheme_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sampler = iter(SequenceSampler(data, batch=128,
+                                   maxlen=scheme_cfg.maxlen))
+    state, losses = _fit(model, params, model.loss, sampler, steps, lr,
+                         log_every=max(steps // 40, 1))
+    hr = hr_at_10_sasrec(model, state.params, data, scheme_cfg.maxlen,
+                         n_users_eval=eval_users)
+    full_bits = 32 * scheme_cfg.dim * (scheme_cfg.n_items + 1)
+    bits = model.serving_size_bits()
+    return RunResult(scheme_cfg.embed_kind, hr, bits,
+                     100.0 * bits / full_bits, losses, time.time() - t0)
+
+
+def run_item2item(scheme_cfg: BackboneConfig, aar: Dict,
+                  steps: int = 400, lr: float = 2e-3) -> RunResult:
+    """Task 3 (item-to-item): GMF-style regressor on relevance scores.
+    Reports RMSE (lower better), scores normalized to [-1, 1]."""
+    t0 = time.time()
+    model = GMF(scheme_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    n = len(aar["train_a"])
+
+    def data_iter():
+        while True:
+            idx = rng.integers(0, n, 1024)
+            yield {"user_ids": aar["train_a"][idx],
+                   "item_ids": aar["train_b"][idx],
+                   "label": aar["train_y"][idx] / 100.0}
+
+    state, losses = _fit(model, params, model.mse_loss, data_iter(),
+                         steps, lr, log_every=max(steps // 40, 1))
+    pred, _ = jax.jit(model.score)(state.params, jnp.asarray(aar["eval_a"]),
+                                   jnp.asarray(aar["eval_b"]))
+    rmse = float(np.sqrt(np.mean(
+        (np.asarray(pred) - aar["eval_y"] / 100.0) ** 2))) * 100.0
+    full_bits = 32 * scheme_cfg.dim * (scheme_cfg.n_users
+                                       + scheme_cfg.n_items)
+    bits = model.serving_size_bits()
+    return RunResult(scheme_cfg.embed_kind, rmse, bits,
+                     100.0 * bits / full_bits, losses, time.time() - t0)
+
+
+# ----------------------------------------------------------------------
+# scheme sweeps (paper Fig. 2 x-axis: model size)
+# ----------------------------------------------------------------------
+
+def scheme_grid(n_users: int, n_items: int, model: str = "gmf",
+                dim: int = 64) -> Dict[str, List[BackboneConfig]]:
+    """Configs per scheme, swept the way the paper sweeps sizes:
+    FE -> dimension, SQ -> bits, LRF -> rank, DPQ/MGQE -> subspaces D."""
+    base = dict(model=model, n_users=n_users, n_items=n_items, dim=dim)
+    grid = {
+        "full": [BackboneConfig(embed_kind="full", **dict(base, dim=d))
+                 for d in (64, 16, 8, 4)],
+        "sq": [BackboneConfig(embed_kind="sq", sq_bits=b, **base)
+               for b in (8, 4)],
+        "lrf": [BackboneConfig(embed_kind="lrf", lrf_rank=r, **base)
+                for r in (16, 8, 4)],
+        "dpq": [BackboneConfig(embed_kind="dpq", num_subspaces=D, **base)
+                for D in (16, 8, 4)],
+        "mgqe": [BackboneConfig(embed_kind="mgqe", num_subspaces=D, **base)
+                 for D in (16, 8, 4)],
+    }
+    return grid

@@ -1,0 +1,88 @@
+"""Paper Fig. 2: recommendation quality vs serving model size, per
+compression scheme, on the three tasks.
+
+Quick mode (default, CPU container): GMF + SASRec on a reduced ML-like
+set and GMF-regression on a reduced AAR-like set, fewer steps, one seed.
+Full mode approaches the paper protocol (6040x3416, 10 seeds).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.data.synthetic import aar_like, movielens_like
+from benchmarks.common import (run_item2item, run_pointwise, run_sasrec,
+                               scheme_grid)
+
+
+def main(quick: bool = True, out_json: str = ""):
+    if quick:
+        n_users, n_items, steps, eval_users = 1200, 800, 250, 300
+        aar_apps, aar_pairs, sas_steps = 2000, 60_000, 120
+        sas_schemes = ("full", "dpq", "mgqe")
+        i2i_schemes = ("full", "sq", "lrf", "dpq", "mgqe")
+    else:
+        n_users, n_items, steps, eval_users = 6040, 3416, 2000, 2000
+        aar_apps, aar_pairs, sas_steps = 20_000, 400_000, 1500
+        sas_schemes = i2i_schemes = ("full", "sq", "lrf", "dpq", "mgqe")
+
+    print("== Fig.2 reproduction: quality vs serving size ==")
+    print(f"(quick={quick}: ML-like {n_users}x{n_items}, "
+          f"AAR-like {aar_apps} apps)")
+    ml = movielens_like(n_users=n_users, n_items=n_items, seed=0)
+    aar = aar_like(n_apps=aar_apps, n_pairs=aar_pairs, seed=1)
+    rows = []
+
+    # ---- Task 1: personalized (GMF) --------------------------------
+    print("\n-- Task 1: GMF on ML-like (HR@10 up, size% down) --")
+    grid = scheme_grid(n_users, n_items, "gmf")
+    for scheme, cfgs in grid.items():
+        for cfg in cfgs[:2] if quick else cfgs:
+            r = run_pointwise("gmf", cfg, ml, steps=steps,
+                              eval_users=eval_users)
+            tag = {"full": f"d={cfg.dim}", "sq": f"b={cfg.sq_bits}",
+                   "lrf": f"r={cfg.lrf_rank}"}.get(
+                scheme, f"D={cfg.num_subspaces}")
+            print(f"  {scheme:5s} {tag:6s}: HR@10={r.metric:.3f} "
+                  f"size={r.size_pct:5.1f}%  ({r.seconds:.0f}s)")
+            rows.append({"task": "gmf-ml", "scheme": scheme, "tag": tag,
+                         "metric": r.metric, "size_pct": r.size_pct})
+
+    # ---- Task 2: sequential (SASRec) --------------------------------
+    print("\n-- Task 2: SASRec on ML-like (HR@10) --")
+    for scheme, cfgs in scheme_grid(n_users, n_items, "sasrec").items():
+        if scheme not in sas_schemes:
+            continue
+        cfg = cfgs[1] if len(cfgs) > 1 else cfgs[0]
+        r = run_sasrec(cfg, ml, steps=sas_steps, eval_users=eval_users)
+        print(f"  {scheme:5s}: HR@10={r.metric:.3f} "
+              f"size={r.size_pct:5.1f}%  ({r.seconds:.0f}s)")
+        rows.append({"task": "sasrec-ml", "scheme": scheme,
+                     "metric": r.metric, "size_pct": r.size_pct})
+
+    # ---- Task 3: item-to-item (AAR-like, RMSE) -----------------------
+    print("\n-- Task 3: GMF-regressor on AAR-like (RMSE down) --")
+    for scheme, cfgs in scheme_grid(aar["n_apps"], aar["n_apps"],
+                                    "gmf").items():
+        if scheme not in i2i_schemes:
+            continue
+        cfg = cfgs[1] if len(cfgs) > 1 else cfgs[0]
+        r = run_item2item(cfg, aar, steps=steps)
+        print(f"  {scheme:5s}: RMSE={r.metric:.2f} "
+              f"size={r.size_pct:5.1f}%  ({r.seconds:.0f}s)")
+        rows.append({"task": "gmf-aar", "scheme": scheme,
+                     "metric": r.metric, "size_pct": r.size_pct})
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"\nwrote {len(rows)} rows -> {out_json}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default="")
+    a = ap.parse_args()
+    main(quick=not a.full, out_json=a.json)

@@ -1,0 +1,49 @@
+"""Render the dry-run JSON rows into the §Roofline markdown table."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+
+def fmt_row(r: Dict) -> str:
+    uf = r.get("useful_frac")
+    rf = r.get("roofline_frac")
+    return ("| {arch} | {shape} | {mesh} | {c:.2f} | {m:.2f} | {k:.2f} | "
+            "{dom} | {uf} | {rf} | {peak:.1f} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        c=r["compute_ms"], m=r["memory_ms"], k=r["collective_ms"],
+        dom=r["dominant"],
+        uf="-" if uf is None else f"{uf:.3f}",
+        rf="-" if rf is None else f"{rf:.3f}",
+        peak=r["peak_gb"])
+
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| bound | useful | roofline | peak GB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def render(paths: List[str]) -> str:
+    rows = []
+    for p in paths:
+        if os.path.exists(p):
+            with open(p) as f:
+                rows.extend(json.load(f))
+    lines = [HEADER] + [fmt_row(r) for r in rows]
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*",
+                    default=["results/dryrun_single.json",
+                             "results/dryrun_multi.json"])
+    a = ap.parse_args()
+    print(render(a.paths))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

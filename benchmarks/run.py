@@ -1,0 +1,49 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs every paper-table/figure benchmark in quick mode:
+  1. §3.5 serving-size table          (analytic)
+  2. Fig. 2 quality-vs-size curves    (trains small backbones)
+  3. Fig. 3 convergence MGQE vs FE    (trains small backbones)
+  4. kernel micro-bench               (CPU reference paths)
+Pass --full for the paper-scale protocol (hours on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-training", action="store_true",
+                    help="only the analytic + kernel benches")
+    a = ap.parse_args(argv)
+    t0 = time.time()
+    os.makedirs("results", exist_ok=True)
+
+    from benchmarks import size_table
+    size_table.main()
+    print()
+
+    from benchmarks import kernel_bench
+    kernel_bench.main()
+    print()
+
+    if not a.skip_training:
+        from benchmarks import compression_curves
+        compression_curves.main(quick=not a.full,
+                                out_json="results/fig2.json")
+        print()
+
+        from benchmarks import convergence
+        convergence.main(quick=not a.full, out_json="results/fig3.json")
+
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""Paper §3.5 serving-size table (analytic, exact bit accounting)."""
+from __future__ import annotations
+
+from repro.core.partition import frequency_boundaries
+from repro.core.serving import format_size_table, size_table
+from repro.core.types import EmbeddingConfig
+
+
+def build_configs(n: int = 3416, d: int = 64):
+    """The ML-1M item-table setting with the paper's §3.4 defaults."""
+    bounds = frequency_boundaries(n, (0.1,))
+    return [
+        EmbeddingConfig(vocab_size=n, dim=d),                     # FE 100%
+        EmbeddingConfig(vocab_size=n, dim=d, kind="lrf", rank=16),
+        EmbeddingConfig(vocab_size=n, dim=d, kind="sq", sq_bits=8),
+        EmbeddingConfig(vocab_size=n, dim=d, kind="hash",
+                        hash_buckets=n // 5),
+        EmbeddingConfig(vocab_size=n, dim=d, kind="dpq",
+                        num_subspaces=8, num_centroids=256),
+        EmbeddingConfig(vocab_size=n, dim=d, kind="mgqe",
+                        num_subspaces=8, num_centroids=256,
+                        tier_boundaries=bounds,
+                        tier_num_centroids=(256, 64)),
+        EmbeddingConfig(vocab_size=n, dim=d, kind="mgqe",
+                        mgqe_variant="private_k", num_subspaces=8,
+                        num_centroids=256, tier_boundaries=bounds,
+                        tier_num_centroids=(256, 64)),
+    ]
+
+
+def main(vocabs=(3416, 100_000, 10_000_000)):
+    print("== Serving-size accounting (paper §3.5; bits at serving time) ==")
+    for n in vocabs:
+        print(f"\n-- vocab n={n:,}, d=64 --")
+        print(format_size_table(size_table(build_configs(n))))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,55 @@
+"""MGQE on an LM token embedding: quantized serving path end to end.
+
+Loads the gemma3-4b *smoke* config (CPU-sized; the full config is
+exercised by the 512-device dry-run), exports the MGQE artifact for the
+token embedding, and decodes with the full table discarded.
+
+    PYTHONPATH=src python examples/lm_mgqe_serving.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.core import Embedding
+from repro.models import lm
+
+
+def main():
+    _, cfg = get_arch("gemma3-4b", smoke=True)
+    print(f"model: {cfg.name} ({cfg.num_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab_size}, embedding={cfg.embedding.kind})")
+    params = lm.model_init(jax.random.PRNGKey(0), cfg)
+
+    emb = Embedding(cfg.embedding)
+    artifact = emb.export(params["embed"])
+    full_bits = cfg.vocab_size * cfg.d_model * 32
+    print(f"embedding artifact: {emb.serving_size_bits()/8/1e3:.1f} KB "
+          f"({100*emb.serving_size_bits()/full_bits:.1f}% of the full "
+          f"table) — codes {artifact['codes'].shape} "
+          f"{artifact['codes'].dtype}, centroids "
+          f"{artifact['centroids'].shape}")
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                          jnp.int32)
+    cache, logits = jax.jit(
+        lambda p, a, t: lm.prefill(p, t, cfg, max_seq=32,
+                                   embed_artifact=a))(params, artifact,
+                                                      prompts)
+    decode = jax.jit(
+        lambda p, a, c, t: lm.decode_step(p, c, t, cfg, embed_artifact=a))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    toks = [tok]
+    for _ in range(12):
+        cache, logits = decode(params, artifact, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks.append(tok)
+    out = np.asarray(jnp.stack(toks, 1))
+    print(f"decoded (greedy, quantized embeddings): {out[0]}")
+    assert np.isfinite(np.asarray(logits)).all()
+    print("serving path OK — full table never touched after export")
+
+
+if __name__ == "__main__":
+    main()

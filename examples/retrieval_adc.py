@@ -1,0 +1,69 @@
+"""Beyond-paper serving: ADC retrieval over a PQ-coded corpus.
+
+Trains a small two-tower retrieval model with in-batch sampled softmax,
+PQ-codes the *item-tower outputs* offline, and scores a user against
+the whole corpus via LUT summation (pq_score kernel on TPU) — reading
+N*D code bytes instead of N*d*4 vector bytes.
+
+    PYTHONPATH=src python examples/retrieval_adc.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.models.recsys.two_tower import TwoTower
+from repro.train import optimizer as opt_lib
+from repro.train.optimizer import TrainState
+
+
+def main():
+    _, cfg = get_arch("two-tower-retrieval", smoke=True)
+    model = TwoTower(cfg)
+    ocfg = opt_lib.OptimizerConfig(kind="adam", lr=1e-3)
+    state = TrainState.create(ocfg, model.init(jax.random.PRNGKey(0)))
+    step = jax.jit(opt_lib.make_step_fn(ocfg, model.loss))
+
+    rng = np.random.default_rng(0)
+    logq = float(np.log(1.0 / cfg.n_items))
+    print("training two-tower retrieval (in-batch sampled softmax)...")
+    for i in range(150):
+        # planted structure: user u prefers items congruent mod 1000
+        u = rng.integers(0, cfg.n_users, 256)
+        it = (u + rng.integers(0, 5, 256) * 1000) % cfg.n_items
+        batch = {"user_ids": jnp.asarray(u), "item_ids": jnp.asarray(it),
+                 "item_logq": jnp.full((256,), logq, jnp.float32)}
+        state, metrics = step(state, batch)
+        if (i + 1) % 50 == 0:
+            print(f"  step {i+1}: loss={float(metrics['loss']):.3f}")
+
+    n_corpus = 20_000
+    item_ids = jnp.arange(n_corpus, dtype=jnp.int32)
+    t0 = time.time()
+    corpus = model.build_adc_corpus(jax.random.PRNGKey(1), state.params,
+                                    item_ids, num_subspaces=16,
+                                    num_centroids=256)
+    d_out = cfg.tower_mlp[-1]
+    n_sub = corpus["codes"].shape[1]
+    print(f"corpus PQ-coded in {time.time()-t0:.1f}s: "
+          f"{corpus['codes'].nbytes/1e3:.0f} KB codes vs "
+          f"{n_corpus*d_out*4/1e3:.0f} KB dense vectors "
+          f"({d_out*4/n_sub:.0f}x stream cut)")
+
+    user = jnp.asarray([123], jnp.int32)
+    s_adc = np.asarray(model.retrieval_scores_adc(state.params, corpus,
+                                                  user))
+    vecs = model.encode_items(state.params, item_ids)
+    s_exact = np.asarray(model.retrieval_scores(state.params, user, vecs))
+
+    k = 50
+    top_adc = set(np.argsort(-s_adc)[:k].tolist())
+    top_exact = set(np.argsort(-s_exact)[:k].tolist())
+    print(f"score corr = {np.corrcoef(s_adc, s_exact)[0, 1]:.4f}; "
+          f"recall@{k} vs exact = {len(top_adc & top_exact)/k:.2f}")
+
+
+if __name__ == "__main__":
+    main()

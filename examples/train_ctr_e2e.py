@@ -1,0 +1,79 @@
+"""End-to-end CTR training driver with the full production substrate:
+MGQE-compressed embedding tables, Adagrad, checkpointing + auto-resume,
+failure injection, straggler monitoring, and serving-artifact export.
+
+    PYTHONPATH=src python examples/train_ctr_e2e.py
+    PYTHONPATH=src python examples/train_ctr_e2e.py --fail-at 120
+    # relaunch after the injected crash: resumes from the checkpoint
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.data.synthetic import CTRStream
+from repro.models.recsys.autoint import AutoInt
+from repro.train import optimizer as opt_lib
+from repro.train.loop import LoopConfig, fit
+from repro.train.optimizer import TrainState
+from repro.train.resilience import FailureInjector, SimulatedFailure
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--fail-at", type=int, default=0)
+    ap.add_argument("--ckpt-dir",
+                    default=os.path.join(tempfile.gettempdir(),
+                                         "repro_ctr_ckpt"))
+    args = ap.parse_args()
+
+    _, cfg = get_arch("autoint", smoke=True)
+    model = AutoInt(cfg)
+    ocfg = opt_lib.OptimizerConfig(kind="adagrad", lr=2e-2)
+    state = TrainState.create(ocfg, model.init(jax.random.PRNGKey(0)))
+    step_fn = opt_lib.make_step_fn(ocfg, model.loss)
+
+    stream = CTRStream(cfg.field_vocab_sizes, batch=512, seed=0)
+
+    def data():
+        for b in stream:
+            yield {"sparse_ids": jnp.asarray(b["sparse_ids"]),
+                   "label": jnp.asarray(b["label"])}
+
+    lcfg = LoopConfig(
+        total_steps=args.steps, log_every=25,
+        ckpt_every=50, ckpt_dir=args.ckpt_dir,
+        metrics_hook=lambda s, m: print(
+            f"step {s}: loss={m['loss']:.4f} bce={m['bce']:.4f}"))
+    inj = (FailureInjector(fail_at_steps=[args.fail_at])
+           if args.fail_at else None)
+
+    try:
+        state, hist = fit(state, step_fn, data(), lcfg, injector=inj)
+    except SimulatedFailure as e:
+        print(f"\n!! {e} — relaunch this script to auto-resume from "
+              f"{args.ckpt_dir}")
+        return 1
+
+    # serving export: every big field table becomes codes + centroids
+    artifacts = model.fields.export(state.params["fields"])
+    full = model.fields.full_size_bits()
+    quant = model.fields.serving_size_bits()
+    print(f"\ntrained {args.steps} steps; exported serving artifacts: "
+          f"{quant/8/1e6:.2f} MB vs {full/8/1e6:.2f} MB full "
+          f"({100*quant/full:.1f}%)")
+    # sanity: the artifact serves identically to the training forward
+    batch = next(data())
+    s_train, _ = model.apply(state.params, batch)
+    s_serve = model.serve(state.params, artifacts, batch)
+    err = float(jnp.max(jnp.abs(s_train - s_serve)))
+    print(f"serve-vs-train max|Δlogit| = {err:.2e} (Fig.1 equivalence)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,12 @@
+"""Paper contribution: DPQ + MGQE embedding compression (Kang et al.,
+WWW'20 Companion), plus the baselines it is evaluated against.
+
+Public surface:
+    EmbeddingConfig   — declarative table description
+    Embedding         — init/apply/export/serve
+    make_embedding    — factory
+"""
+from repro.core.api import Embedding, make_embedding
+from repro.core.types import EmbeddingConfig
+
+__all__ = ["Embedding", "EmbeddingConfig", "make_embedding"]

@@ -1,0 +1,86 @@
+"""ADC retrieval over a PQ-coded corpus (beyond-paper serving path).
+
+The paper stops at compressing the *embedding table*.  For the
+retrieval-scoring cell (1 query x 1M candidates) the same PQ machinery
+compresses the *candidate tower outputs*: fit per-subspace k-means over
+the corpus vectors once offline, store only codes, and score queries by
+LUT summation — ``score(i) = sum_d <q_d, c_codes[i,d]^(d)>`` — which is
+exact for the dot product up to quantization error and never
+reconstructs a candidate vector.  (Jegou et al.'s classic PQ-ADC,
+applied to the paper's quantized-embedding serving story.)
+
+The hot loop is the ``pq_score`` Pallas kernel; this module owns the
+offline corpus-coding step (Lloyd's k-means per subspace, pure JAX).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dpq_assign.ref import dpq_assign_ref
+from repro.kernels.pq_score import score_candidates
+
+
+def fit_pq(key: jax.Array, vectors: jax.Array, num_subspaces: int,
+           num_centroids: int, iters: int = 10) -> jax.Array:
+    """Per-subspace k-means over corpus vectors.
+
+    vectors (N, d) -> centroids (D, K, S), S = d / D.
+    """
+    n, d = vectors.shape
+    assert d % num_subspaces == 0, (d, num_subspaces)
+    s = d // num_subspaces
+    x = vectors.reshape(n, num_subspaces, s).transpose(1, 0, 2)  # (D, N, S)
+
+    # init: random rows per subspace
+    idx = jax.random.randint(key, (num_subspaces, num_centroids), 0, n)
+    cent = jnp.take_along_axis(x, idx[..., None], axis=1)        # (D, K, S)
+
+    def step(cent, _):
+        # assign: nearest centroid per subspace
+        dots = jnp.einsum("dns,dks->dnk", x, cent)
+        c_sq = jnp.sum(jnp.square(cent), axis=-1)                # (D, K)
+        codes = jnp.argmin(c_sq[:, None, :] - 2 * dots, axis=-1)  # (D, N)
+        onehot = jax.nn.one_hot(codes, cent.shape[1], dtype=x.dtype)
+        counts = jnp.sum(onehot, axis=1)                         # (D, K)
+        sums = jnp.einsum("dnk,dns->dks", onehot, x)
+        new = jnp.where(counts[..., None] > 0,
+                        sums / jnp.maximum(counts[..., None], 1.0), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    return cent
+
+
+def encode_corpus(vectors: jax.Array, centroids: jax.Array) -> jax.Array:
+    """vectors (N, d) -> codes (N, D) int32."""
+    n, d = vectors.shape
+    n_sub, _, s = centroids.shape
+    e_sub = vectors.reshape(n, n_sub, s)
+    return dpq_assign_ref(e_sub, centroids)
+
+
+def build_corpus_artifact(key: jax.Array, vectors: jax.Array,
+                          num_subspaces: int = 8, num_centroids: int = 256,
+                          iters: int = 10) -> Dict:
+    """Offline step: corpus vectors -> {codes, centroids} artifact."""
+    cent = fit_pq(key, vectors, num_subspaces, num_centroids, iters)
+    codes = encode_corpus(vectors, cent)
+    dtype = jnp.uint8 if num_centroids <= 256 else jnp.int32
+    return {"codes": codes.astype(dtype), "centroids": cent}
+
+
+def adc_scores(artifact: Dict, query: jax.Array) -> jax.Array:
+    """query (d,) -> scores (N,) over the coded corpus."""
+    return score_candidates(query, artifact["centroids"],
+                            artifact["codes"].astype(jnp.int32))
+
+
+def reconstruction_mse(artifact: Dict, vectors: jax.Array) -> jax.Array:
+    """Mean squared quantization error of the coded corpus."""
+    from repro.kernels.mgqe_decode.ref import mgqe_decode_ref
+    rec = mgqe_decode_ref(artifact["codes"].astype(jnp.int32),
+                          artifact["centroids"])
+    return jnp.mean(jnp.square(rec - vectors))

@@ -1,0 +1,88 @@
+"""Compression baselines the paper compares against (§3.4).
+
+* Full Embedding (FE)       — the conventional (n, d) table.
+* Low-rank Factorization    — (n, r) @ (r, d).
+* Scalar Quantization (SQ)  — post-training per-dim uniform quantization.
+* Hashing trick             — ids hashed into a smaller table (Weinberger
+  et al. 2009; cited as [15] in the paper's intro).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import EmbeddingConfig
+
+_ZERO = jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------- full
+def full_init(key, cfg: EmbeddingConfig, dtype=jnp.float32) -> dict:
+    scale = cfg.dim ** -0.5
+    return {"emb": jax.random.normal(key, (cfg.vocab_size, cfg.dim),
+                                     dtype=dtype) * scale}
+
+
+def full_lookup(params, ids, cfg) -> Tuple[jax.Array, jax.Array]:
+    from repro.sharding.gather import row_gather
+    return row_gather(params["emb"], ids,
+                      sharded=cfg.sharded_rows), _ZERO
+
+
+# ----------------------------------------------------------------- lrf
+def lrf_init(key, cfg: EmbeddingConfig, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "u": jax.random.normal(k1, (cfg.vocab_size, cfg.rank), dtype=dtype)
+        * (cfg.rank ** -0.5),
+        "v": jax.random.normal(k2, (cfg.rank, cfg.dim), dtype=dtype)
+        * (cfg.dim ** -0.5),
+    }
+
+
+def lrf_lookup(params, ids, cfg) -> Tuple[jax.Array, jax.Array]:
+    rows = jnp.take(params["u"], ids, axis=0)
+    return rows @ params["v"], _ZERO
+
+
+# ------------------------------------------------------------------ sq
+# SQ trains exactly like FE; quantization happens at export time.
+sq_init = full_init
+sq_lookup = full_lookup
+
+
+def sq_export(params, cfg: EmbeddingConfig) -> dict:
+    emb = params["emb"].astype(jnp.float32)
+    lo = jnp.min(emb, axis=0)                      # (d,)
+    hi = jnp.max(emb, axis=0)
+    buckets = (1 << cfg.sq_bits) - 1
+    scale = jnp.where(hi > lo, (hi - lo) / buckets, 1.0)
+    q = jnp.round((emb - lo) / scale).astype(
+        jnp.uint8 if cfg.sq_bits <= 8 else jnp.int32)
+    return {"q": q, "lo": lo, "scale": scale}
+
+
+def sq_serving_lookup(artifact, ids, cfg) -> jax.Array:
+    rows = jnp.take(artifact["q"], ids, axis=0).astype(jnp.float32)
+    return rows * artifact["scale"] + artifact["lo"]
+
+
+# ---------------------------------------------------------------- hash
+def hash_init(key, cfg: EmbeddingConfig, dtype=jnp.float32) -> dict:
+    scale = cfg.dim ** -0.5
+    return {"emb": jax.random.normal(key, (cfg.hash_buckets, cfg.dim),
+                                     dtype=dtype) * scale}
+
+
+def _hash_ids(ids, buckets: int):
+    # Knuth multiplicative hash keeps head items from colliding with the
+    # identity layout a plain modulo would give on frequency-sorted ids.
+    h = (ids.astype(jnp.uint32) * jnp.uint32(2654435761))
+    return (h % jnp.uint32(buckets)).astype(jnp.int32)
+
+
+def hash_lookup(params, ids, cfg) -> Tuple[jax.Array, jax.Array]:
+    return jnp.take(params["emb"], _hash_ids(ids, cfg.hash_buckets),
+                    axis=0), _ZERO

@@ -1,0 +1,181 @@
+"""Differentiable Product Quantization (DPQ) — VQ variant (paper §1.1).
+
+Training keeps a full embedding table ``emb`` of shape (n, d).  Each row
+is viewed as D subvectors of dim S = d/D.  Per subspace there are K
+learnable centroids.  The forward pass snaps each subvector to its
+nearest centroid (argmin over L2 distance), with a straight-through
+estimator so gradients flow to the full table, and VQ-VAE-style
+auxiliary losses so gradients flow to the centroids:
+
+    out      = e + sg(c - e)                      (STE)
+    aux_loss = mean ||sg(e) - c||^2  +  beta * mean ||e - sg(c)||^2
+
+At serving time the full table is discarded; only the integer codes and
+the centroid tables remain (see serving.py).
+
+MGQE (mgqe.py) reuses every function here via the ``k_limit`` argument:
+items restricted to the first K_i centroids simply mask distance slots
+k >= K_i to +inf before the argmin.  This masked single pass is the
+TPU-native replacement for the paper's dynamic group-split lookup
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_centroids(key: jax.Array, num_subspaces: int, num_centroids: int,
+                   subspace_dim: int, scale: float = 1.0,
+                   dtype=jnp.float32) -> jax.Array:
+    """Centroid tables, shape (D, K, S)."""
+    return (jax.random.normal(key, (num_subspaces, num_centroids, subspace_dim),
+                              dtype=dtype) * scale)
+
+
+def init_full_table(key: jax.Array, vocab_size: int, dim: int,
+                    scale: Optional[float] = None, dtype=jnp.float32) -> jax.Array:
+    if scale is None:
+        scale = dim ** -0.5
+    return jax.random.normal(key, (vocab_size, dim), dtype=dtype) * scale
+
+
+# ----------------------------------------------------------------------
+# Quantization primitives (shape-polymorphic over leading batch dims).
+# ----------------------------------------------------------------------
+
+def subspace_distances(e_sub: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Squared-L2 distances from subvectors to centroids, MXU-friendly.
+
+    e_sub:     (..., D, S)
+    centroids: (D, K, S)
+    returns    (..., D, K)
+
+    ||e - c||^2 = ||e||^2 - 2 e.c + ||c||^2; the ||e||^2 term is
+    constant w.r.t. the argmin so it is dropped — what remains is a
+    batched matmul plus a bias, exactly what the MXU wants.
+    """
+    dots = jnp.einsum("...ds,dks->...dk", e_sub, centroids)
+    c_sq = jnp.sum(jnp.square(centroids), axis=-1)  # (D, K)
+    return c_sq - 2.0 * dots
+
+
+def assign_codes(e_sub: jax.Array, centroids: jax.Array,
+                 k_limit: Optional[jax.Array] = None) -> jax.Array:
+    """Nearest-centroid codes, shape (..., D), int32.
+
+    k_limit: optional per-item centroid budget (broadcastable to the
+    leading dims of e_sub).  Slots k >= k_limit are masked to +inf —
+    the MGQE shared-variable-K rule ("use only the first K_i
+    centroids").
+    """
+    dist = subspace_distances(e_sub, centroids)
+    if k_limit is not None:
+        k = dist.shape[-1]
+        slot = jnp.arange(k, dtype=jnp.int32)
+        # (..., 1, K) mask against (...,) limits
+        mask = slot[None, :] >= k_limit[..., None, None]
+        dist = jnp.where(mask, jnp.inf, dist)
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+def decode_codes(codes: jax.Array, centroids: jax.Array) -> jax.Array:
+    """codes (..., D) -> concatenated centroid vectors (..., D, S)."""
+    # take_along_axis over the K axis of (D, K, S)
+    d = centroids.shape[0]
+    gathered = jnp.take_along_axis(
+        centroids[None], codes[..., None, None].reshape((-1, d, 1, 1)),
+        axis=2)                                   # (B*, D, 1, S)
+    out = gathered[:, :, 0, :]
+    return out.reshape(codes.shape + (centroids.shape[-1],))
+
+
+def quantize(e: jax.Array, centroids: jax.Array,
+             k_limit: Optional[jax.Array] = None,
+             beta: float = 0.25) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full DPQ forward for pre-gathered rows.
+
+    e: (..., d) full-table rows;  centroids: (D, K, S) with D*S == d.
+    Returns (quantized (..., d), codes (..., D), aux_loss scalar).
+    """
+    num_sub, _, sub_dim = centroids.shape
+    lead = e.shape[:-1]
+    e_sub = e.reshape(lead + (num_sub, sub_dim))
+    codes = assign_codes(e_sub, centroids, k_limit)
+    c_sel = decode_codes(codes, centroids)        # (..., D, S)
+    # Straight-through: forward value is the centroid, gradient hits e.
+    q_sub = e_sub + jax.lax.stop_gradient(c_sel - e_sub)
+    # Codebook + commitment losses (gradients: codebook term -> centroids
+    # via the differentiable gather in c_sel; commitment -> e).
+    codebook = jnp.mean(jnp.sum(
+        jnp.square(jax.lax.stop_gradient(e_sub) - c_sel), axis=-1))
+    commit = jnp.mean(jnp.sum(
+        jnp.square(e_sub - jax.lax.stop_gradient(c_sel)), axis=-1))
+    aux = codebook + beta * commit
+    return q_sub.reshape(e.shape), codes, aux
+
+
+# ----------------------------------------------------------------------
+# Table-level API used by the model layers.
+# ----------------------------------------------------------------------
+
+def init(key: jax.Array, vocab_size: int, dim: int, num_subspaces: int,
+         num_centroids: int, dtype=jnp.float32) -> dict:
+    k_emb, k_cent = jax.random.split(key)
+    emb = init_full_table(k_emb, vocab_size, dim, dtype=dtype)
+    # Centroids init'd at the scale of the embeddings so early argmins
+    # spread over the codebook rather than collapsing to one centroid.
+    cent = init_centroids(k_cent, num_subspaces, num_centroids,
+                          dim // num_subspaces, scale=dim ** -0.5, dtype=dtype)
+    return {"emb": emb, "centroids": cent}
+
+
+def lookup_train(params: dict, ids: jax.Array,
+                 k_limit: Optional[jax.Array] = None,
+                 beta: float = 0.25,
+                 sharded_rows: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Training-path lookup: gather full rows, quantize, STE.
+
+    ids: (...,) int; returns (emb (..., d), aux_loss scalar).
+    """
+    from repro.sharding.gather import row_gather
+    e = row_gather(params["emb"], ids, sharded=sharded_rows)
+    q, _, aux = quantize(e, params["centroids"], k_limit=k_limit, beta=beta)
+    return q, aux
+
+
+def export_codes(params: dict, k_limit_per_row: Optional[jax.Array] = None,
+                 batch: int = 65536) -> jax.Array:
+    """Materialize serving codes for the whole vocab, shape (n, D) int32.
+
+    Batched over rows so exporting a 10M-row table doesn't allocate a
+    (n, D, K) distance tensor at once.
+    """
+    emb = params["emb"]
+    centroids = params["centroids"]
+    n = emb.shape[0]
+    num_sub, _, sub_dim = centroids.shape
+
+    @jax.jit
+    def one(rows, lim):
+        e_sub = rows.reshape(rows.shape[0], num_sub, sub_dim)
+        return assign_codes(e_sub, centroids, lim)
+
+    outs = []
+    for start in range(0, n, batch):
+        rows = emb[start:start + batch]
+        lim = None
+        if k_limit_per_row is not None:
+            lim = k_limit_per_row[start:start + batch]
+        outs.append(one(rows, lim))
+    return jnp.concatenate(outs, axis=0)
+
+
+def serving_lookup(codes_table: jax.Array, centroids: jax.Array,
+                   ids: jax.Array) -> jax.Array:
+    """Serving-path lookup: codes + centroids only (full table gone)."""
+    codes = jnp.take(codes_table, ids, axis=0)          # (..., D)
+    c = decode_codes(codes.astype(jnp.int32), centroids)  # (..., D, S)
+    return c.reshape(ids.shape + (centroids.shape[0] * centroids.shape[-1],))

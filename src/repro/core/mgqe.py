@@ -1,0 +1,146 @@
+"""Multi-Granular Quantized Embeddings (paper §2).
+
+Three variants, all built on dpq.py:
+
+* ``shared_k``  (paper default): one codebook (D, K); items in tier i may
+  only use the first K_i centroids.  Implemented as a *masked single
+  pass* — per-item ``k_limit = K_tier(id)`` fed to ``dpq.assign_codes``
+  — instead of the paper's dynamic group-split loop (Algorithm 1),
+  which would force dynamic shapes on TPU.  See DESIGN.md §3.
+
+* ``private_k``: tier i owns a private codebook with K_i centroids
+  (allocated at K_max and masked).  Static python loop over tiers.
+
+* ``private_d``: tier i owns a private codebook with D_i subspaces of
+  dim d/D_i (K fixed).  Static python loop over tiers; outputs blended
+  with tier masks.
+
+Tier membership is pure arithmetic over frequency-sorted ids
+(partition.tier_of_ids) — no membership table.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dpq
+from repro.core.partition import tier_of_ids
+from repro.core.types import EmbeddingConfig
+
+
+def _tier_k_limits(cfg: EmbeddingConfig, ids: jax.Array) -> jax.Array:
+    """Per-item centroid budget K_{tier(id)} (int32, same shape as ids)."""
+    tiers = tier_of_ids(ids, cfg.tier_boundaries)
+    ks = jnp.asarray(cfg.tier_num_centroids, dtype=jnp.int32)
+    return jnp.take(ks, tiers, axis=0)
+
+
+def k_limit_for_all_rows(cfg: EmbeddingConfig) -> jax.Array:
+    """(n,) per-row K budget — used at code-export time."""
+    return _tier_k_limits(cfg, jnp.arange(cfg.vocab_size, dtype=jnp.int32))
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def init(key: jax.Array, cfg: EmbeddingConfig, dtype=jnp.float32) -> dict:
+    if cfg.mgqe_variant == "shared_k":
+        return dpq.init(key, cfg.vocab_size, cfg.dim, cfg.num_subspaces,
+                        cfg.num_centroids, dtype=dtype)
+    k_emb, k_cent = jax.random.split(key)
+    params = {"emb": dpq.init_full_table(k_emb, cfg.vocab_size, cfg.dim,
+                                         dtype=dtype)}
+    keys = jax.random.split(k_cent, cfg.num_tiers)
+    if cfg.mgqe_variant == "private_k":
+        # allocate every tier codebook at its own K_i (static shapes per tier)
+        params["centroids"] = [
+            dpq.init_centroids(keys[i], cfg.num_subspaces,
+                               cfg.tier_num_centroids[i],
+                               cfg.subspace_dim, scale=cfg.dim ** -0.5,
+                               dtype=dtype)
+            for i in range(cfg.num_tiers)]
+    else:  # private_d
+        params["centroids"] = [
+            dpq.init_centroids(keys[i], cfg.tier_num_subspaces[i],
+                               cfg.num_centroids,
+                               cfg.dim // cfg.tier_num_subspaces[i],
+                               scale=cfg.dim ** -0.5, dtype=dtype)
+            for i in range(cfg.num_tiers)]
+    return params
+
+
+# ----------------------------------------------------------------------
+# training lookup
+# ----------------------------------------------------------------------
+
+def lookup_train(params: dict, ids: jax.Array,
+                 cfg: EmbeddingConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (embeddings (..., d), aux_loss scalar)."""
+    if cfg.mgqe_variant == "shared_k":
+        k_limit = _tier_k_limits(cfg, ids)
+        return dpq.lookup_train(params, ids, k_limit=k_limit, beta=cfg.beta,
+                                sharded_rows=cfg.sharded_rows)
+
+    # private variants: static loop over tiers, blend with masks.
+    e = jnp.take(params["emb"], ids, axis=0)            # (..., d)
+    tiers = tier_of_ids(ids, cfg.tier_boundaries)       # (...,)
+    out = jnp.zeros_like(e)
+    aux = jnp.asarray(0.0, dtype=jnp.float32)
+    for i, cent in enumerate(params["centroids"]):
+        q_i, _, aux_i = dpq.quantize(e, cent, beta=cfg.beta)
+        mask = (tiers == i)
+        out = jnp.where(mask[..., None], q_i, out)
+        # weight tier aux by the fraction of items in the tier so the
+        # total matches the masked-mean of per-item losses.
+        frac = jnp.mean(mask.astype(jnp.float32))
+        aux = aux + aux_i * frac
+    return out, aux
+
+
+# ----------------------------------------------------------------------
+# serving export / lookup
+# ----------------------------------------------------------------------
+
+def export_serving(params: dict, cfg: EmbeddingConfig) -> dict:
+    """Discard the full table; keep codes + centroids (paper Fig. 1)."""
+    if cfg.mgqe_variant == "shared_k":
+        codes = dpq.export_codes(params, k_limit_for_all_rows(cfg))
+        dtype = jnp.uint8 if cfg.num_centroids <= 256 else jnp.int32
+        return {"codes": codes.astype(dtype),
+                "centroids": params["centroids"]}
+    if cfg.mgqe_variant == "private_k":
+        rows = jnp.arange(cfg.vocab_size, dtype=jnp.int32)
+        tiers = tier_of_ids(rows, cfg.tier_boundaries)
+        codes = jnp.zeros((cfg.vocab_size, cfg.num_subspaces), jnp.int32)
+        for i, cent in enumerate(params["centroids"]):
+            c_i = dpq.export_codes({"emb": params["emb"], "centroids": cent})
+            codes = jnp.where((tiers == i)[:, None], c_i, codes)
+        dtype = jnp.uint8 if cfg.num_centroids <= 256 else jnp.int32
+        return {"codes": codes.astype(dtype),
+                "centroids": params["centroids"]}
+    # private_d: ragged D_i per tier — keep per-tier code arrays.
+    out = {"codes": [], "centroids": params["centroids"]}
+    for i, cent in enumerate(params["centroids"]):
+        out["codes"].append(
+            dpq.export_codes({"emb": params["emb"], "centroids": cent})
+            .astype(jnp.uint8 if cfg.num_centroids <= 256 else jnp.int32))
+    return out
+
+
+def serving_lookup(artifact: dict, ids: jax.Array,
+                   cfg: EmbeddingConfig) -> jax.Array:
+    if cfg.mgqe_variant == "shared_k":
+        return dpq.serving_lookup(artifact["codes"], artifact["centroids"], ids)
+    tiers = tier_of_ids(ids, cfg.tier_boundaries)
+    outs = []
+    for i, cent in enumerate(artifact["centroids"]):
+        codes_i = (artifact["codes"][i] if isinstance(artifact["codes"], list)
+                   else artifact["codes"])
+        outs.append(dpq.serving_lookup(codes_i, cent, ids))
+    out = outs[0]
+    for i in range(1, len(outs)):
+        out = jnp.where((tiers == i)[..., None], outs[i], out)
+    return out

@@ -1,0 +1,68 @@
+"""Frequency-based vocabulary partitioning (paper §2.1).
+
+The framework convention: item ids are *frequency-sorted* — id 0 is the
+most frequent item.  ``rank_by_frequency`` produces the remap for raw
+datasets; ``frequency_boundaries`` converts fractional tier splits (the
+paper's "top 10% = head") into id thresholds.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+
+def rank_by_frequency(counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Return (remap, inverse) so that ``new_id = remap[old_id]`` is
+    frequency-descending (ties broken by old id, deterministically).
+
+    ``inverse[new_id] = old_id``.
+    """
+    counts = np.asarray(counts)
+    # stable argsort on -counts keeps tie order deterministic
+    inverse = np.argsort(-counts, kind="stable")
+    remap = np.empty_like(inverse)
+    remap[inverse] = np.arange(len(counts))
+    return remap, inverse
+
+
+def frequency_boundaries(vocab_size: int,
+                         head_fractions: Sequence[float]) -> Tuple[int, ...]:
+    """Convert cumulative head fractions to id thresholds.
+
+    ``head_fractions=(0.1,)`` reproduces the paper's default two-tier
+    split: V1 = top 10% of items, V2 = the rest.  Returned boundaries
+    are strictly ascending and clipped to [1, vocab-1].
+    """
+    bounds = []
+    prev = 0
+    for frac in head_fractions:
+        b = int(round(vocab_size * frac))
+        b = max(prev + 1, min(b, vocab_size - 1))
+        bounds.append(b)
+        prev = b
+    return tuple(bounds)
+
+
+def validate_partition(vocab_size: int, boundaries: Sequence[int]) -> None:
+    """Assert the partition is a disjoint cover of [0, vocab)."""
+    edges = (0,) + tuple(boundaries) + (vocab_size,)
+    for lo, hi in zip(edges, edges[1:]):
+        if hi <= lo:
+            raise ValueError(f"empty/inverted tier [{lo}, {hi})")
+    sizes = [hi - lo for lo, hi in zip(edges, edges[1:])]
+    assert sum(sizes) == vocab_size
+
+
+def tier_of_ids(ids, boundaries: Sequence[int]):
+    """Vectorized tier index: number of boundaries <= id.
+
+    Works on numpy or jax arrays (uses the array's own namespace).
+    Pure arithmetic — no table lookup — because ids are frequency-sorted.
+    """
+    if not boundaries:
+        return ids * 0
+    total = ids * 0
+    for b in boundaries:
+        total = total + (ids >= b).astype(total.dtype if hasattr(total, "dtype") else int)
+    return total

@@ -1,0 +1,54 @@
+"""Serving-side utilities: model-size accounting and artifact packing.
+
+The paper evaluates "model size" as bits needed to store the embedding
+at *serving* time, normalized to Full Embedding = 100% (§3.5).  This
+module produces that table for any set of EmbeddingConfigs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Tuple
+
+import numpy as np
+
+from repro.core.types import EmbeddingConfig
+
+
+def size_row(cfg: EmbeddingConfig, baseline_bits: int) -> Dict:
+    bits = cfg.serving_size_bits()
+    return {
+        "kind": cfg.kind,
+        "variant": cfg.mgqe_variant if cfg.kind == "mgqe" else "",
+        "bits": bits,
+        "mbytes": bits / 8 / 1e6,
+        "pct_of_full": 100.0 * bits / baseline_bits,
+    }
+
+
+def size_table(cfgs: Iterable[EmbeddingConfig]) -> List[Dict]:
+    cfgs = list(cfgs)
+    full_bits = None
+    for c in cfgs:
+        if c.kind == "full":
+            full_bits = c.serving_size_bits()
+            break
+    if full_bits is None:
+        full_bits = EmbeddingConfig(
+            vocab_size=cfgs[0].vocab_size, dim=cfgs[0].dim).serving_size_bits()
+    return [size_row(c, full_bits) for c in cfgs]
+
+
+def pack_codes_uint8(codes: np.ndarray) -> np.ndarray:
+    """Pack int codes (n, D), K<=256, into a uint8 array for storage."""
+    if codes.max(initial=0) > 255:
+        raise ValueError("codes exceed uint8 range; store as int16/int32")
+    return codes.astype(np.uint8)
+
+
+def format_size_table(rows: List[Dict]) -> str:
+    hdr = f"{'scheme':14s} {'bits':>14s} {'MB':>10s} {'% of FE':>8s}"
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        name = r["kind"] + (f"/{r['variant']}" if r["variant"] else "")
+        lines.append(f"{name:14s} {r['bits']:>14d} {r['mbytes']:>10.3f} "
+                     f"{r['pct_of_full']:>8.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,174 @@
+"""Configuration types for the embedding subsystem.
+
+Every embedding scheme in the framework (the paper's DPQ/MGQE and the
+baselines it compares against) is described by a single frozen
+:class:`EmbeddingConfig`.  The config is hashable so it can be closed
+over by ``jax.jit`` without retracing surprises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+# Supported embedding schemes.  "full" is the paper's FE baseline.
+KINDS = ("full", "dpq", "mgqe", "lrf", "sq", "hash")
+
+# MGQE capacity-allocation variants (paper §2.2).
+MGQE_VARIANTS = ("shared_k", "private_k", "private_d")
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingConfig:
+    """Declarative description of one embedding table.
+
+    Attributes mirror the paper's notation: ``num_subspaces`` is D,
+    ``num_centroids`` is K, ``tier_num_centroids`` is K-tilde,
+    ``tier_num_subspaces`` is D-tilde.  ``tier_boundaries`` are item-id
+    thresholds under the convention that ids are frequency-sorted
+    (id 0 = most popular); tier of id x = number of boundaries <= x.
+    """
+
+    vocab_size: int
+    dim: int
+    kind: str = "full"
+
+    # --- DPQ / MGQE ---
+    num_subspaces: int = 8          # D
+    num_centroids: int = 256        # K
+    beta: float = 0.25              # commitment-loss weight (VQ-VAE style)
+    mgqe_variant: str = "shared_k"  # paper's default: shared centroids, variable K
+    tier_boundaries: Tuple[int, ...] = ()       # len m-1, ascending ids
+    tier_num_centroids: Tuple[int, ...] = ()    # len m, non-increasing
+    tier_num_subspaces: Tuple[int, ...] = ()    # len m, non-increasing (private_d)
+
+    # --- low-rank factorization baseline ---
+    rank: int = 16
+
+    # --- scalar quantization baseline ---
+    sq_bits: int = 8
+
+    # --- hashing-trick baseline ---
+    hash_buckets: int = 0
+
+    # parameter dtype for the dense tables ("float32" | "bfloat16")
+    param_dtype: str = "float32"
+
+    # training-path row gathers via the shard_map model-parallel path
+    # (repro.sharding.gather) instead of plain take — §Perf hillclimb
+    sharded_rows: bool = False
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown embedding kind {self.kind!r}")
+        if self.kind in ("dpq", "mgqe"):
+            if self.dim % self.num_subspaces != 0:
+                raise ValueError(
+                    f"dim={self.dim} not divisible by D={self.num_subspaces}")
+        if self.kind == "mgqe":
+            if self.mgqe_variant not in MGQE_VARIANTS:
+                raise ValueError(f"unknown MGQE variant {self.mgqe_variant!r}")
+            m = len(self.tier_boundaries) + 1
+            if self.mgqe_variant in ("shared_k", "private_k"):
+                if len(self.tier_num_centroids) != m:
+                    raise ValueError(
+                        f"tier_num_centroids must have {m} entries, got "
+                        f"{len(self.tier_num_centroids)}")
+                ks = self.tier_num_centroids
+                if any(ks[i] < ks[i + 1] for i in range(len(ks) - 1)):
+                    raise ValueError("tier_num_centroids must be non-increasing")
+                if max(ks) > self.num_centroids:
+                    raise ValueError("tier K_i exceeds num_centroids")
+            if self.mgqe_variant == "private_d":
+                if len(self.tier_num_subspaces) != m:
+                    raise ValueError(
+                        f"tier_num_subspaces must have {m} entries, got "
+                        f"{len(self.tier_num_subspaces)}")
+                for d_i in self.tier_num_subspaces:
+                    if self.dim % d_i != 0:
+                        raise ValueError(
+                            f"dim={self.dim} not divisible by tier D={d_i}")
+            if any(b <= 0 or b >= self.vocab_size for b in self.tier_boundaries):
+                raise ValueError("tier boundaries must lie inside (0, vocab)")
+            if any(self.tier_boundaries[i] >= self.tier_boundaries[i + 1]
+                   for i in range(len(self.tier_boundaries) - 1)):
+                raise ValueError("tier boundaries must be strictly ascending")
+        if self.kind == "hash" and self.hash_buckets <= 0:
+            raise ValueError("hash embedding needs hash_buckets > 0")
+
+    # ------------------------------------------------------------------
+    @property
+    def num_tiers(self) -> int:
+        return len(self.tier_boundaries) + 1
+
+    @property
+    def subspace_dim(self) -> int:
+        return self.dim // self.num_subspaces
+
+    def tier_sizes(self) -> Tuple[int, ...]:
+        """Number of vocabulary rows in each tier."""
+        edges = (0,) + tuple(self.tier_boundaries) + (self.vocab_size,)
+        return tuple(edges[i + 1] - edges[i] for i in range(len(edges) - 1))
+
+    # ------------------------------------------------------------------
+    # Serving-size accounting (bits), following paper §1.1 / §3.5.
+    # ------------------------------------------------------------------
+    def serving_size_bits(self) -> int:
+        n, d = self.vocab_size, self.dim
+        if self.kind == "full":
+            return n * d * 32
+        if self.kind == "lrf":
+            return (n * self.rank + self.rank * d) * 32
+        if self.kind == "sq":
+            # per-dim min/max fp32 + b bits per element
+            return n * d * self.sq_bits + 2 * d * 32
+        if self.kind == "hash":
+            return self.hash_buckets * d * 32
+        if self.kind == "dpq":
+            code_bits = n * self.num_subspaces * _log2ceil(self.num_centroids)
+            centroid_bits = 32 * self.num_centroids * d   # K*D*(d/D)*32
+            return code_bits + centroid_bits
+        if self.kind == "mgqe":
+            sizes = self.tier_sizes()
+            if self.mgqe_variant == "shared_k":
+                code_bits = sum(
+                    sz * self.num_subspaces * _log2ceil(k)
+                    for sz, k in zip(sizes, self.tier_num_centroids))
+                centroid_bits = 32 * self.num_centroids * d
+                return code_bits + centroid_bits
+            if self.mgqe_variant == "private_k":
+                code_bits = sum(
+                    sz * self.num_subspaces * _log2ceil(k)
+                    for sz, k in zip(sizes, self.tier_num_centroids))
+                centroid_bits = 32 * d * sum(self.tier_num_centroids)
+                return code_bits + centroid_bits
+            # private_d: fixed K per tier, D_i subspaces of dim d/D_i
+            code_bits = sum(
+                sz * d_i * _log2ceil(self.num_centroids)
+                for sz, d_i in zip(sizes, self.tier_num_subspaces))
+            centroid_bits = 32 * d * self.num_centroids * self.num_tiers
+            return code_bits + centroid_bits
+        raise AssertionError(self.kind)
+
+    def training_param_count(self) -> int:
+        """Dense parameters alive during training (full table included)."""
+        n, d = self.vocab_size, self.dim
+        if self.kind in ("full", "sq"):
+            return n * d
+        if self.kind == "lrf":
+            return n * self.rank + self.rank * d
+        if self.kind == "hash":
+            return self.hash_buckets * d
+        if self.kind == "dpq":
+            return n * d + self.num_centroids * d
+        if self.kind == "mgqe":
+            if self.mgqe_variant == "shared_k":
+                return n * d + self.num_centroids * d
+            if self.mgqe_variant == "private_k":
+                return n * d + d * sum(self.tier_num_centroids)
+            return n * d + d * self.num_centroids * self.num_tiers
+        raise AssertionError(self.kind)
+
+
+def _log2ceil(k: int) -> int:
+    return max(1, math.ceil(math.log2(k)))

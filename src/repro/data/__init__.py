@@ -1,0 +1,3 @@
+"""Data substrate: synthetic dataset generators (the container is
+offline), negative samplers, shard-aware batch iterators, and the GNN
+neighbor sampler."""

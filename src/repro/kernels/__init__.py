@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each subpackage ships <name>.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd dispatch wrapper), ref.py (pure-jnp oracle):
+
+  mgqe_decode     codes + centroids -> embeddings (serving hot path)
+  dpq_assign      nearest-centroid search (training/export hot path)
+  pq_score        ADC retrieval scoring vs a PQ-coded corpus
+  embedding_bag   fused ragged gather + segment-sum (TBE pattern)
+  flash_attention blocked causal/windowed GQA attention
+
+All validated against their oracles in interpret mode (tests/), which
+executes the kernel bodies on CPU.
+"""
+from repro.kernels import (dpq_assign, embedding_bag, flash_attention,
+                           mgqe_decode, pq_score)
+
+__all__ = ["dpq_assign", "embedding_bag", "flash_attention",
+           "mgqe_decode", "pq_score"]

@@ -1,0 +1,3 @@
+from repro.kernels.dpq_assign.ops import assign, dpq_assign, dpq_assign_ref
+
+__all__ = ["assign", "dpq_assign", "dpq_assign_ref"]

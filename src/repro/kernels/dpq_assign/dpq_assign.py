@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: nearest-centroid search (the DPQ/MGQE encoder).
+
+The compute hot-spot of DPQ *training* and of serving-code export: for
+every row, squared-L2 argmin against K centroids in each of D
+subspaces.  In matmul form (||e-c||^2 = ||e||^2 - 2e.c + ||c||^2, the
+||e||^2 term constant w.r.t. the argmin) the distance tensor is one
+MXU batched-matmul:  -2 * e_sub @ centroids^T + ||c||^2.
+
+MGQE's tier rule rides along as a per-item mask: slots k >= k_limit[b]
+get +inf before the argmin — the masked single-pass lookup that
+replaces the paper's dynamic group-split (DESIGN.md §3).
+
+Block layout: grid over (B blocks, D).  Per step: e block (Bblk, 1, S),
+centroid block (1, K, S) — both VMEM; distances (Bblk, K) never leave
+VMEM; only the int32 codes (Bblk, 1) are written back.  This is the
+fusion win: XLA's unfused path would round-trip the (B, D, K) distance
+tensor through HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(e_ref, cent_ref, klim_ref, codes_ref):
+    e = e_ref[...][:, 0, :]                            # (Bblk, S)
+    cent = cent_ref[...][0]                            # (K, S)
+    k = cent.shape[0]
+    dots = jnp.dot(e, cent.T, preferred_element_type=jnp.float32)
+    c_sq = jnp.sum(jnp.square(cent.astype(jnp.float32)), axis=-1)
+    dist = c_sq[None, :] - 2.0 * dots                  # (Bblk, K)
+    klim = klim_ref[...]                               # (Bblk,)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+    dist = jnp.where(slot >= klim[:, None], jnp.inf, dist)
+    codes_ref[...] = jnp.argmin(dist, axis=-1
+                                ).astype(jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def dpq_assign(e_sub: jax.Array, centroids: jax.Array,
+               k_limit: Optional[jax.Array] = None,
+               block_b: int = 512, interpret: bool = False) -> jax.Array:
+    """e_sub (B, D, S); centroids (D, K, S); k_limit (B,) or None
+    -> codes (B, D) int32."""
+    b, d, s = e_sub.shape
+    n_sub, k, s2 = centroids.shape
+    assert (d, s) == (n_sub, s2), ((d, s), (n_sub, s2))
+    if k_limit is None:
+        k_limit = jnp.full((b,), k, jnp.int32)
+    k_limit = k_limit.astype(jnp.int32)
+    pad = (-b) % block_b
+    if pad:
+        e_sub = jnp.pad(e_sub, ((0, pad), (0, 0), (0, 0)))
+        k_limit = jnp.pad(k_limit, (0, pad), constant_values=k)
+    codes = pl.pallas_call(
+        _assign_kernel,
+        grid=((b + pad) // block_b, d),
+        in_specs=[
+            pl.BlockSpec((block_b, 1, s), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k, s), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b + pad, d), jnp.int32),
+        interpret=interpret,
+    )(e_sub, centroids, k_limit)
+    return codes[:b]

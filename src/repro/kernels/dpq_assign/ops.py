@@ -1,0 +1,24 @@
+"""Public wrapper for the DPQ nearest-centroid assignment kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.dpq_assign.dpq_assign import dpq_assign
+from repro.kernels.dpq_assign.ref import dpq_assign_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def assign(e_sub: jax.Array, centroids: jax.Array,
+           k_limit: Optional[jax.Array] = None,
+           block_b: int = 512) -> jax.Array:
+    """Nearest-centroid codes (B, D) for subvectors (B, D, S)."""
+    return dpq_assign(e_sub, centroids, k_limit, block_b=block_b,
+                      interpret=not _on_tpu())
+
+
+__all__ = ["assign", "dpq_assign", "dpq_assign_ref"]

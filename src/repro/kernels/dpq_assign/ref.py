@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for nearest-centroid code assignment (DPQ encode).
+
+Mirrors repro.core.dpq.assign_codes: squared-L2 argmin per subspace
+with an optional per-item centroid budget ``k_limit`` (the MGQE
+shared-variable-K mask).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def dpq_assign_ref(e_sub: jnp.ndarray, centroids: jnp.ndarray,
+                   k_limit: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """e_sub (B, D, S); centroids (D, K, S); k_limit (B,) -> codes (B, D)."""
+    dots = jnp.einsum("bds,dks->bdk", e_sub, centroids)
+    c_sq = jnp.sum(jnp.square(centroids), axis=-1)        # (D, K)
+    dist = c_sq[None] - 2.0 * dots                        # (B, D, K)
+    if k_limit is not None:
+        k = dist.shape[-1]
+        slot = jnp.arange(k, dtype=jnp.int32)
+        mask = slot[None, None, :] >= k_limit[:, None, None]
+        dist = jnp.where(mask, jnp.inf, dist)
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)

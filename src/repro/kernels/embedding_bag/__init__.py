@@ -1,0 +1,4 @@
+from repro.kernels.embedding_bag.ops import (bag, embedding_bag,
+                                             embedding_bag_ref)
+
+__all__ = ["bag", "embedding_bag", "embedding_bag_ref"]

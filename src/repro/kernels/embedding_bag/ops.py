@@ -1,0 +1,23 @@
+"""Public wrapper for the fused EmbeddingBag kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def bag(table: jax.Array, ids: jax.Array, segment_ids: jax.Array,
+        num_bags: int, weights: Optional[jax.Array] = None) -> jax.Array:
+    """Fused CSR embedding-bag pooling (sum mode)."""
+    return embedding_bag(table, ids, segment_ids, num_bags, weights,
+                         interpret=not _on_tpu())
+
+
+__all__ = ["bag", "embedding_bag", "embedding_bag_ref"]

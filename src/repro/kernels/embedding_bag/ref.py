@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused EmbeddingBag (gather + segment-sum).
+
+CSR-style ragged multi-hot pooling: ids (nnz,) index rows of the table,
+segment_ids (nnz,) assign each id to a bag; segment_ids must be sorted
+ascending (standard CSR layout).  Optional per-id weights.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray,
+                      segment_ids: jnp.ndarray, num_bags: int,
+                      weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """table (V, d); ids/segment_ids (nnz,) -> pooled (num_bags, d)."""
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)

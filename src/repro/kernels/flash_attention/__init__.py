@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention.ops import (attend, flash_attention,
+                                               flash_attention_ref)
+
+__all__ = ["attend", "flash_attention", "flash_attention_ref"]

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: blocked causal/windowed flash attention (forward).
+
+Standard flash-attention-2 structure adapted to the TPU grid model:
+
+  grid = (B*Hkv*G, Sq/bq, Skv/bk)   -- kv blocks innermost so the
+                                       (m, l, acc) running state lives
+                                       in VMEM scratch across the kv loop
+  q block   (bq, hd)   VMEM
+  k,v block (bk, hd)   VMEM
+  out block (bq, hd)   written once, on the last kv step
+
+Causality + sliding window are positional: query block i covers
+positions [i*bq, (i+1)*bq); key block j covers [j*bk, (j+1)*bk).
+Blocks fully outside the visibility band are *skipped at trace time is
+not possible (grid is static)* — instead masked fully; XLA's grid
+skipping on TPU would use mask_info, kept simple here since the band
+structure already bounds work for the windowed layers we lower.
+
+MXU alignment: bq, bk multiples of 128; hd padded to 128 by the caller
+(ops.py) when needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, window: int, n_kv_blocks: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                        # (bq, hd)
+    k = k_ref[0]                                        # (bk, hd)
+    v = v_ref[0]
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    delta = qpos - kpos
+    mask = (delta >= 0) & (delta < window)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * alpha
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    window: int = 1 << 30, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """q (B, Sq, H, hd); k, v (B, Skv, Hkv, hd) -> (B, Sq, H, hd).
+
+    Causal with sliding window; positions are array indices (prefill /
+    train layout).  H must be a multiple of Hkv (GQA).
+    """
+    b, sq, h, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+    assert sq % block_q == 0, (sq, block_q)
+    assert skv % block_k == 0, (skv, block_k)
+
+    # (B, S, H, hd) -> (B*H, S, hd) with kv head g-fold repeat folded in
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1
+                    ).reshape(b * h, skv, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1
+                    ).reshape(b * h, skv, hd)
+
+    n_kv_blocks = skv // block_k
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k,
+        window=window, n_kv_blocks=n_kv_blocks)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, sq // block_q, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,43 @@
+"""Public wrapper: flash attention with a recompute-based backward.
+
+Forward runs the Pallas kernel; the VJP recomputes attention with the
+pure-jnp oracle (flash backward on TPU would mirror the forward's
+block structure — the recompute fallback keeps training numerically
+exact at ~2x forward cost, the standard remat trade).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attend(q: jax.Array, k: jax.Array, v: jax.Array,
+           window: int = 1 << 30) -> jax.Array:
+    """Blocked causal/windowed GQA attention (train/prefill layout)."""
+    return flash_attention(q, k, v, window=window, interpret=not _on_tpu())
+
+
+def _fwd(q, k, v, window):
+    return attend(q, k, v, window), (q, k, v)
+
+
+def _bwd(window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: flash_attention_ref(q, k, v, window),
+                     q, k, v)
+    return vjp(g)
+
+
+attend.defvjp(_fwd, _bwd)
+
+__all__ = ["attend", "flash_attention", "flash_attention_ref"]

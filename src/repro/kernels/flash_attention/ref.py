@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for blocked causal/windowed GQA attention.
+
+Mirrors repro.nn.attention.dense_attention with positional masking:
+key visible iff 0 <= qpos - kpos < window.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        window: int = 1 << 30) -> jnp.ndarray:
+    """q (B, Sq, H, hd); k, v (B, Skv, Hkv, hd); H = Hkv * g.
+
+    Causal: query i attends keys j with 0 <= i - j < window (positions
+    are the indices — the oracle assumes q and k start at position 0).
+    """
+    b, sq, h, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    delta = qpos - kpos
+    mask = (delta >= 0) & (delta < window)
+    scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(q.shape)

@@ -1,0 +1,3 @@
+from repro.kernels.mgqe_decode.ops import decode, mgqe_decode, mgqe_decode_ref
+
+__all__ = ["decode", "mgqe_decode", "mgqe_decode_ref"]

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: MGQE/DPQ serving decode (codes -> embeddings).
+
+Roofline story (DESIGN.md §3): serving FE reads ``B*d*4`` bytes of
+embedding rows from HBM; MGQE reads ``B*D`` bytes of uint8 codes plus a
+one-time ``D*K*S*4``-byte centroid table that *fits in VMEM* (64 KB at
+d=64, K=256).  Fusing the decode keeps the 4x-32x byte reduction —
+doing it as take_along_axis in HBM would read the centroids once per
+row and defeat the point.
+
+TPU adaptation: per-row dynamic gathers vectorize poorly on the VPU,
+so the gather is re-expressed as a **one-hot matmul** — the MXU eats
+``onehot(codes) @ centroids`` at full throughput:
+
+    onehot:  (Bblk, D, K)  built from a broadcasted iota compare
+    decode:  einsum('bdk,dks->bds') -> (Bblk, D, S) -> reshape (Bblk, d)
+
+Block layout: grid over B; codes block (Bblk, D) and output block
+(Bblk, d) stream through VMEM; the centroid table is mapped whole into
+VMEM every step (index_map returns the same block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(codes_ref, cent_ref, out_ref):
+    codes = codes_ref[...].astype(jnp.int32)          # (Bblk, D)
+    cent = cent_ref[...]                              # (D, K, S)
+    k = cent.shape[1]
+    onehot = (codes[:, :, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
+              ).astype(cent.dtype)                    # (Bblk, D, K)
+    dec = jnp.einsum("bdk,dks->bds", onehot, cent,
+                     preferred_element_type=jnp.float32)
+    out_ref[...] = dec.reshape(dec.shape[0], -1).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def mgqe_decode(codes: jax.Array, centroids: jax.Array,
+                block_b: int = 256, interpret: bool = False) -> jax.Array:
+    """codes (B, D) int; centroids (D, K, S) -> (B, D*S) float32.
+
+    block_b: rows per grid step.  VMEM working set per step =
+    Bblk*D codes + D*K*S*4 centroids + Bblk*D*K*4 onehot + Bblk*d*4 out;
+    256*8*256*4 = 2 MB onehot dominates — comfortably inside 16 MB VMEM.
+    """
+    b, d = codes.shape
+    n_sub, k, s = centroids.shape
+    assert d == n_sub, (d, n_sub)
+    pad = (-b) % block_b
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=((b + pad) // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, n_sub), lambda i: (i, 0)),
+            pl.BlockSpec((n_sub, k, s), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_sub * s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(((b + pad), n_sub * s),
+                                       centroids.dtype),
+        interpret=interpret,
+    )(codes, centroids)
+    return out[:b]

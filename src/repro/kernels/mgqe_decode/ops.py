@@ -1,0 +1,26 @@
+"""Public wrapper for the MGQE decode kernel.
+
+``decode(codes, centroids)`` dispatches to the Pallas kernel on TPU and
+to interpret mode elsewhere (CPU test/dev containers), so call sites
+never branch on backend.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mgqe_decode.mgqe_decode import mgqe_decode
+from repro.kernels.mgqe_decode.ref import mgqe_decode_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode(codes: jax.Array, centroids: jax.Array,
+           block_b: int = 256) -> jax.Array:
+    """codes (B, D) -> embeddings (B, D*S) via the fused kernel."""
+    return mgqe_decode(codes, centroids, block_b=block_b,
+                       interpret=not _on_tpu())
+
+
+__all__ = ["decode", "mgqe_decode", "mgqe_decode_ref"]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the MGQE/DPQ serving decode.
+
+Given per-item codes (B, D) and per-subspace centroid tables (D, K, S),
+reconstruct embeddings (B, D*S) by gathering centroid ``codes[b, d]``
+in each subspace d and concatenating.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mgqe_decode_ref(codes: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """codes (B, D) int; centroids (D, K, S) -> (B, D*S) float."""
+    b, d = codes.shape
+    _, _, s = centroids.shape
+    gathered = jnp.take_along_axis(
+        centroids[None],                                   # (1, D, K, S)
+        codes.astype(jnp.int32)[..., None, None],          # (B, D, 1, 1)
+        axis=2)                                            # (B, D, 1, S)
+    return gathered[:, :, 0, :].reshape(b, d * s)

@@ -1,0 +1,5 @@
+from repro.kernels.pq_score.ops import (build_lut, build_lut_ref, pq_score,
+                                        pq_score_ref, score_candidates)
+
+__all__ = ["build_lut", "score_candidates", "pq_score",
+           "pq_score_ref", "build_lut_ref"]

@@ -1,0 +1,28 @@
+"""Public wrapper: ADC retrieval scoring against a PQ-coded corpus."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pq_score.pq_score import pq_score
+from repro.kernels.pq_score.ref import build_lut_ref, pq_score_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def build_lut(query: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Per-query LUT (D, K).  Tiny — stays pure jnp (one einsum)."""
+    return build_lut_ref(query, centroids)
+
+
+def score_candidates(query: jax.Array, centroids: jax.Array,
+                     codes: jax.Array, block_n: int = 1024) -> jax.Array:
+    """Full ADC path: query (d,) + corpus codes (N, D) -> scores (N,)."""
+    lut = build_lut(query, centroids).astype(jnp.float32)
+    return pq_score(lut, codes, block_n=block_n, interpret=not _on_tpu())
+
+
+__all__ = ["build_lut", "score_candidates", "pq_score",
+           "pq_score_ref", "build_lut_ref"]

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: ADC scoring of a PQ-coded candidate corpus.
+
+The beyond-paper serving win (DESIGN.md §3): scoring one query against
+N=1M candidates with full d=64 fp32 embeddings reads 256 MB from HBM;
+with PQ codes it reads N*D = 8 MB of uint8 codes and a (D, K) LUT that
+lives in VMEM (8 KB).  Memory-roofline speedup ≈ 32x on the dominant
+stream.
+
+Kernel layout: grid over candidate blocks.  Codes block (Nblk, D) in
+VMEM; LUT (D, K) pinned whole; scores block (Nblk,) out.  The gather
+``lut[d, codes[n, d]]`` is again one-hot matmul form: contraction of
+``onehot(codes)`` (Nblk, D, K) with LUT (D, K) over (D, K) — a single
+MXU pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(codes_ref, lut_ref, out_ref):
+    codes = codes_ref[...].astype(jnp.int32)          # (Nblk, D)
+    lut = lut_ref[...]                                # (D, K)
+    k = lut.shape[1]
+    onehot = (codes[:, :, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
+              ).astype(lut.dtype)                     # (Nblk, D, K)
+    out_ref[...] = jnp.einsum("ndk,dk->n", onehot, lut,
+                              preferred_element_type=jnp.float32
+                              ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_score(lut: jax.Array, codes: jax.Array, block_n: int = 1024,
+             interpret: bool = False) -> jax.Array:
+    """lut (D, K) f32; codes (N, D) int -> scores (N,) f32."""
+    n, d = codes.shape
+    n_sub, k = lut.shape
+    assert d == n_sub, (d, n_sub)
+    pad = (-n) % block_n
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=((n + pad) // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, n_sub), lambda i: (i, 0)),
+            pl.BlockSpec((n_sub, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+        interpret=interpret,
+    )(codes, lut)
+    return out[:n]

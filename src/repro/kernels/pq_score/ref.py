@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for ADC (asymmetric distance computation) scoring.
+
+Retrieval against a PQ-coded corpus: precompute per-subspace lookup
+table ``lut[d, k] = <q_d, c_k^(d)>`` once per query, then the score of
+candidate i is ``sum_d lut[d, codes[i, d]]`` — the candidate embedding
+is never reconstructed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def build_lut_ref(query: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """query (d,) with d = D*S; centroids (D, K, S) -> lut (D, K)."""
+    n_sub, _, s = centroids.shape
+    q_sub = query.reshape(n_sub, s)
+    return jnp.einsum("ds,dks->dk", q_sub, centroids)
+
+
+def pq_score_ref(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """lut (D, K); codes (N, D) -> scores (N,)."""
+    gathered = jnp.take_along_axis(
+        jnp.broadcast_to(lut[None], (codes.shape[0],) + lut.shape),
+        codes.astype(jnp.int32)[..., None], axis=2)       # (N, D, 1)
+    return jnp.sum(gathered[..., 0], axis=1)

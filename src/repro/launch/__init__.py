@@ -1,0 +1,3 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve entry
+points.  dryrun.py sets XLA_FLAGS for 512 host devices — nothing else
+in the package may touch jax device state at import time."""

@@ -1,0 +1,636 @@
+"""Dry-run cell construction: one Cell per (arch x input-shape).
+
+A Cell bundles everything ``dryrun.py`` needs to lower + compile a step
+on the production mesh without allocating anything:
+
+    fn             the step function (closed over configs)
+    args           tuple of ShapeDtypeStruct pytrees
+    in_shardings   matching pytree of NamedShardings
+    out_shardings  pytree / None (auto)
+    model_flops    useful-FLOPs estimate for §Roofline
+    donate         argnums to donate
+    note           free-text (what the cell lowers)
+
+Conventions:
+  * TRAIN cells lower a full optimizer step (grads + Adam update).
+  * PREFILL cells lower prompt -> (KV cache, logits) on the *serving*
+    path: the quantized embedding artifact replaces the full table
+    (paper Fig. 1 — the table is dead at serving time).
+  * DECODE cells lower one-token serve_step against a full cache.
+  * Uneven leading dims are padded up to multiples of the device count
+    (XLA GSPMD wants divisible shardings; the pad rows are masked).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig, ShapeSpec
+from repro.configs.registry import get_arch
+from repro.core import Embedding
+from repro.models import lm
+from repro.models.gnn.mace import MACE
+from repro.models.recsys.autoint import AutoInt
+from repro.models.recsys.bst import BST
+from repro.models.recsys.deepfm import DeepFM
+from repro.models.recsys.two_tower import TwoTower
+from repro.sharding import rules
+from repro.train import optimizer as opt_lib
+from repro.train.optimizer import TrainState
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: Tuple
+    in_shardings: Any
+    out_shardings: Any
+    model_flops: float
+    donate: Tuple[int, ...] = ()
+    note: str = ""
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if isinstance(s, P) else P()),
+        tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _dp(mesh, multi_pod: bool):
+    axes = ("pod", "data") if multi_pod else ("data",)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    return axes, n
+
+
+def _batch_or_seq_spec(b: int, dp_axes, dp_n: int, extra_dims: int = 1):
+    """Shard the batch over DP when it divides; else leave replicated
+    and (for 2d+ inputs) shard dim 1 — the B=1 long-context SP case."""
+    if b % dp_n == 0 and b >= dp_n:
+        return P(dp_axes, *(None,) * extra_dims)
+    if extra_dims >= 1:
+        return P(None, dp_axes, *(None,) * (extra_dims - 1))
+    return P(None)
+
+
+# ======================================================================
+# LM cells
+# ======================================================================
+
+def _lm_state_struct(cfg: LMConfig, ocfg: opt_lib.OptimizerConfig):
+    def build(key):
+        params = lm.model_init(key, cfg)
+        return TrainState.create(ocfg, params)
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def _lm_state_sharding(cfg, mesh, state_struct):
+    p_spec, o_spec = rules.lm_state_specs(
+        cfg, mesh, state_struct.params, state_struct.opt_state)
+    return TrainState(_named(mesh, p_spec), _named(mesh, o_spec))
+
+
+def _lm_params_sharding(cfg, mesh, params_struct):
+    spec = rules.spec_tree(params_struct, rules.lm_param_rules(cfg, mesh))
+    return _named(mesh, spec)
+
+
+def _strip_embed_table(params_struct):
+    """Serving path: the full embedding table is discarded (Fig. 1) —
+    only centroids ride along for the artifact-free baselines."""
+    out = dict(params_struct)
+    out["embed"] = {k: v for k, v in params_struct["embed"].items()
+                    if k != "emb"}
+    return out
+
+
+def _lm_artifact_struct(cfg: LMConfig):
+    return Embedding(cfg.embedding).serving_artifact_struct()
+
+
+def _lm_artifact_sharding(mesh, artifact_struct):
+    spec = {}
+    for k, v in artifact_struct.items():
+        if k == "codes":
+            spec[k] = P("model", None)
+        elif k == "emb":                      # full-embedding baseline
+            spec[k] = P("model", None)
+        elif k in ("q",):                     # sq artifact
+            spec[k] = P("model", None)
+        else:
+            spec[k] = P()
+    return _named(mesh, spec)
+
+
+def lm_train_cell(arch: str, cfg: LMConfig, shape: ShapeSpec, mesh,
+                  multi_pod: bool, microbatches: int = 1) -> Cell:
+    dp_axes, dp_n = _dp(mesh, multi_pod)
+    b, s = shape.global_batch, shape.seq_len
+    ocfg = opt_lib.OptimizerConfig(kind="adamw", lr=3e-4, grad_clip=1.0)
+    state_struct = _lm_state_struct(cfg, ocfg)
+    state_shard = _lm_state_sharding(cfg, mesh, state_struct)
+    batch_struct = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    batch_spec = {k: _batch_or_seq_spec(b, dp_axes, dp_n, 1)
+                  for k in batch_struct}
+    loss_fn = functools.partial(lm.loss_fn, cfg=cfg)
+    if microbatches == 1:
+        step = opt_lib.make_step_fn(ocfg, loss_fn)
+    else:
+        assert b % microbatches == 0, (b, microbatches)
+        mb = b // microbatches
+        # fp32 accumulators carry the ZeRO-1 sharding of the Adam
+        # moments (extra data-axis split) — a full param-shaped fp32
+        # buffer per device would cost more HBM than the activations
+        # the microbatching saves
+        _, o_spec = rules.lm_state_specs(
+            cfg, mesh, state_struct.params, state_struct.opt_state)
+        acc_shard = _named(mesh, o_spec["m"])
+
+        def step(state, batch):
+            """Gradient accumulation: scan over microbatches, one
+            optimizer update — cuts live activations by ~1/m."""
+            split = jax.tree.map(
+                lambda v: v.reshape((microbatches, mb) + v.shape[1:]),
+                batch)
+
+            def one(carry, mbatch):
+                gsum, lsum = carry
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mbatch)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                gsum = jax.lax.with_sharding_constraint(gsum, acc_shard)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            zeros = jax.lax.with_sharding_constraint(zeros, acc_shard)
+            (gsum, lsum), _ = jax.lax.scan(one, (zeros, jnp.float32(0.0)),
+                                           split)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            new_p, new_o = opt_lib.apply_updates(ocfg, state.params, grads,
+                                                 state.opt_state)
+            loss = lsum / microbatches
+            return opt_lib.TrainState(new_p, new_o), {"loss": loss}
+
+    flops = 6.0 * cfg.active_param_count() * b * s
+    return Cell(arch, shape.name, step, (state_struct, batch_struct),
+                (state_shard, _named(mesh, batch_spec)),
+                (state_shard, None), flops, donate=(0,),
+                note=f"train_step B={b} S={s}")
+
+
+def lm_prefill_cell(arch: str, cfg: LMConfig, shape: ShapeSpec, mesh,
+                    multi_pod: bool) -> Cell:
+    dp_axes, dp_n = _dp(mesh, multi_pod)
+    b, s = shape.global_batch, shape.seq_len
+
+    params_struct = jax.eval_shape(
+        lambda k: lm.model_init(k, cfg), jax.random.PRNGKey(0))
+    serve_params = _strip_embed_table(params_struct)
+    params_shard = _lm_params_sharding(cfg, mesh, serve_params)
+    artifact_struct = _lm_artifact_struct(cfg)
+    artifact_shard = _lm_artifact_sharding(mesh, artifact_struct)
+    tokens_struct = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tokens_spec = _batch_or_seq_spec(b, dp_axes, dp_n, 1)
+
+    def fn(params, artifact, tokens):
+        return lm.prefill(params, tokens, cfg, max_seq=s,
+                          embed_artifact=artifact)
+
+    flops = 2.0 * cfg.active_param_count() * b * s
+    return Cell(arch, shape.name, fn,
+                (serve_params, artifact_struct, tokens_struct),
+                (params_shard, artifact_shard,
+                 NamedSharding(mesh, tokens_spec)),
+                None, flops, note=f"prefill B={b} S={s} (serving path)")
+
+
+def lm_decode_cell(arch: str, cfg: LMConfig, shape: ShapeSpec, mesh,
+                   multi_pod: bool) -> Cell:
+    dp_axes, dp_n = _dp(mesh, multi_pod)
+    b, s = shape.global_batch, shape.seq_len
+
+    params_struct = jax.eval_shape(
+        lambda k: lm.model_init(k, cfg), jax.random.PRNGKey(0))
+    serve_params = _strip_embed_table(params_struct)
+    params_shard = _lm_params_sharding(cfg, mesh, serve_params)
+    artifact_struct = _lm_artifact_struct(cfg)
+    artifact_shard = _lm_artifact_sharding(mesh, artifact_struct)
+    cache_struct = jax.eval_shape(
+        lambda: lm.make_cache(cfg, b, s))
+    cache_shard = _named(mesh, rules.lm_cache_spec(
+        cfg, b, mesh, multi_pod, cache_struct))
+    token_struct = jax.ShapeDtypeStruct((b,), jnp.int32)
+    token_spec = P(dp_axes) if b % dp_n == 0 and b >= dp_n else P()
+
+    def fn(params, artifact, cache, token):
+        return lm.decode_step(params, cache, token, cfg,
+                              embed_artifact=artifact)
+
+    flops = 2.0 * cfg.active_param_count() * b
+    return Cell(arch, shape.name, fn,
+                (serve_params, artifact_struct, cache_struct, token_struct),
+                (params_shard, artifact_shard, cache_shard,
+                 NamedSharding(mesh, token_spec)),
+                (cache_shard, None), flops, donate=(2,),
+                note=f"serve_step B={b} KV={s} (one new token)")
+
+
+# ======================================================================
+# GNN (MACE) cells
+# ======================================================================
+
+def mace_model_flops(cfg: GNNConfig, n_nodes: int, n_edges: int,
+                     train: bool = True) -> float:
+    """Analytic forward MACs x2 (x3 more for train) for the MACE step."""
+    model = MACE(cfg)
+    c = cfg.d_hidden
+    s_tot = model.n_sh
+    fl = 0.0
+    # per layer
+    per_l = 0.0
+    # radial MLP: E x (rbf*64 + 64*C*P)
+    per_l += n_edges * (cfg.n_rbf * 64 + 64 * c * model.n_paths)
+    # edge TP + pairwise CG: paths ~ E/N x C x S1*S2*S3
+    path_cost = sum((2 * l1 + 1) * (2 * l2 + 1) * (2 * l3 + 1)
+                    for (l1, l2, l3, _) in model.paths)
+    per_l += n_edges * c * path_cost          # edge TP
+    per_l += 2 * n_nodes * c * path_cost      # B2, B3
+    # channel mixes: 4 x N x C*C*S
+    per_l += 4 * n_nodes * c * c * s_tot
+    # readout
+    per_l += n_nodes * (c * 64 + 64 * cfg.d_readout)
+    fl = cfg.num_layers * per_l * 2.0         # MAC -> 2 FLOPs
+    return fl * (3.0 if train else 1.0)
+
+
+def _gnn_graph_struct(n_nodes: int, n_edges: int, d_feat: int,
+                      task: str, n_classes: int = 16,
+                      n_graphs: int = 0) -> Dict:
+    S = jax.ShapeDtypeStruct
+    g = {
+        "positions": S((n_nodes, 3), jnp.float32),
+        "species": S((n_nodes,), jnp.int32),
+        "edge_index": S((2, n_edges), jnp.int32),
+    }
+    if d_feat:
+        g["node_feats"] = S((n_nodes, d_feat), jnp.float32)
+    if task == "node_class":
+        g["labels"] = S((n_nodes,), jnp.int32)
+        g["label_mask"] = S((n_nodes,), jnp.float32)
+    else:
+        g["graph_id"] = S((n_nodes,), jnp.int32)
+        g["energy"] = S((n_graphs,), jnp.float32)
+    return g
+
+
+def mace_cell(arch: str, cfg: GNNConfig, shape: ShapeSpec, mesh,
+              multi_pod: bool) -> Cell:
+    dp_axes, dp_n = _dp(mesh, multi_pod)
+    n_dev = mesh.size
+    model = MACE(cfg)
+
+    if shape.kind == "graph_mini":
+        from repro.data.graph import sampled_subgraph_sizes
+        n_nodes, n_edges = sampled_subgraph_sizes(shape.batch_nodes,
+                                                  shape.fanout)
+        d_feat, task, n_graphs = 128, "node_class", 0
+    elif shape.kind == "graph_batched":
+        n_nodes = shape.n_nodes * shape.batch_graphs
+        n_edges = shape.n_edges * shape.batch_graphs
+        d_feat, task, n_graphs = 0, "energy", shape.batch_graphs
+    else:
+        n_nodes, n_edges = shape.n_nodes, shape.n_edges
+        d_feat, task, n_graphs = shape.d_feat, "node_class", 0
+
+    n_nodes = _pad_to(n_nodes, n_dev)
+    n_edges = _pad_to(n_edges, n_dev)
+
+    graph_struct = _gnn_graph_struct(n_nodes, n_edges, d_feat, task,
+                                     n_graphs=n_graphs)
+
+    # shard nodes/edges over every mesh axis (no TP dim in MACE at C=128;
+    # channels go over "model" via the param rules when divisible)
+    all_axes = dp_axes + ("model",)
+    gspec = {
+        "positions": P(all_axes, None),
+        "species": P(all_axes),
+        "edge_index": P(None, all_axes),
+    }
+    if d_feat:
+        gspec["node_feats"] = P(all_axes, None)
+    if task == "node_class":
+        gspec["labels"] = P(all_axes)
+        gspec["label_mask"] = P(all_axes)
+    else:
+        gspec["graph_id"] = P(all_axes)
+        gspec["energy"] = P(all_axes) if n_graphs % n_dev == 0 else P()
+
+    ocfg = opt_lib.OptimizerConfig(kind="adam", lr=1e-3)
+    n_feat_arg = d_feat if d_feat else None
+    state_struct = jax.eval_shape(
+        lambda k: TrainState.create(ocfg, model.init(k, n_feat=n_feat_arg)),
+        jax.random.PRNGKey(0))
+    p_spec = rules.spec_tree(state_struct.params,
+                             rules.gnn_param_rules(cfg, mesh))
+    o_spec = jax.tree.map(lambda _: P(), state_struct.opt_state)
+    state_shard = TrainState(_named(mesh, p_spec), _named(mesh, o_spec))
+
+    loss_fn = (model.node_class_loss if task == "node_class"
+               else model.energy_loss)
+
+    def step(state, graph):
+        if task == "energy":
+            graph = dict(graph, n_graphs=n_graphs)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, graph)
+        new_p, new_o = opt_lib.apply_updates(ocfg, state.params, grads,
+                                             state.opt_state)
+        return TrainState(new_p, new_o), metrics
+
+    flops = mace_model_flops(cfg, n_nodes, n_edges, train=True)
+    return Cell(arch, shape.name, step, (state_struct, graph_struct),
+                (state_shard, _named(mesh, gspec)), (state_shard, None),
+                flops, donate=(0,),
+                note=f"{task} train_step N={n_nodes} E={n_edges}")
+
+
+# ======================================================================
+# RecSys cells
+# ======================================================================
+
+_RECSYS_MODELS = {"autoint": AutoInt, "deepfm": DeepFM, "bst": BST,
+                  "two_tower": TwoTower}
+
+
+def _recsys_model(cfg: RecsysConfig):
+    return _RECSYS_MODELS[cfg.model](cfg)
+
+
+def _recsys_dense_params(cfg: RecsysConfig) -> int:
+    """Rough dense (non-embedding) parameter count for MODEL_FLOPS."""
+    if cfg.model == "autoint":
+        d_out = cfg.n_attn_heads * cfg.d_attn
+        per = 4 * cfg.embed_dim * d_out + 3 * d_out * d_out * \
+            max(cfg.n_attn_layers - 1, 0)
+        return per + cfg.n_sparse * d_out
+    if cfg.model == "deepfm":
+        dims = (cfg.n_sparse * cfg.embed_dim,) + tuple(cfg.mlp_dims) + (1,)
+        return sum(a * b for a, b in zip(dims, dims[1:]))
+    if cfg.model == "bst":
+        d = cfg.embed_dim
+        blk = cfg.n_blocks * (4 * d * d + 8 * d * d)
+        s = cfg.seq_len + 1
+        dims = (s * d,) + tuple(cfg.tower_mlp) + (1,)
+        return blk + sum(a * b for a, b in zip(dims, dims[1:]))
+    if cfg.model == "two_tower":
+        dims = (cfg.embed_dim,) + tuple(cfg.tower_mlp)
+        return 2 * sum(a * b for a, b in zip(dims, dims[1:]))
+    raise ValueError(cfg.model)
+
+
+def _recsys_batch_struct(cfg: RecsysConfig, b: int) -> Dict:
+    S = jax.ShapeDtypeStruct
+    if cfg.model == "two_tower":
+        return {"user_ids": S((b,), jnp.int32),
+                "item_ids": S((b,), jnp.int32),
+                "item_logq": S((b,), jnp.float32)}
+    if cfg.model == "bst":
+        return {"hist_ids": S((b, cfg.seq_len), jnp.int32),
+                "target_id": S((b,), jnp.int32),
+                "label": S((b,), jnp.float32)}
+    return {"sparse_ids": S((b, cfg.n_sparse), jnp.int32),
+            "label": S((b,), jnp.float32)}
+
+
+def recsys_train_cell(arch: str, cfg: RecsysConfig, shape: ShapeSpec, mesh,
+                      multi_pod: bool) -> Cell:
+    dp_axes, dp_n = _dp(mesh, multi_pod)
+    b = shape.batch
+    model = _recsys_model(cfg)
+    ocfg = opt_lib.OptimizerConfig(kind="adagrad", lr=1e-2)
+
+    state_struct = jax.eval_shape(
+        lambda k: TrainState.create(ocfg, model.init(k)),
+        jax.random.PRNGKey(0))
+    p_spec = rules.spec_tree(state_struct.params,
+                             rules.recsys_param_rules(cfg, mesh))
+    # adagrad acc mirrors the params, so it shards exactly like them
+    o_spec = {"step": P(), "acc": p_spec}
+    state_shard = TrainState(_named(mesh, p_spec), _named(mesh, o_spec))
+
+    batch_struct = _recsys_batch_struct(cfg, b)
+    bspec = jax.tree.map(
+        lambda st: P(dp_axes, *(None,) * (len(st.shape) - 1)),
+        batch_struct)
+
+    def step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state.params, batch)
+        new_p, new_o = opt_lib.apply_updates(ocfg, state.params, grads,
+                                             state.opt_state)
+        return TrainState(new_p, new_o), metrics
+
+    flops = 6.0 * _recsys_dense_params(cfg) * b
+    return Cell(arch, shape.name, step, (state_struct, batch_struct),
+                (state_shard, _named(mesh, bspec)), (state_shard, None),
+                flops, donate=(0,), note=f"train_step B={b}")
+
+
+def recsys_serve_cell(arch: str, cfg: RecsysConfig, shape: ShapeSpec, mesh,
+                      multi_pod: bool) -> Cell:
+    dp_axes, dp_n = _dp(mesh, multi_pod)
+    b = shape.batch
+    model = _recsys_model(cfg)
+    params_struct = jax.eval_shape(lambda k: model.init(k),
+                                   jax.random.PRNGKey(0))
+    p_spec = rules.spec_tree(params_struct,
+                             rules.recsys_param_rules(cfg, mesh))
+
+    if cfg.model == "two_tower":
+        # dot-product scoring of (user, item) pairs on the serving path
+        def fn(params, batch):
+            u, _ = model.user_vec(params, batch["user_ids"])
+            v, _ = model.item_vec(params, batch["item_ids"])
+            return jnp.sum(u * v, axis=-1)
+        batch_struct = {"user_ids": jax.ShapeDtypeStruct((b,), jnp.int32),
+                        "item_ids": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        args = (params_struct, batch_struct)
+        bspec = jax.tree.map(lambda st: P(dp_axes), batch_struct)
+        shards = (_named(mesh, p_spec), _named(mesh, bspec))
+    else:
+        # CTR serving path: quantized artifacts replace the big tables
+        fields = model.fields if hasattr(model, "fields") else None
+        if cfg.model == "bst":
+            artifact_struct = model.item_emb.serving_artifact_struct()
+        else:
+            artifact_struct = fields.artifact_struct()
+        batch_struct = _recsys_batch_struct(cfg, b)
+        batch_struct.pop("label")
+        if cfg.model == "bst":
+            serve_params = dict(params_struct)
+            serve_params["item_emb"] = {
+                k: v for k, v in params_struct["item_emb"].items()
+                if k != "emb"}
+        else:
+            serve_params = dict(params_struct)
+            serve_params["fields"] = {
+                fk: {k: v for k, v in fv.items() if k != "emb"}
+                for fk, fv in params_struct["fields"].items()}
+
+        def art_spec(tree):
+            def one(path, leaf):
+                name = rules._path_name(path)
+                if name.endswith("codes") or name.endswith("/q") \
+                        or name.endswith("emb") or name.endswith("/u"):
+                    if leaf.shape[0] >= 16 * mesh.shape["model"] \
+                            and leaf.shape[0] % mesh.shape["model"] == 0:
+                        return P("model", *(None,) * (len(leaf.shape) - 1))
+                return P()
+            return jax.tree_util.tree_map_with_path(one, tree)
+
+        def fn(params, artifacts, batch):
+            return model.serve(params, artifacts, batch)
+        args = (serve_params, artifact_struct, batch_struct)
+        sp_spec = rules.spec_tree(serve_params,
+                                  rules.recsys_param_rules(cfg, mesh))
+        bspec = jax.tree.map(
+            lambda st: P(dp_axes, *(None,) * (len(st.shape) - 1)),
+            batch_struct)
+        shards = (_named(mesh, sp_spec), _named(mesh, art_spec(artifact_struct)),
+                  _named(mesh, bspec))
+
+    flops = 2.0 * _recsys_dense_params(cfg) * b
+    return Cell(arch, shape.name, fn, args, shards, None, flops,
+                note=f"serve B={b} (quantized artifacts)")
+
+
+def recsys_retrieval_cell(arch: str, cfg: RecsysConfig, shape: ShapeSpec,
+                          mesh, multi_pod: bool) -> Cell:
+    dp_axes, dp_n = _dp(mesh, multi_pod)
+    n_cand = _pad_to(shape.n_candidates, mesh.size)
+    model = _recsys_model(cfg)
+    params_struct = jax.eval_shape(lambda k: model.init(k),
+                                   jax.random.PRNGKey(0))
+    p_spec = rules.spec_tree(params_struct,
+                             rules.recsys_param_rules(cfg, mesh))
+    all_axes = dp_axes + ("model",)
+
+    if cfg.model == "two_tower":
+        # beyond-paper ADC: corpus tower outputs PQ-coded; score via LUT.
+        d_out = cfg.tower_mlp[-1]
+        n_sub = 16 if d_out % 16 == 0 else 8
+        corpus_struct = {
+            "codes": jax.ShapeDtypeStruct((n_cand, n_sub), jnp.uint8),
+            "centroids": jax.ShapeDtypeStruct(
+                (n_sub, 256, d_out // n_sub), jnp.float32)}
+        corpus_spec = {"codes": P(all_axes, None), "centroids": P()}
+        user_struct = jax.ShapeDtypeStruct((1,), jnp.int32)
+
+        def fn(params, corpus, user_id):
+            from repro.core import adc
+            u, _ = model.user_vec(params, user_id)
+            return adc.adc_scores(corpus, u[0])
+
+        args = (params_struct, corpus_struct, user_struct)
+        shards = (_named(mesh, p_spec), _named(mesh, corpus_spec),
+                  NamedSharding(mesh, P()))
+        flops = (2.0 * _recsys_dense_params(cfg) / 2
+                 + 0)  # one user tower; LUT-sum is memory-bound
+        flops += 2.0 * n_cand * n_sub          # the LUT adds
+        note = f"ADC retrieval 1x{n_cand} (PQ-coded corpus)"
+    else:
+        # CTR bulk candidate scoring: one context x N candidate items.
+        batch_struct = _recsys_batch_struct(cfg, n_cand)
+        batch_struct.pop("label")
+        bspec = jax.tree.map(
+            lambda st: P(all_axes, *(None,) * (len(st.shape) - 1)),
+            batch_struct)
+
+        def fn(params, batch):
+            out, _ = model.apply(params, batch)
+            return out
+        args = (params_struct, batch_struct)
+        shards = (_named(mesh, p_spec), _named(mesh, bspec))
+        flops = 2.0 * _recsys_dense_params(cfg) * n_cand
+        note = f"candidate scoring 1x{n_cand}"
+    return Cell(arch, shape.name, fn, args, shards, None, flops, note=note)
+
+
+# ======================================================================
+# dispatch
+# ======================================================================
+
+# named §Perf optimizations applied on top of the baseline configs
+_LM_CFG_OPTS = {
+    "moe_shard_map": dict(moe_shard_map=True),
+    "remat_group": dict(remat_granularity="group"),
+    "split_cache": dict(split_local_global_cache=True),
+    "xent_chunk_256": dict(xent_chunk=256),
+    "attn_block_2048": dict(attention_block=2048),
+    "fsdp": dict(fsdp_params=True),
+    "kv_repeat": dict(attn_kv_repeat=True),
+}
+
+
+def build_cell(arch: str, shape: ShapeSpec, mesh, multi_pod: bool,
+               opts: Tuple[str, ...] = ()) -> Cell:
+    family, cfg = get_arch(arch)
+    note_extra = f" +opts[{','.join(opts)}]" if opts else ""
+    microbatches = 1
+    for o in opts:
+        if o.startswith("microbatch"):
+            microbatches = int(o[len("microbatch"):])
+        elif o == "embed_full" and family == "lm":
+            # ablation: plain full-table embedding instead of MGQE —
+            # isolates the paper technique's train-step overhead
+            from repro.core.types import EmbeddingConfig
+            cfg = dataclasses.replace(
+                cfg, embedding=EmbeddingConfig(vocab_size=cfg.vocab_size,
+                                               dim=cfg.d_model))
+        elif o == "embed_sharded_rows" and family == "lm":
+            # token-embedding row gathers via the shard_map path
+            cfg = dataclasses.replace(
+                cfg, embedding=dataclasses.replace(cfg.embedding,
+                                                   sharded_rows=True))
+        elif family == "lm" and o in _LM_CFG_OPTS:
+            cfg = dataclasses.replace(cfg, **_LM_CFG_OPTS[o])
+        elif o == "sharded_embedding" and family == "recsys":
+            cfg = dataclasses.replace(cfg, sharded_embedding=True)
+        else:
+            raise ValueError(f"unknown opt {o!r} for family {family}")
+    if family == "lm":
+        if shape.kind == "train":
+            cell = lm_train_cell(arch, cfg, shape, mesh, multi_pod,
+                                 microbatches=microbatches)
+        elif shape.kind == "prefill":
+            cell = lm_prefill_cell(arch, cfg, shape, mesh, multi_pod)
+        else:
+            cell = lm_decode_cell(arch, cfg, shape, mesh, multi_pod)
+    elif family == "gnn":
+        cell = mace_cell(arch, cfg, shape, mesh, multi_pod)
+    elif family == "recsys":
+        if shape.kind == "rec_train":
+            cell = recsys_train_cell(arch, cfg, shape, mesh, multi_pod)
+        elif shape.kind == "rec_serve":
+            cell = recsys_serve_cell(arch, cfg, shape, mesh, multi_pod)
+        else:
+            cell = recsys_retrieval_cell(arch, cfg, shape, mesh, multi_pod)
+    else:
+        raise ValueError(family)
+    cell.note += note_extra
+    return cell

@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+The XLA_FLAGS line above MUST run before any jax import (jax locks the
+device count on first init) — which is why this module must never be
+imported by anything that already initialized jax.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ARCHS, SHAPE_SKIPS, shapes_for
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analyze, terms_from_hlo
+
+
+def run_cell(arch: str, shape, mesh, multi_pod: bool,
+             verbose: bool = True, opts=()) -> dict:
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, multi_pod, opts=tuple(opts))
+    jit_fn = jax.jit(cell.fn,
+                     in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate)
+    with mesh:
+        lowered = jit_fn.lower(*cell.args)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()          # raw XLA (scan bodies x1)
+    hc = analyze(compiled.as_text())         # loop-weighted
+    coll_kinds = hc.collective_by_kind
+    counts = hc.collective_counts
+    terms = terms_from_hlo(hc, mesh.size, cell.model_flops)
+    if hc.warnings:
+        print(f"  [hlo warnings] {hc.warnings[:3]}")
+
+    row = {
+        "arch": arch, "shape": shape.name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "note": cell.note,
+        "opts": ",".join(opts),
+        "compile_s": round(t1 - t0, 1),
+        # memory (per device)
+        "args_gb": getattr(mem, "argument_size_in_bytes", 0) / 1e9,
+        "out_gb": getattr(mem, "output_size_in_bytes", 0) / 1e9,
+        "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 1e9,
+        "peak_gb": (getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0)
+                    + getattr(mem, "output_size_in_bytes", 0)) / 1e9,
+        # roofline terms (per-device partitioned module, loop-weighted)
+        "flops": terms.hlo_flops,
+        "bytes": terms.hlo_bytes,
+        "xla_raw_flops": float(cost.get("flops", 0.0)),
+        "coll_bytes": terms.collective_bytes,
+        "coll_kinds": coll_kinds,
+        "coll_counts": counts,
+        "compute_ms": terms.compute_s * 1e3,
+        "memory_ms": terms.memory_s * 1e3,
+        "collective_ms": terms.collective_s * 1e3,
+        "dominant": terms.dominant,
+        "model_flops": cell.model_flops,
+        "useful_frac": terms.useful_fraction,
+        "roofline_frac": terms.roofline_fraction,
+    }
+    if verbose:
+        uf = row["useful_frac"]
+        rf = row["roofline_frac"]
+        print(f"[{arch} x {shape.name}] {cell.note}")
+        print(f"  compile {row['compile_s']}s | per-dev args "
+              f"{row['args_gb']:.2f} GB, temps {row['temp_gb']:.2f} GB, "
+              f"peak {row['peak_gb']:.2f} GB")
+        print(f"  terms ms: compute {row['compute_ms']:.3f} | memory "
+              f"{row['memory_ms']:.3f} | collective "
+              f"{row['collective_ms']:.3f}  -> {row['dominant']}-bound")
+        print(f"  collectives: {counts}")
+        print(f"  useful_frac {uf if uf is None else round(uf, 3)} | "
+              f"roofline_frac {rf if rf is None else round(rf, 3)}")
+        sys.stdout.flush()
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None, help="append rows to this file")
+    ap.add_argument("--opt", default="",
+                    help="comma-separated §Perf optimizations, e.g. "
+                         "moe_shard_map,remat_group,microbatch2")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opt.split(",") if o)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [(make_production_mesh(multi_pod=False), False),
+                  (make_production_mesh(multi_pod=True), True)]
+    else:
+        meshes = [(make_production_mesh(multi_pod=args.multi_pod),
+                   args.multi_pod)]
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in shapes_for(arch):
+                skip = SHAPE_SKIPS.get((arch, shape.name))
+                if skip:
+                    print(f"[{arch} x {shape.name}] SKIPPED: {skip}")
+                    continue
+                cells.append((arch, shape))
+    else:
+        assert args.arch, "--arch or --all required"
+        for shape in shapes_for(args.arch):
+            if args.shape and shape.name != args.shape:
+                continue
+            skip = SHAPE_SKIPS.get((args.arch, shape.name))
+            if skip:
+                print(f"[{args.arch} x {shape.name}] SKIPPED: {skip}")
+                continue
+            cells.append((args.arch, shape))
+
+    rows, failures = [], []
+    for mesh, multi_pod in meshes:
+        print(f"=== mesh {mesh.devices.shape} "
+              f"({'multi-pod' if multi_pod else 'single-pod'}) ===")
+        for arch, shape in cells:
+            try:
+                rows.append(run_cell(arch, shape, mesh, multi_pod,
+                                     opts=opts))
+            except Exception:
+                failures.append((arch, shape.name, multi_pod))
+                print(f"[{arch} x {shape.name}] FAILED")
+                traceback.print_exc()
+                sys.stdout.flush()
+
+    if args.json:
+        existing = []
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                existing = json.load(f)
+        with open(args.json, "w") as f:
+            json.dump(existing + rows, f, indent=1, default=str)
+        print(f"wrote {len(rows)} rows -> {args.json}")
+
+    print(f"\n{len(rows)} cells OK, {len(failures)} failed")
+    for f_ in failures:
+        print("  FAILED:", f_)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

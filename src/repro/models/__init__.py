@@ -1,0 +1,2 @@
+"""Model zoo: LM family, MACE GNN, recsys rankers/retrievers, and the
+paper's backbone recommenders (GMF, NeuMF, SASRec)."""

@@ -1,0 +1,4 @@
+"""Equivariant GNN family: MACE (higher-order E(3)-ACE message passing).
+Message passing is built on jax.ops.segment_sum over an edge index —
+JAX has no sparse-matrix message passing, so the scatter path IS part
+of the system (kernel_taxonomy §B.3)."""

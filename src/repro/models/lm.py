@@ -1,0 +1,523 @@
+"""Decoder-only LM family covering the five assigned architectures.
+
+Design notes (DESIGN.md §5):
+
+* Layers are **stacked** and driven by ``lax.scan`` so the HLO stays
+  small at 512-device lowering.  Sliding-window size and RoPE theta are
+  *traced per-layer scalars*, letting local and global layers share one
+  scan body.
+* gemma3's 5:1 local:global pattern gets a dedicated "pattern" layout —
+  groups of (p locals + 1 global) scanned together — which is what
+  makes the **split KV cache** possible: local layers keep a
+  window-sized ring buffer, global layers a full-length cache.  With
+  ``split_local_global_cache=False`` the same weights run with one
+  uniform max-length cache (the baseline the §Perf log climbs from).
+* The token-embedding table goes through ``repro.core`` — swapping
+  full ↔ DPQ ↔ MGQE is a config change (the paper's claim).
+* Vocab softmax is chunked over the sequence with remat so the
+  (B, S, 262k) logits tensor never materializes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core import Embedding
+from repro.nn import attention as attn
+from repro.nn import initializers as init
+from repro.nn import moe as moe_lib
+from repro.nn.mlp import glu_ffn, glu_ffn_init
+from repro.nn.norm import rms_norm, rms_norm_init
+from repro.nn.rope import apply_rope
+
+
+# ----------------------------------------------------------------------
+# layer plan: per-layer (window, theta)
+# ----------------------------------------------------------------------
+
+def layer_windows(cfg: LMConfig, max_seq: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(windows (L,), thetas (L,)) for the uniform layout.
+
+    Pattern models: layer i is global iff (i % (p+1)) == p.
+    Uniform SWA models (mixtral): every layer windowed.
+    """
+    n = cfg.num_layers
+    if cfg.is_pattern:
+        p = cfg.local_global_pattern
+        is_global = (jnp.arange(n) % (p + 1)) == p
+        win = jnp.where(is_global, attn.FULL_WINDOW,
+                        jnp.int32(cfg.sliding_window))
+        theta = jnp.where(is_global, cfg.rope_theta_global, cfg.rope_theta)
+        return win.astype(jnp.int32), theta.astype(jnp.float32)
+    if cfg.sliding_window is not None:
+        win = jnp.full((n,), cfg.sliding_window, jnp.int32)
+    else:
+        win = jnp.full((n,), attn.FULL_WINDOW, jnp.int32)
+    theta = jnp.full((n,), cfg.rope_theta, jnp.float32)
+    return win, theta
+
+
+def cache_len_for_layer(cfg: LMConfig, window: int, max_seq: int) -> int:
+    """Slots a layer's decode cache needs (static python int)."""
+    if window >= max_seq:
+        return max_seq
+    return window
+
+
+# ----------------------------------------------------------------------
+# single layer
+# ----------------------------------------------------------------------
+
+def _layer_init(key, cfg: LMConfig, dtype=jnp.float32) -> dict:
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko, kf, l1, l2 = jax.random.split(key, 7)
+    s = cfg.d_model ** -0.5
+    p = {
+        "wq": init.normal(kq, (cfg.d_model, cfg.num_heads * hd), s, dtype),
+        "wk": init.normal(kk, (cfg.d_model, cfg.num_kv_heads * hd), s, dtype),
+        "wv": init.normal(kv, (cfg.d_model, cfg.num_kv_heads * hd), s, dtype),
+        "wo": init.normal(ko, (cfg.num_heads * hd, cfg.d_model),
+                          (cfg.num_heads * hd) ** -0.5, dtype),
+        "ln1": rms_norm_init(cfg.d_model, dtype),
+        "ln2": rms_norm_init(cfg.d_model, dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_lib.moe_init(kf, cfg.d_model, cfg.d_ff,
+                                    cfg.num_experts, dtype)
+    else:
+        p["ffn"] = glu_ffn_init(kf, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _qkv(p, x, cfg: LMConfig):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, cfg.num_heads, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def _ffn_block(p, x, cfg: LMConfig):
+    if cfg.is_moe:
+        # grouped shard_map dispatch for full sequences (train/prefill);
+        # decode (S == 1) keeps the mesh-agnostic global formulation
+        if cfg.moe_shard_map and x.shape[1] > 1:
+            return moe_lib.moe_ffn_sharded(
+                p["moe"], x, top_k=cfg.num_experts_per_tok,
+                capacity_factor=cfg.moe_capacity_factor)
+        return moe_lib.moe_ffn(p["moe"], x, top_k=cfg.num_experts_per_tok,
+                               capacity_factor=cfg.moe_capacity_factor)
+    return glu_ffn(p["ffn"], x, act=cfg.act), jnp.float32(0.0)
+
+
+def layer_forward(p: dict, x: jax.Array, positions: jax.Array,
+                  window, theta, cfg: LMConfig,
+                  collect_kv: bool = False):
+    """Full-sequence layer (train / prefill).
+
+    Returns (y, aux) or (y, aux, (k, v)) when collect_kv.
+    """
+    h = rms_norm(p["ln1"], x)
+    q, k, v = _qkv(p, h, cfg)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    if cfg.attn_kv_repeat and cfg.num_kv_heads < cfg.num_heads:
+        g = cfg.num_heads // cfg.num_kv_heads
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    s = x.shape[1]
+    impl = cfg.attention_impl
+    if impl == "auto":
+        # dense materializes (Sq, Skv) f32 scores per head — only safe
+        # for short sequences; chunked streams KV blocks (online softmax)
+        impl = "dense" if s <= 1024 else "chunked"
+    if impl == "dense":
+        o = attn.dense_attention(q, k, v, positions, positions, window)
+    else:
+        o = attn.chunked_attention(q, k, v, positions, positions, window,
+                                   block=cfg.attention_block)
+    x = x + (o.reshape(x.shape[0], s, -1) @ p["wo"].astype(x.dtype))
+    h2 = rms_norm(p["ln2"], x)
+    f, aux = _ffn_block(p, h2, cfg)
+    y = x + f
+    if collect_kv:
+        return y, aux, (k, v)
+    return y, aux
+
+
+def layer_decode(p: dict, x: jax.Array, pos, window, theta,
+                 k_cache, v_cache, kpos_cache, cfg: LMConfig):
+    """One-token layer step.  x: (B, 1, d).  Returns (y, new caches)."""
+    h = rms_norm(p["ln1"], x)
+    q, k, v = _qkv(p, h, cfg)
+    pos_arr = jnp.reshape(pos, (1,))
+    q = apply_rope(q, pos_arr, theta)
+    k = apply_rope(k, pos_arr, theta)     # rotate BEFORE caching
+    k_cache, v_cache, kpos_cache = attn.cache_update(
+        k_cache, v_cache, kpos_cache, k, v, pos)
+    o = attn.decode_attention(q, k_cache, v_cache, kpos_cache, window)
+    x = x + (o.reshape(x.shape[0], 1, -1) @ p["wo"].astype(x.dtype))
+    h2 = rms_norm(p["ln2"], x)
+    f, _ = _ffn_block(p, h2, cfg)
+    return x + f, k_cache, v_cache, kpos_cache
+
+
+# ----------------------------------------------------------------------
+# model init
+# ----------------------------------------------------------------------
+
+def _stack_init(key, cfg: LMConfig, n: int, dtype) -> dict:
+    keys = jax.random.split(key, max(n, 1))
+    return jax.vmap(lambda k: _layer_init(k, cfg, dtype))(keys[:n]) if n \
+        else None
+
+
+def model_init(key, cfg: LMConfig, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    k_emb, k_layers, k_head, k_norm = jax.random.split(key, 4)
+    emb = Embedding(cfg.embedding)
+    params = {
+        "embed": emb.init(k_emb, dtype=dtype),
+        "final_norm": rms_norm_init(cfg.d_model, dtype),
+        "lm_head": init.normal(k_head, (cfg.d_model, cfg.vocab_size),
+                               cfg.d_model ** -0.5, dtype),
+    }
+    if cfg.is_pattern:
+        p = cfg.local_global_pattern
+        g = cfg.num_layers // (p + 1)
+        r = cfg.num_layers % (p + 1)
+        kl, kg, kr = jax.random.split(k_layers, 3)
+        loc = _stack_init(kl, cfg, g * p, dtype)
+        params["loc"] = jax.tree.map(
+            lambda a: a.reshape((g, p) + a.shape[1:]), loc)
+        params["glob"] = _stack_init(kg, cfg, g, dtype)
+        if r:
+            params["rem"] = _stack_init(kr, cfg, r, dtype)
+    else:
+        params["layers"] = _stack_init(k_layers, cfg, cfg.num_layers, dtype)
+    return params
+
+
+# ----------------------------------------------------------------------
+# forward trunk (train / prefill)
+# ----------------------------------------------------------------------
+
+def forward(params: dict, tokens: jax.Array, cfg: LMConfig,
+            collect_kv: bool = False,
+            embed_artifact: Optional[dict] = None):
+    """tokens (B, S) -> (hidden (B, S, d), aux, kv_stacks | None).
+
+    kv_stacks (when collect_kv): dict of per-stack (k, v) arrays in the
+    same layout as the decode cache, used by prefill.
+
+    embed_artifact: serving-time quantized embedding (codes+centroids);
+    when given, the full table in params is never touched (paper Fig 1).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    emb = Embedding(cfg.embedding)
+    if embed_artifact is not None:
+        x = emb.serve(embed_artifact, tokens)
+        aux_emb = jnp.float32(0.0)
+    else:
+        x, aux_emb = emb.apply(params["embed"], tokens)
+    x = x.astype(dtype) * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    aux = jnp.float32(0.0) + aux_emb
+
+    group_remat = (cfg.remat and cfg.remat_granularity == "group"
+                   and not collect_kv)
+
+    def make_body(collect):
+        def body(carry, xs):
+            x, aux = carry
+            p, window, theta = xs
+            if collect:
+                y, a, kv = layer_forward(p, x, positions, window, theta, cfg,
+                                         collect_kv=True)
+                return (y, aux + a), kv
+            y, a = layer_forward(p, x, positions, window, theta, cfg)
+            return (y, aux + a), None
+        if cfg.remat and not group_remat:
+            return jax.checkpoint(body)
+        return body
+
+    kv_out = {}
+    if cfg.is_pattern:
+        p_ = cfg.local_global_pattern
+        g = cfg.num_layers // (p_ + 1)
+        r = cfg.num_layers % (p_ + 1)
+        w_loc = jnp.int32(cfg.sliding_window)
+        w_glob = attn.FULL_WINDOW
+        th_loc = jnp.float32(cfg.rope_theta)
+        th_glob = jnp.float32(cfg.rope_theta_global)
+
+        def group_body(carry, xs):
+            loc_p, glob_p = xs
+            n_loc = p_
+            carry, loc_kv = jax.lax.scan(make_body(collect_kv), carry,
+                                         (loc_p,
+                                          jnp.full((n_loc,), w_loc),
+                                          jnp.full((n_loc,), th_loc)))
+            carry, glob_kv = make_body(collect_kv)(carry,
+                                                   (glob_p, w_glob, th_glob))
+            return carry, (loc_kv, glob_kv)
+
+        if group_remat:
+            # checkpoint at group granularity: only G group-boundary
+            # activations are saved; each group (p locals + 1 global)
+            # recomputes during its backward
+            group_body = jax.checkpoint(group_body)
+        (x, aux), kvs = jax.lax.scan(group_body, (x, aux),
+                                     (params["loc"], params["glob"]))
+        if collect_kv:
+            kv_out["loc"] = kvs[0]      # (G, p, B, S, kv, hd) k & v
+            kv_out["glob"] = kvs[1]     # (G, B, S, kv, hd)
+        if r:
+            (x, aux), rem_kv = jax.lax.scan(
+                make_body(collect_kv), (x, aux),
+                (params["rem"], jnp.full((r,), w_loc),
+                 jnp.full((r,), th_loc)))
+            if collect_kv:
+                kv_out["rem"] = rem_kv
+    else:
+        windows, thetas = layer_windows(cfg, s)
+        if group_remat:
+            blk = cfg.remat_block or max(
+                1, int(round(cfg.num_layers ** 0.5)))
+            while cfg.num_layers % blk:
+                blk -= 1
+            n_grp = cfg.num_layers // blk
+            stacked = jax.tree.map(
+                lambda a: a.reshape((n_grp, blk) + a.shape[1:]),
+                params["layers"])
+            w2 = windows.reshape(n_grp, blk)
+            t2 = thetas.reshape(n_grp, blk)
+
+            @jax.checkpoint
+            def blk_body(carry, xs):
+                p_grp, w_grp, th_grp = xs
+                carry, _ = jax.lax.scan(make_body(False), carry,
+                                        (p_grp, w_grp, th_grp))
+                return carry, None
+
+            (x, aux), _ = jax.lax.scan(blk_body, (x, aux),
+                                       (stacked, w2, t2))
+            kvs = None
+        else:
+            (x, aux), kvs = jax.lax.scan(make_body(collect_kv), (x, aux),
+                                         (params["layers"], windows, thetas))
+        if collect_kv:
+            kv_out["layers"] = kvs
+
+    x = rms_norm(params["final_norm"], x)
+    return x, aux, (kv_out if collect_kv else None)
+
+
+# ----------------------------------------------------------------------
+# loss (chunked vocab softmax with remat)
+# ----------------------------------------------------------------------
+
+def chunked_xent(h: jax.Array, labels: jax.Array, w_head: jax.Array,
+                 chunk: int) -> jax.Array:
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    h_c = h.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    y_c = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(args):
+        h_i, y_i = args
+        logits = jnp.einsum("bcd,dv->bcv", h_i, w_head.astype(h_i.dtype),
+                            preferred_element_type=jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via a row gather of W^T — take_along_axis on the
+        # vocab-sharded logits would all-gather the full (b, c, V) tensor
+        w_y = jnp.take(w_head.T, y_i, axis=0)           # (b, c, d)
+        gold = jnp.sum(h_i * w_y.astype(h_i.dtype),
+                       axis=-1).astype(jnp.float32)
+        return jnp.sum(logz - gold)
+
+    losses = jax.lax.map(one, (h_c, y_c))
+    return jnp.sum(losses) / (b * s)
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig) -> Tuple[jax.Array, dict]:
+    h, aux, _ = forward(params, batch["tokens"], cfg)
+    xent = chunked_xent(h, batch["labels"], params["lm_head"], cfg.xent_chunk)
+    loss = xent + 0.01 * aux
+    return loss, {"loss": loss, "xent": xent, "aux": aux}
+
+
+# ----------------------------------------------------------------------
+# serving: prefill + decode
+# ----------------------------------------------------------------------
+
+def _empty_like_cache(k: jax.Array):
+    return jnp.full(k.shape[:-2] + (k.shape[-2],), -1, jnp.int32)
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: LMConfig,
+            max_seq: Optional[int] = None,
+            embed_artifact: Optional[dict] = None):
+    """Returns (cache pytree, last-token logits).
+
+    max_seq: decode context budget the cache must hold (>= prompt
+    length).  Defaults to the prompt length, i.e. a cache with no
+    headroom — callers that decode further must size it explicitly.
+    """
+    h, _, kvs = forward(params, tokens, cfg, collect_kv=True,
+                        embed_artifact=embed_artifact)
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    max_seq = max_seq or s
+
+    def to_cache(k, v, cache_len):
+        # vmap cache_from_prefill over leading stack dims
+        fn = functools.partial(attn.cache_from_prefill, kpos=positions,
+                               cache_len=cache_len)
+        for _ in range(k.ndim - 4):
+            fn = jax.vmap(fn)
+        return fn(k, v)
+
+    cache = {"pos": jnp.int32(s)}
+    if cfg.is_pattern and cfg.split_local_global_cache:
+        w = cfg.sliding_window
+        for name, clen in (("loc", w), ("glob", max_seq), ("rem", w)):
+            if name in kvs:
+                k, v = kvs[name]
+                cache[name] = to_cache(k, v, min(clen, max_seq))
+    elif cfg.is_pattern:
+        clen = max_seq
+        for name in ("loc", "glob", "rem"):
+            if name in kvs:
+                k, v = kvs[name]
+                cache[name] = to_cache(k, v, clen)
+    else:
+        k, v = kvs["layers"]
+        clen = cache_len_for_layer(
+            cfg, cfg.sliding_window or (1 << 30), max_seq)
+        cache["layers"] = to_cache(k, v, clen)
+
+    logits = (h[:, -1] @ params["lm_head"].astype(h.dtype)
+              ).astype(jnp.float32)
+    return cache, logits
+
+
+def make_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    """Allocate an empty decode cache (also used as a ShapeDtypeStruct
+    template by the dry-run)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+
+    def zeros(lead, clen):
+        k = jnp.zeros(lead + (batch, clen, kv, hd), dtype)
+        v = jnp.zeros(lead + (batch, clen, kv, hd), dtype)
+        kp = jnp.full(lead + (batch, clen), -1, jnp.int32)
+        return k, v, kp
+
+    cache = {"pos": jnp.int32(0)}
+    if cfg.is_pattern:
+        p = cfg.local_global_pattern
+        g = cfg.num_layers // (p + 1)
+        r = cfg.num_layers % (p + 1)
+        if cfg.split_local_global_cache:
+            w = min(cfg.sliding_window, max_seq)
+            cache["loc"] = zeros((g, p), w)
+            cache["glob"] = zeros((g,), max_seq)
+            if r:
+                cache["rem"] = zeros((r,), w)
+        else:
+            cache["loc"] = zeros((g, p), max_seq)
+            cache["glob"] = zeros((g,), max_seq)
+            if r:
+                cache["rem"] = zeros((r,), max_seq)
+    else:
+        clen = cache_len_for_layer(
+            cfg, cfg.sliding_window or (1 << 30), max_seq)
+        cache["layers"] = zeros((cfg.num_layers,), clen)
+    return cache
+
+
+def decode_step(params: dict, cache: dict, token: jax.Array, cfg: LMConfig,
+                embed_artifact: Optional[dict] = None):
+    """One decode step.  token (B,) int32 -> (new_cache, logits (B, V)).
+
+    embed_artifact: serving-time embedding (codes + centroids for
+    DPQ/MGQE) — the paper's Figure-1 serving path.  Falls back to the
+    training table when None.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    emb = Embedding(cfg.embedding)
+    if embed_artifact is not None:
+        x = emb.serve(embed_artifact, token)
+    else:
+        x, _ = emb.apply(params["embed"], token)
+    x = (x[:, None, :] * cfg.d_model ** 0.5).astype(dtype)   # (B, 1, d)
+    pos = cache["pos"]
+    new_cache = {"pos": pos + 1}
+
+    def scan_decode(x, stack, caches, window, theta):
+        k, v, kp = caches
+
+        def body(carry, xs):
+            xx = carry
+            p, k_l, v_l, kp_l, w_l, th_l = xs
+            y, k_l, v_l, kp_l = layer_decode(p, xx, pos, w_l, th_l,
+                                             k_l, v_l, kp_l, cfg)
+            return y, (k_l, v_l, kp_l)
+
+        n = k.shape[0]
+        w_arr = jnp.broadcast_to(window, (n,)).astype(jnp.int32)
+        th_arr = jnp.broadcast_to(theta, (n,)).astype(jnp.float32)
+        x, new = jax.lax.scan(body, x, (stack, k, v, kp, w_arr, th_arr))
+        return x, new
+
+    if cfg.is_pattern:
+        w_loc = jnp.int32(cfg.sliding_window)
+        th_loc = jnp.float32(cfg.rope_theta)
+        th_glob = jnp.float32(cfg.rope_theta_global)
+
+        def group_body(x, xs):
+            loc_p, (lk, lv, lkp), glob_p, (gk, gv, gkp) = xs
+            x, new_loc = scan_decode(x, loc_p, (lk, lv, lkp), w_loc, th_loc)
+            x, gk, gv, gkp = layer_decode(glob_p, x, pos, attn.FULL_WINDOW,
+                                          th_glob, gk, gv, gkp, cfg)
+            return x, (new_loc, (gk, gv, gkp))
+
+        x, news = jax.lax.scan(
+            group_body, x,
+            (params["loc"], cache["loc"], params["glob"], cache["glob"]))
+        new_cache["loc"], new_cache["glob"] = news
+        if "rem" in params:
+            x, new_cache["rem"] = scan_decode(x, params["rem"], cache["rem"],
+                                              w_loc, th_loc)
+    else:
+        windows, thetas = layer_windows(cfg, 1 << 30)
+        # clamp windows to this cache's actual length
+        clen = cache["layers"][0].shape[2]
+        windows = jnp.minimum(windows, clen)
+        k, v, kp = cache["layers"]
+
+        def body(carry, xs):
+            xx = carry
+            p, k_l, v_l, kp_l, w_l, th_l = xs
+            y, k_l, v_l, kp_l = layer_decode(p, xx, pos, w_l, th_l,
+                                             k_l, v_l, kp_l, cfg)
+            return y, (k_l, v_l, kp_l)
+
+        x, new = jax.lax.scan(body, x, (params["layers"], k, v, kp,
+                                        windows, thetas))
+        new_cache["layers"] = new
+
+    x = rms_norm(params["final_norm"], x)
+    logits = (x[:, 0] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return new_cache, logits

@@ -1,0 +1,4 @@
+"""RecSys model family: CTR rankers (AutoInt, DeepFM, BST), two-tower
+retrieval, and the paper's backbone recommenders (GMF, NeuMF, SASRec).
+All of them consume embeddings through repro.core — full, DPQ or MGQE
+is a config switch."""

@@ -1,0 +1,246 @@
+"""The paper's three backbone recommenders (§3.2): GMF, NeuMF, SASRec.
+
+Embedding tables (user + item) go through repro.core so every
+compression scheme in §3.4 (FE / LRF / SQ / DPQ / MGQE) is a config
+switch — these are the models the reproduction experiments train.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Embedding, EmbeddingConfig
+from repro.core.partition import frequency_boundaries
+from repro.nn import initializers as init
+from repro.nn.mlp import mlp, mlp_init
+from repro.nn.norm import layer_norm, layer_norm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class BackboneConfig:
+    model: str                  # gmf | neumf | sasrec
+    n_users: int
+    n_items: int
+    dim: int = 64               # paper: d=64 for all methods
+    embed_kind: str = "full"    # fe | lrf | sq | dpq | mgqe ...
+    num_subspaces: int = 8      # D (varied for the size sweep)
+    num_centroids: int = 256    # K=256 (paper default)
+    tier_head_fraction: float = 0.1
+    tier_tail_centroids: int = 64
+    lrf_rank: int = 16
+    sq_bits: int = 8
+    # neumf
+    mlp_dims: Tuple[int, ...] = (128, 64, 32)
+    # sasrec
+    maxlen: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+
+    def emb_config(self, vocab: int) -> EmbeddingConfig:
+        k = self.embed_kind
+        base = dict(vocab_size=vocab, dim=self.dim)
+        if k == "full":
+            return EmbeddingConfig(**base)
+        if k == "lrf":
+            return EmbeddingConfig(kind="lrf", rank=self.lrf_rank, **base)
+        if k == "sq":
+            return EmbeddingConfig(kind="sq", sq_bits=self.sq_bits, **base)
+        if k == "hash":
+            return EmbeddingConfig(kind="hash", hash_buckets=max(16, vocab // 5),
+                                   **base)
+        if k == "dpq":
+            return EmbeddingConfig(kind="dpq", num_subspaces=self.num_subspaces,
+                                   num_centroids=self.num_centroids, **base)
+        if k == "mgqe":
+            bounds = frequency_boundaries(vocab, (self.tier_head_fraction,))
+            return EmbeddingConfig(
+                kind="mgqe", num_subspaces=self.num_subspaces,
+                num_centroids=self.num_centroids, tier_boundaries=bounds,
+                tier_num_centroids=(self.num_centroids,
+                                    self.tier_tail_centroids), **base)
+        raise ValueError(k)
+
+
+# ----------------------------------------------------------------------
+# GMF (He et al. 2017): weighted elementwise product of user/item vecs.
+# ----------------------------------------------------------------------
+
+class GMF:
+    def __init__(self, cfg: BackboneConfig):
+        self.cfg = cfg
+        self.user_emb = Embedding(cfg.emb_config(cfg.n_users))
+        self.item_emb = Embedding(cfg.emb_config(cfg.n_items))
+
+    def init(self, key) -> Dict:
+        ku, ki, kw = jax.random.split(key, 3)
+        return {
+            "user_emb": self.user_emb.init(ku),
+            "item_emb": self.item_emb.init(ki),
+            "w": init.normal(kw, (self.cfg.dim,), self.cfg.dim ** -0.5),
+            "b": jnp.zeros(()),
+        }
+
+    def score(self, params, user_ids, item_ids) -> Tuple[jax.Array, jax.Array]:
+        u, au = self.user_emb.apply(params["user_emb"], user_ids)
+        v, ai = self.item_emb.apply(params["item_emb"], item_ids)
+        return (u * v) @ params["w"] + params["b"], au + ai
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict]:
+        logits, aux = self.score(params, batch["user_ids"],
+                                 batch["item_ids"])
+        bce = _bce(logits, batch["label"])
+        loss = bce + aux
+        return loss, {"loss": loss, "bce": bce, "aux": aux}
+
+    def mse_loss(self, params, batch) -> Tuple[jax.Array, Dict]:
+        """Regression form for the AAR-like relevance task."""
+        pred, aux = self.score(params, batch["user_ids"],
+                               batch["item_ids"])
+        mse = jnp.mean(jnp.square(pred - batch["label"]))
+        loss = mse + aux
+        return loss, {"loss": loss, "mse": mse, "aux": aux}
+
+    def serving_size_bits(self) -> int:
+        return (self.user_emb.serving_size_bits()
+                + self.item_emb.serving_size_bits())
+
+
+# ----------------------------------------------------------------------
+# NeuMF: GMF branch + MLP branch with separate embeddings.
+# ----------------------------------------------------------------------
+
+class NeuMF:
+    def __init__(self, cfg: BackboneConfig):
+        self.cfg = cfg
+        self.user_emb_g = Embedding(cfg.emb_config(cfg.n_users))
+        self.item_emb_g = Embedding(cfg.emb_config(cfg.n_items))
+        self.user_emb_m = Embedding(cfg.emb_config(cfg.n_users))
+        self.item_emb_m = Embedding(cfg.emb_config(cfg.n_items))
+
+    def init(self, key) -> Dict:
+        kug, kig, kum, kim, km, ko = jax.random.split(key, 6)
+        cfg = self.cfg
+        return {
+            "user_emb_g": self.user_emb_g.init(kug),
+            "item_emb_g": self.item_emb_g.init(kig),
+            "user_emb_m": self.user_emb_m.init(kum),
+            "item_emb_m": self.item_emb_m.init(kim),
+            "mlp": mlp_init(km, (2 * cfg.dim,) + tuple(cfg.mlp_dims)),
+            "w_out": init.dense_init(ko, cfg.dim + cfg.mlp_dims[-1], 1),
+        }
+
+    def score(self, params, user_ids, item_ids) -> Tuple[jax.Array, jax.Array]:
+        ug, a1 = self.user_emb_g.apply(params["user_emb_g"], user_ids)
+        ig, a2 = self.item_emb_g.apply(params["item_emb_g"], item_ids)
+        um, a3 = self.user_emb_m.apply(params["user_emb_m"], user_ids)
+        im, a4 = self.item_emb_m.apply(params["item_emb_m"], item_ids)
+        gmf = ug * ig
+        deep = mlp(params["mlp"], jnp.concatenate([um, im], -1), act="relu",
+                   final_act=True)
+        out = init.dense(params["w_out"], jnp.concatenate([gmf, deep], -1))
+        return out[:, 0], a1 + a2 + a3 + a4
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict]:
+        logits, aux = self.score(params, batch["user_ids"],
+                                 batch["item_ids"])
+        bce = _bce(logits, batch["label"])
+        loss = bce + aux
+        return loss, {"loss": loss, "bce": bce, "aux": aux}
+
+    def serving_size_bits(self) -> int:
+        return sum(e.serving_size_bits() for e in
+                   (self.user_emb_g, self.item_emb_g,
+                    self.user_emb_m, self.item_emb_m))
+
+
+# ----------------------------------------------------------------------
+# SASRec (Kang & McAuley 2018): causal self-attention next-item model.
+# ----------------------------------------------------------------------
+
+class SASRec:
+    def __init__(self, cfg: BackboneConfig):
+        self.cfg = cfg
+        # +1 row: id 0 is the padding item; real items are 1..n_items
+        self.item_emb = Embedding(cfg.emb_config(cfg.n_items + 1))
+
+    def init(self, key) -> Dict:
+        ke, kp, kb = jax.random.split(key, 3)
+        cfg = self.cfg
+        blocks = []
+        for k in jax.random.split(kb, cfg.n_blocks):
+            ka, kf, k1, k2 = jax.random.split(k, 4)
+            d = cfg.dim
+            blocks.append({
+                "wq": init.normal(ka, (d, d), d ** -0.5),
+                "wk": init.normal(kf, (d, d), d ** -0.5),
+                "wv": init.normal(k1, (d, d), d ** -0.5),
+                "ln1": layer_norm_init(d),
+                "ln2": layer_norm_init(d),
+                "ffn": mlp_init(k2, (d, d, d)),
+            })
+        return {
+            "item_emb": self.item_emb.init(ke),
+            "pos_emb": init.normal(kp, (cfg.maxlen, cfg.dim), 0.02),
+            "blocks": blocks,
+            "final_ln": layer_norm_init(cfg.dim),
+        }
+
+    def trunk(self, params, seq_ids) -> Tuple[jax.Array, jax.Array]:
+        """seq_ids (B, L) with 0 = pad -> hidden (B, L, d)."""
+        cfg = self.cfg
+        e, aux = self.item_emb.apply(params["item_emb"], seq_ids)
+        x = e * (cfg.dim ** 0.5) + params["pos_emb"][None]
+        pad = (seq_ids == 0)
+        l = seq_ids.shape[1]
+        causal = jnp.tril(jnp.ones((l, l), bool))
+        mask = causal[None] & (~pad)[:, None, :]
+        for p in params["blocks"]:
+            h = layer_norm(p["ln1"], x)
+            q, k, v = h @ p["wq"], h @ p["wk"], h @ p["wv"]
+            scores = jnp.einsum("bqd,bkd->bqk", q, k) * (cfg.dim ** -0.5)
+            scores = jnp.where(mask, scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1)
+            x = x + jnp.einsum("bqk,bkd->bqd", probs, v)
+            x = x + mlp(p["ffn"], layer_norm(p["ln2"], x), act="relu")
+        x = layer_norm(params["final_ln"], x)
+        x = x * (~pad)[..., None]
+        return x, aux
+
+    def score_items(self, params, hidden, item_ids) -> jax.Array:
+        """Dot-product scores of hidden states against given items.
+        hidden (..., d), item_ids (...,) aligned."""
+        e, _ = self.item_emb.apply(params["item_emb"], item_ids)
+        return jnp.sum(hidden * e, axis=-1)
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict]:
+        """batch: seq (B, L), pos (B, L), neg (B, L); 0 = pad.
+
+        SASRec's BCE over (positive, sampled-negative) at every valid
+        position (Kang & McAuley 2018, eq. 6)."""
+        hidden, aux = self.trunk(params, batch["seq"])
+        s_pos = self.score_items(params, hidden, batch["pos"])
+        s_neg = self.score_items(params, hidden, batch["neg"])
+        valid = (batch["pos"] != 0).astype(jnp.float32)
+        bce = (jnp.maximum(s_pos, 0) - s_pos
+               + jnp.log1p(jnp.exp(-jnp.abs(s_pos)))
+               + jnp.maximum(s_neg, 0)
+               + jnp.log1p(jnp.exp(-jnp.abs(s_neg))))
+        bce = jnp.sum(bce * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+        loss = bce + aux
+        return loss, {"loss": loss, "bce": bce, "aux": aux}
+
+    def serving_size_bits(self) -> int:
+        return self.item_emb.serving_size_bits()
+
+
+def _bce(logits, y):
+    y = y.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def make_backbone(cfg: BackboneConfig):
+    return {"gmf": GMF, "neumf": NeuMF, "sasrec": SASRec}[cfg.model](cfg)

@@ -1,0 +1,95 @@
+"""Behavior Sequence Transformer (Alibaba) [arXiv:1905.06874]:
+transformer block over the user's last-N item sequence + target item,
+then MLP.  embed_dim=32, seq_len=20, 1 block, 8 heads, MLP 1024-512-256.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.core import Embedding
+from repro.models.recsys.fields import field_embedding_config
+from repro.nn import initializers as init
+from repro.nn.mlp import mlp, mlp_init
+from repro.nn.norm import layer_norm, layer_norm_init
+
+
+def _block_init(key, d: int, n_heads: int, dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko, k1, k2 = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wq": init.normal(kq, (d, d), s, dtype),
+        "wk": init.normal(kk, (d, d), s, dtype),
+        "wv": init.normal(kv, (d, d), s, dtype),
+        "wo": init.normal(ko, (d, d), s, dtype),
+        "ln1": layer_norm_init(d, dtype),
+        "ln2": layer_norm_init(d, dtype),
+        "ffn": mlp_init(k1, (d, 4 * d, d), dtype=dtype),
+    }
+
+
+def _block(p: dict, x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, d = x.shape
+    hd = d // n_heads
+    h = layer_norm(p["ln1"], x)
+    q = (h @ p["wq"]).reshape(b, s, n_heads, hd)
+    k = (h @ p["wk"]).reshape(b, s, n_heads, hd)
+    v = (h @ p["wv"]).reshape(b, s, n_heads, hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * (hd ** -0.5)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, d)
+    x = x + o @ p["wo"]
+    h2 = layer_norm(p["ln2"], x)
+    return x + mlp(p["ffn"], h2, act="relu")
+
+
+class BST:
+    def __init__(self, cfg: RecsysConfig):
+        self.cfg = cfg
+        self.item_emb = Embedding(field_embedding_config(cfg, cfg.n_items))
+
+    def init(self, key, dtype=jnp.float32) -> Dict:
+        cfg = self.cfg
+        ke, kp, kb, km = jax.random.split(key, 4)
+        s = cfg.seq_len + 1   # history + target
+        blocks = [
+            _block_init(k, cfg.embed_dim, cfg.bst_heads, dtype)
+            for k in jax.random.split(kb, cfg.n_blocks)]
+        return {
+            "item_emb": self.item_emb.init(ke, dtype),
+            "pos_emb": init.normal(kp, (s, cfg.embed_dim), 0.02, dtype),
+            "blocks": blocks,
+            "mlp": mlp_init(km, (s * cfg.embed_dim,) + tuple(cfg.tower_mlp)
+                            + (1,), dtype=dtype),
+        }
+
+    def _trunk(self, params: Dict, seq_e: jax.Array) -> jax.Array:
+        x = seq_e + params["pos_emb"][None]
+        for p in params["blocks"]:
+            x = _block(p, x, self.cfg.bst_heads)
+        b = x.shape[0]
+        return mlp(params["mlp"], x.reshape(b, -1), act="relu")[:, 0]
+
+    def apply(self, params: Dict, batch: Dict) -> Tuple[jax.Array, jax.Array]:
+        """batch: hist_ids (B, L), target_id (B,) -> (logits, aux)."""
+        ids = jnp.concatenate(
+            [batch["hist_ids"], batch["target_id"][:, None]], axis=1)
+        e, aux = self.item_emb.apply(params["item_emb"], ids)
+        return self._trunk(params, e), aux
+
+    def serve(self, params: Dict, artifact: Dict, batch: Dict) -> jax.Array:
+        ids = jnp.concatenate(
+            [batch["hist_ids"], batch["target_id"][:, None]], axis=1)
+        e = self.item_emb.serve(artifact, ids)
+        return self._trunk(params, e)
+
+    def loss(self, params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+        logits, aux = self.apply(params, batch)
+        y = batch["label"].astype(jnp.float32)
+        bce = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                       + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        loss = bce + aux
+        return loss, {"loss": loss, "bce": bce, "aux": aux}

@@ -1,0 +1,4 @@
+"""Pure-JAX neural-net substrate: params are plain pytrees (nested
+dicts), every layer is an ``init``/``apply`` function pair.  No flax —
+the container ships bare jax and the framework owns its full stack.
+"""

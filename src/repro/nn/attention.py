@@ -1,0 +1,175 @@
+"""Grouped-query attention: dense, KV-chunked (online softmax), and
+cached-decode paths; sliding windows expressed as *traced* scalars so
+local and global layers share one scan body.
+
+Shapes (per device, before sharding annotations):
+    q:     (B, Sq, n_q, hd)
+    k, v:  (B, Skv, n_kv, hd)      n_q = n_kv * group
+    out:   (B, Sq, n_q, hd)
+
+Masking model: every query/key carries an integer position.  A key is
+visible iff ``0 <= qpos - kpos < window`` (causal + window in one
+predicate; window = BIG for global layers) and ``kpos >= 0`` (ring-
+buffer slots that haven't been written yet carry kpos = -1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# "infinite" window sentinel — bigger than any sequence we lower.
+FULL_WINDOW = jnp.int32(2 ** 30)
+
+_NEG_INF = -1e30
+
+
+def _split_heads(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, S, n_q, hd) -> (B, S, n_kv, g, hd)."""
+    b, s, n_q, hd = q.shape
+    return q.reshape(b, s, n_kv, n_q // n_kv, hd)
+
+
+def _mask(qpos: jax.Array, kpos: jax.Array, window) -> jax.Array:
+    """Boolean (…, Sq, Skv) visibility mask."""
+    delta = qpos[..., :, None] - kpos[..., None, :]
+    return (delta >= 0) & (delta < window) & (kpos[..., None, :] >= 0)
+
+
+# ----------------------------------------------------------------------
+# Dense path: materializes (Sq, Skv) scores.  Fine for short sequences.
+# ----------------------------------------------------------------------
+
+def dense_attention(q, k, v, qpos, kpos, window=FULL_WINDOW) -> jax.Array:
+    n_kv = k.shape[2]
+    qg = _split_heads(q, n_kv)                          # (B,Sq,kv,g,hd)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    mask = _mask(qpos, kpos, window)                    # (Sq,Skv)
+    scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(q.shape)
+
+
+# ----------------------------------------------------------------------
+# Chunked path: lax.scan over KV blocks with an online softmax — the
+# pure-XLA flash-attention analogue used for 32k prefill / 4k train.
+# ----------------------------------------------------------------------
+
+def chunked_attention(q, k, v, qpos, kpos, window=FULL_WINDOW,
+                      block: int = 1024) -> jax.Array:
+    b, skv, n_kv, hd = k.shape
+    if skv % block != 0:
+        # pad keys/values to a block multiple with invisible slots
+        pad = block - skv % block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+        skv += pad
+    n_blocks = skv // block
+    qg = _split_heads(q, n_kv)
+    scale = q.shape[-1] ** -0.5
+    sq = q.shape[1]
+    g = qg.shape[3]
+
+    kb = k.reshape(b, n_blocks, block, n_kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_blocks, block, n_kv, hd).transpose(1, 0, 2, 3, 4)
+    kposb = kpos.reshape(n_blocks, block)
+
+    # checkpointed body: the (Sq, block) probability tensor is recomputed
+    # in the backward instead of being saved once per KV block — without
+    # this, grad-of-scan stores n_blocks copies of the largest tensor.
+    @jax.checkpoint
+    def body(carry, blk):
+        m, l, acc = carry
+        k_i, v_i, kpos_i = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_i).astype(jnp.float32) * scale
+        mask = _mask(qpos, kpos_i, window)              # (Sq, block)
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(v_i.dtype), v_i).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, n_kv, g, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, kposb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4)                  # (B,Sq,kv,g,hd)
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# Decode path: single query token against a cache.
+# ----------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, kpos, window=FULL_WINDOW
+                     ) -> jax.Array:
+    """q: (B, 1, n_q, hd); caches (B, S, n_kv, hd); kpos (B, S) or (S,)."""
+    n_kv = k_cache.shape[2]
+    qg = _split_heads(q, n_kv)[:, 0]                    # (B,kv,g,hd)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32) * scale
+    if kpos.ndim == 1:
+        kpos = kpos[None]
+    qpos = jnp.max(kpos, axis=-1)                       # newest written token
+    delta = qpos[:, None] - kpos                        # (B, S)
+    mask = (delta >= 0) & (delta < window) & (kpos >= 0)
+    s = jnp.where(mask[:, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# KV cache helpers (ring buffer for windowed layers, linear for global).
+# ----------------------------------------------------------------------
+
+def cache_update(k_cache, v_cache, kpos_cache, k_new, v_new, pos):
+    """Write one decode step's K/V at ring slot ``pos % cache_len``.
+
+    k_cache:(B,S,kv,hd)  k_new:(B,1,kv,hd)  pos: scalar int32 (global
+    token position).  Works for both layer kinds: global layers size
+    the cache at max-seq so the ring never wraps; local layers size it
+    at the window.  kpos_cache (B,S) tracks which token occupies each
+    slot (-1 = empty).
+    """
+    cache_len = k_cache.shape[1]
+    slot = (pos % cache_len).astype(jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    kpos_cache = jax.lax.dynamic_update_slice_in_dim(
+        kpos_cache,
+        jnp.broadcast_to(pos.astype(jnp.int32),
+                         (kpos_cache.shape[0], 1)), slot, axis=1)
+    return k_cache, v_cache, kpos_cache
+
+
+def cache_from_prefill(k, v, kpos, cache_len: int):
+    """Convert prefill K/V (B,S,kv,hd) + positions (S,) into a ring
+    cache of ``cache_len`` slots laid out by ``token % cache_len``."""
+    b, s = k.shape[0], k.shape[1]
+    if s <= cache_len:
+        pad = cache_len - s
+        k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = jnp.pad(kpos, (0, pad), constant_values=-1)
+        # slot of token t is t % cache_len == t while s <= cache_len
+        return k_c, v_c, jnp.broadcast_to(kp[None], (b, cache_len))
+    last_k = k[:, s - cache_len:]
+    last_v = v[:, s - cache_len:]
+    last_p = kpos[s - cache_len:]
+    shift = s % cache_len
+    k_c = jnp.roll(last_k, shift, axis=1)
+    v_c = jnp.roll(last_v, shift, axis=1)
+    p_c = jnp.roll(last_p, shift, axis=0)
+    return k_c, v_c, jnp.broadcast_to(p_c[None], (b, cache_len))

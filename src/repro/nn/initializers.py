@@ -1,0 +1,34 @@
+"""Weight initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal(key, shape, stddev: float, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=dtype) * stddev
+
+
+def lecun_normal(key, shape, fan_in: int, dtype=jnp.float32):
+    return normal(key, shape, fan_in ** -0.5, dtype=dtype)
+
+
+def glorot_uniform(key, shape, fan_in: int, fan_out: int, dtype=jnp.float32):
+    limit = (6.0 / (fan_in + fan_out)) ** 0.5
+    return jax.random.uniform(key, shape, dtype=dtype, minval=-limit,
+                              maxval=limit)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = True,
+               dtype=jnp.float32) -> dict:
+    p = {"w": lecun_normal(key, (d_in, d_out), d_in, dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y

@@ -1,0 +1,50 @@
+"""Dense FFN blocks: GeGLU/SwiGLU (LM) and plain MLP stacks (recsys)."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+
+_ACTS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def glu_ffn_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_ff = d_model ** -0.5, d_ff ** -0.5
+    return {
+        "w_gate": init.normal(k1, (d_model, d_ff), s_in, dtype),
+        "w_up": init.normal(k2, (d_model, d_ff), s_in, dtype),
+        "w_down": init.normal(k3, (d_ff, d_model), s_ff, dtype),
+    }
+
+
+def glu_ffn(params: dict, x: jax.Array, act: str = "gelu") -> jax.Array:
+    fn = _ACTS[act]
+    gate = fn(x @ params["w_gate"].astype(x.dtype))
+    up = x @ params["w_up"].astype(x.dtype)
+    return (gate * up) @ params["w_down"].astype(x.dtype)
+
+
+def mlp_init(key, dims: Sequence[int], *, bias: bool = True,
+             dtype=jnp.float32) -> list:
+    """dims = (in, h1, ..., out)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return [init.dense_init(k, dims[i], dims[i + 1], bias=bias, dtype=dtype)
+            for i, k in enumerate(keys)]
+
+
+def mlp(params: list, x: jax.Array, act: str = "relu",
+        final_act: bool = False) -> jax.Array:
+    for i, layer in enumerate(params):
+        x = init.dense(layer, x)
+        if i < len(params) - 1 or final_act:
+            x = _ACTS[act](x)
+    return x

@@ -1,0 +1,35 @@
+"""Normalization layers (statistics always computed in fp32)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm_init(dim: int, dtype=jnp.float32) -> dict:
+    # scale stored as a zero-centered offset: effective gain = 1 + scale
+    return {"scale": jnp.zeros((dim,), dtype=dtype)}
+
+
+def rms_norm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMS statistics accumulate in fp32 via the einsum accumulator; the
+    (B, S, d) tensors stay in the input dtype.  The f32-materialized
+    variant cost ~200 GB/step of extra HBM traffic on the 4k-train
+    cells (per-device, §Perf A2) for no accuracy benefit at bf16."""
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    inv = ((var + eps) ** -0.5)[..., None].astype(x.dtype)
+    return x * inv * (1.0 + params["scale"].astype(x.dtype))
+
+
+def layer_norm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype=dtype),
+            "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layer_norm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    y = (y * params["scale"].astype(jnp.float32)
+         + params["bias"].astype(jnp.float32))
+    return y.astype(x.dtype)

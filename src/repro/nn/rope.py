@@ -1,0 +1,29 @@
+"""Rotary position embeddings with a *traced* base frequency.
+
+Gemma-3 interleaves local layers (theta=10k) with global layers
+(theta=1M); keeping theta a traced scalar lets a single ``lax.scan``
+body serve both layer types (DESIGN.md §5 — small-HLO layer stacking).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies; theta may be traced."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta) -> jnp.ndarray:
+    """Rotate x (..., seq, heads, head_dim) at integer positions (seq,)
+    or (..., seq).  fp32 math, cast back to x.dtype."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                    # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,399 @@
+"""Loop-weighted cost analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop (lax.scan) body
+ONCE — a 62-layer scanned transformer reports ~1/62 of its real FLOPs.
+This module re-derives the three roofline inputs from
+``compiled.as_text()`` with correct loop multiplicities:
+
+  * parse the module into computations,
+  * build the call graph (fusion ``calls=``, while ``body=/condition=``
+    with ``backend_config known_trip_count``, conditional branches),
+  * weight every op by its computation's multiplicity,
+  * sum:  flops  — dot ops: 2 * |out| * k  (+ |out| per elementwise op)
+          bytes  — operands + outputs of top-level ops (fusion innards
+                   excluded: a fusion reads its operands and writes its
+                   outputs once — XLA's own HBM model)
+          collective_bytes — operand bytes of all-gather / all-reduce /
+                   reduce-scatter / all-to-all / collective-permute
+
+Everything is per-device (the partitioned module).  While loops with
+unknown trip counts are counted once and reported in ``warnings``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# opcodes that move no bytes / do no work
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter",
+             "constant", "after-all", "iota"}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "and",
+    "or", "xor", "not", "select", "compare", "convert", "floor", "ceil",
+    "sign", "cosine", "sine", "clamp", "remainder", "atan2", "expm1",
+    "log1p", "logistic", "round-nearest-even", "cbrt", "erf",
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\],{}]+)\s+"
+    r"([\w\-]+)\((.*)")
+_SHAPE = re.compile(r"^([a-z][a-z0-9]*)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUEB = re.compile(r"true_computation=%?([\w.\-]+)")
+_FALSEB = re.compile(r"false_computation=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^\d]*(\d+)')
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_shape(s: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    m = _SHAPE.match(s)
+    if not m:
+        return None
+    dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
+    return m.group(1), dims
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE.finditer(shape_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(shape_str: str) -> int:
+    m = _SHAPE.match(shape_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape: str           # raw type string ("f32[4,256]{1,0}" or tuple)
+    opcode: str
+    rest: str            # everything after the opening paren
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op]
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, _Computation], str]:
+    comps: Dict[str, _Computation] = {}
+    entry = ""
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = _COMP_HDR.match(stripped)
+                if m:
+                    cur = _Computation(m.group(2), [])
+                    if m.group(1):
+                        entry = m.group(2)
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            cur.ops.append(_Op(m.group(1), m.group(2), m.group(3),
+                               m.group(4)))
+    return comps, entry
+
+
+def _multiplicities(comps: Dict[str, _Computation], entry: str
+                    ) -> Tuple[Dict[str, float], Dict[str, bool], List[str]]:
+    """Computation -> times executed per step; fusion-body flags;
+    warnings for unknown trip counts."""
+    mult: Dict[str, float] = defaultdict(float)
+    is_fusion_body: Dict[str, bool] = defaultdict(bool)
+    warnings: List[str] = []
+    if entry not in comps:
+        return mult, is_fusion_body, ["no entry computation found"]
+    mult[entry] = 1.0
+
+    # breadth-first over the call graph; HLO computation graphs are DAGs
+    order = [entry]
+    seen = {entry}
+    idx = 0
+    while idx < len(order):
+        cname = order[idx]
+        idx += 1
+        cm = mult[cname]
+        for op in comps[cname].ops:
+            callees: List[Tuple[str, float, bool]] = []
+            if op.opcode == "while":
+                b = _BODY.search(op.rest)
+                c = _COND.search(op.rest)
+                t = _TRIP.search(op.rest)
+                n = float(t.group(1)) if t else 1.0
+                if not t:
+                    warnings.append(
+                        f"while {op.name} in {cname}: unknown trip count")
+                if b:
+                    callees.append((b.group(1), cm * n, False))
+                if c:
+                    callees.append((c.group(1), cm * (n + 1), False))
+            elif op.opcode == "fusion":
+                c = _CALLS.search(op.rest)
+                if c:
+                    callees.append((c.group(1), cm, True))
+            elif op.opcode == "conditional":
+                for m_ in (_BRANCHES, ):
+                    br = m_.search(op.rest)
+                    if br:
+                        for b in br.group(1).split(","):
+                            callees.append((b.strip().lstrip("%"), cm, False))
+                tb, fb = _TRUEB.search(op.rest), _FALSEB.search(op.rest)
+                if tb:
+                    callees.append((tb.group(1), cm, False))
+                if fb:
+                    callees.append((fb.group(1), cm, False))
+            elif op.opcode in ("call", "custom-call", "reduce", "sort",
+                               "scatter", "select-and-scatter", "map",
+                               "reduce-window", "all-reduce",
+                               "reduce-scatter"):
+                c = _TO_APPLY.search(op.rest)
+                if c:
+                    # tiny scalar apply fns: count flops, never bytes
+                    callees.append((c.group(1), cm, True))
+            for callee, m_add, fus in callees:
+                if callee not in comps:
+                    continue
+                mult[callee] += m_add
+                if fus:
+                    is_fusion_body[callee] = True
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    return mult, is_fusion_body, warnings
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    collective_bytes: float
+    collective_by_kind: Dict[str, float]
+    collective_counts: Dict[str, int]
+    warnings: List[str]
+    # loop-weighted per-source attribution (jax op_name prefix -> bytes)
+    bytes_by_source: Optional[Dict[str, float]] = None
+    collective_by_source: Optional[Dict[str, float]] = None
+
+
+_METADATA_OPNAME = re.compile(r'op_name="([^"]*)"')
+
+
+def _source_key(line_rest: str, depth: int = 4) -> str:
+    m = _METADATA_OPNAME.search(line_rest)
+    if not m:
+        return "<no-metadata>"
+    parts = m.group(1).split("/")
+    return "/".join(parts[:depth])
+
+
+def _slice_like_computations(comps: Dict[str, _Computation]
+                             ) -> Tuple[set, set]:
+    """Fusion bodies that are just a (dynamic-)slice / dynamic-update-
+    slice (+ bitcasts): their callers must NOT be charged the full
+    operand — a slice reads only its window, an update writes only its
+    window.  Without this, every lax.scan layer-slice counts the whole
+    (L, ...) stack once per iteration (a ~10x bytes overcount for
+    stacked-layer models)."""
+    ds, dus = set(), set()
+    for name, comp in comps.items():
+        real = [op for op in comp.ops
+                if op.opcode not in _FREE_OPS and op.opcode != "copy"]
+        if not real or len(real) > 3:
+            continue
+        kinds = {op.opcode for op in real}
+        if kinds <= {"dynamic-slice", "slice", "reshape", "transpose"} \
+                and ("dynamic-slice" in kinds or "slice" in kinds):
+            ds.add(name)
+        elif "dynamic-update-slice" in kinds and len(kinds) <= 2:
+            dus.add(name)
+    return ds, dus
+
+
+def _convert_only_computations(comps: Dict[str, _Computation]) -> set:
+    """Fusion bodies that only convert dtypes (+ broadcasts of consts).
+    The CPU backend emulates bf16 arithmetic in f32, wrapping most bf16
+    ops in convert fusions that DO NOT EXIST on TPU (bf16 is native);
+    `analyze(..., tpu_fusion=True)` charges them 0 to approximate the
+    TPU memory behaviour (used for the §Roofline calibration note)."""
+    out = set()
+    for name, comp in comps.items():
+        real = [op for op in comp.ops if op.opcode not in _FREE_OPS]
+        if real and {op.opcode for op in real} <= {"convert", "broadcast",
+                                                   "copy"}:
+            out.add(name)
+    return out
+
+
+def _smallest_tensor_operand(op: _Op, defs: Dict[str, str]) -> int:
+    sizes = []
+    for om in _OPERAND.finditer(op.rest.split(")")[0]):
+        b = _shape_bytes(defs.get(om.group(1), ""))
+        if b > 8:                                   # skip scalars/indices
+            sizes.append(b)
+    return min(sizes) if sizes else 0
+
+
+def analyze(text: str, attribute: bool = False,
+            tpu_fusion: bool = False) -> HloCost:
+    comps, entry = _split_computations(text)
+    mult, is_fusion_body, warnings = _multiplicities(comps, entry)
+    ds_comps, dus_comps = _slice_like_computations(comps)
+    cv_comps = _convert_only_computations(comps) if tpu_fusion else set()
+
+    flops = 0.0
+    nbytes = 0.0
+    coll_b: Dict[str, float] = defaultdict(float)
+    coll_n: Dict[str, int] = defaultdict(int)
+    bytes_src: Dict[str, float] = defaultdict(float)
+    coll_src: Dict[str, float] = defaultdict(float)
+
+    for cname, comp in comps.items():
+        cm = mult.get(cname, 0.0)
+        if cm == 0.0:
+            continue
+        fusion_body = is_fusion_body.get(cname, False)
+        # local def map for operand shape resolution
+        defs = {op.name: op.shape for op in comp.ops}
+        # parameters: shapes appear in the header — resolve lazily from
+        # operand uses annotated inline when available (full HLO text
+        # usually annotates operands of collectives; defs cover the rest)
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in _FREE_OPS:
+                continue
+            out_bytes = _shape_bytes(op.shape)
+            out_elems = _numel(op.shape.split("{")[0]) \
+                if not op.shape.startswith("(") else 0
+
+            # ---- flops
+            if oc in ("dot", "dot-general"):
+                k = 1
+                lhs_name_m = _OPERAND.search(op.rest)
+                lc = _LHS_CONTRACT.search(op.rest)
+                if lhs_name_m and lc and lc.group(1):
+                    lhs_shape = defs.get(lhs_name_m.group(1))
+                    if lhs_shape:
+                        p = _parse_shape(lhs_shape)
+                        if p:
+                            dims = p[1]
+                            for di in lc.group(1).split(","):
+                                di = int(di)
+                                if di < len(dims):
+                                    k *= dims[di]
+                flops += cm * 2.0 * out_elems * k
+            elif oc in _ELEMENTWISE or oc in ("reduce", "broadcast",
+                                              "transpose", "reverse",
+                                              "exponential-minus-one"):
+                flops += cm * out_elems
+
+            # ---- bytes (HBM model: top-level ops only)
+            if not fusion_body:
+                callee = None
+                if oc == "fusion":
+                    cmatch = _CALLS.search(op.rest)
+                    callee = cmatch.group(1) if cmatch else None
+                if callee in cv_comps or (tpu_fusion and oc == "convert"):
+                    op_bytes = 0                      # native-bf16 target
+                elif oc in ("dynamic-slice", "slice") or callee in ds_comps:
+                    op_bytes = 2 * out_bytes          # window read + write
+                elif oc == "dynamic-update-slice" or callee in dus_comps:
+                    upd = _smallest_tensor_operand(op, defs)
+                    op_bytes = 2 * (upd or out_bytes)
+                elif oc == "while":
+                    # free: the body's producing ops already count every
+                    # iteration's real traffic; charging the carry tuple
+                    # (which aliases loop-invariant weight stacks) here
+                    # would phantom-count TBs on nested scans
+                    op_bytes = 0
+                else:
+                    in_bytes = 0
+                    # operand list = everything before the first ')'
+                    for om in _OPERAND.finditer(op.rest.split(")")[0]):
+                        shp = defs.get(om.group(1))
+                        if shp:
+                            in_bytes += _shape_bytes(shp)
+                    op_bytes = in_bytes + out_bytes
+                nbytes += cm * op_bytes
+                if attribute:
+                    bytes_src[_source_key(op.rest)] += cm * op_bytes
+
+            # ---- collectives
+            base = oc.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not oc.endswith("-done"):
+                in_b = 0
+                for om in _OPERAND.finditer(op.rest.split(")")[0]):
+                    shp = defs.get(om.group(1))
+                    if shp:
+                        in_b += _shape_bytes(shp)
+                if in_b == 0:
+                    # operand defined in another computation (rare) —
+                    # fall back to output size
+                    in_b = out_bytes
+                coll_b[base] += cm * in_b
+                coll_n[base] += int(cm)
+                if attribute:
+                    coll_src[_source_key(op.rest)] += cm * in_b
+
+    return HloCost(flops=flops, bytes=nbytes,
+                   collective_bytes=float(sum(coll_b.values())),
+                   collective_by_kind=dict(coll_b),
+                   collective_counts=dict(coll_n),
+                   warnings=warnings,
+                   bytes_by_source=dict(bytes_src) if attribute else None,
+                   collective_by_source=dict(coll_src) if attribute else None)
+
+
+# ------------------------------------------------------------------
+# back-compat helpers (earlier interface)
+# ------------------------------------------------------------------
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    c = analyze(hlo_text)
+    return c.collective_bytes, c.collective_by_kind
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    return analyze(hlo_text).collective_counts

@@ -1,0 +1,124 @@
+"""Three-term roofline model for TPU v5e (the target part).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-
+program totals across all devices when compiled under SPMD — cost
+analysis reports the per-device partitioned module, so we scale by the
+device count explicitly where noted).  collective_bytes comes from the
+HLO parser (hlo.py).  The terms are *seconds*; the largest is the
+bottleneck a perfect overlap schedule cannot hide.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+# TPU v5e hardware constants (per chip) — from the assignment spec.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_LINK_BW = 50e9              # bytes/s per link (~, assignment spec)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float            # per-device partitioned-module FLOPs
+    hlo_bytes: float            # per-device bytes accessed
+    collective_bytes: float     # per-device collective operand bytes
+    model_flops: float = 0.0    # 6*N*D useful FLOPs (whole step, global)
+    chips: int = 1
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS / (HLO_FLOPs * chips): how much of the compiled
+        compute is 'useful' — catches remat/redundancy waste."""
+        if not self.model_flops or not self.hlo_flops:
+            return None
+        return self.model_flops / (self.hlo_flops * self.chips)
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """Fraction of the compute roofline the step achieves if it runs
+        exactly at the bound: (useful FLOPs / chips / peak) / bound_s."""
+        if not self.model_flops or self.bound_s <= 0:
+            return None
+        ideal_s = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        return ideal_s / self.bound_s
+
+    def row(self) -> Dict:
+        return {
+            "compute_ms": self.compute_s * 1e3,
+            "memory_ms": self.memory_s * 1e3,
+            "collective_ms": self.collective_s * 1e3,
+            "dominant": self.dominant,
+            "useful_frac": self.useful_fraction,
+            "roofline_frac": self.roofline_fraction,
+        }
+
+
+def terms_from_analysis(cost: Dict, collective_bytes: float, chips: int,
+                        model_flops: float = 0.0) -> RooflineTerms:
+    """cost: compiled.cost_analysis() dict of the per-device partitioned
+    module.  collective_bytes: per-device bytes through collectives.
+
+    NOTE: XLA's cost_analysis counts while (lax.scan) bodies once; for
+    scanned models prefer ``terms_from_hlo`` (loop-weighted).
+    """
+    flops = float(cost.get("flops", 0.0))
+    # bytes accessed: XLA reports 'bytes accessed' plus operand breakdowns
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=nbytes / HBM_BW,
+        collective_s=collective_bytes / ICI_LINK_BW,
+        hlo_flops=flops,
+        hlo_bytes=nbytes,
+        collective_bytes=collective_bytes,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def terms_from_hlo(hlo_cost, chips: int,
+                   model_flops: float = 0.0) -> RooflineTerms:
+    """hlo_cost: roofline.hlo.HloCost of the per-device partitioned
+    module (loop-weighted — the correct path for scanned models)."""
+    return RooflineTerms(
+        compute_s=hlo_cost.flops / PEAK_FLOPS_BF16,
+        memory_s=hlo_cost.bytes / HBM_BW,
+        collective_s=hlo_cost.collective_bytes / ICI_LINK_BW,
+        hlo_flops=hlo_cost.flops,
+        hlo_bytes=hlo_cost.bytes,
+        collective_bytes=hlo_cost.collective_bytes,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+# ----------------------------------------------------------------------
+# MODEL_FLOPS estimates (useful FLOPs per step)
+# ----------------------------------------------------------------------
+
+def lm_train_model_flops(n_params_active: int, tokens: int) -> float:
+    """6*N*D for a train step (fwd 2ND + bwd 4ND)."""
+    return 6.0 * n_params_active * tokens
+
+def lm_forward_model_flops(n_params_active: int, tokens: int) -> float:
+    """2*N*D for inference (prefill: tokens = B*S; decode: tokens = B)."""
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,2 @@
+"""Distribution layer: PartitionSpec rule engine per arch family,
+shard_map helpers (mod-sharded embedding lookup, split-KV decode)."""

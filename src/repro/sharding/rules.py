@@ -1,0 +1,296 @@
+"""PartitionSpec rules, applied by parameter *name* over pytrees.
+
+Rules are keyed on the final path component and specify the spec for
+the TRAILING dims of the leaf; leading stack dims (scan layer stacks,
+pattern groups) are padded with None automatically.  This makes one
+rule table cover the uniform (L, ...) and pattern (G, p, ...) layouts.
+
+Sharding strategy (DESIGN.md §5):
+  * TP over "model": attention projections, FFN hidden, expert dim (or
+    d_ff when experts don't divide), vocab rows + lm_head columns.
+  * DP over ("pod","data"): the batch.
+  * ZeRO-1: Adam moments additionally sharded over "data" on their
+    largest divisible dim (fp32 m/v would not fit replicated per DP
+    rank for the 27B+ archs).
+  * optional FSDP ("fsdp_params"): stacked layer weights also sharded
+    over "data"; lax.scan slices then all-gather one layer at a time.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _pad_spec(spec: Tuple, ndim: int) -> P:
+    """Left-pad a trailing-dims spec with None up to ndim."""
+    pad = ndim - len(spec)
+    assert pad >= 0, (spec, ndim)
+    return P(*((None,) * pad + tuple(spec)))
+
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def spec_tree(template: Any,
+              rules: List[Tuple[str, Callable[[Any], Tuple]]],
+              default: Tuple = ()) -> Any:
+    """Build a PartitionSpec pytree for ``template``.
+
+    rules: list of (regex matched against the full path, fn(leaf) ->
+    trailing-dims spec tuple).  First match wins.
+    """
+    def assign(path, leaf):
+        name = _path_name(path)
+        ndim = len(leaf.shape)
+        for pattern, fn in rules:
+            if re.search(pattern, name):
+                return _pad_spec(tuple(fn(leaf)), ndim)
+        return _pad_spec(tuple(default), ndim)
+
+    return jax.tree_util.tree_map_with_path(assign, template)
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+# ----------------------------------------------------------------------
+# LM rules
+# ----------------------------------------------------------------------
+
+def lm_param_rules(cfg: LMConfig, mesh) -> List:
+    model = mesh.shape["model"]
+    data = "data"
+    fsdp = cfg.fsdp_params
+
+    def maybe_fsdp(spec: Tuple, leaf, fsdp_dim: int) -> Tuple:
+        """Add data-axis sharding on dim ``fsdp_dim`` (within trailing
+        spec) when FSDP is on and the dim divides."""
+        if not fsdp:
+            return spec
+        spec = list(spec)
+        if spec[fsdp_dim] is None and _divides(
+                leaf.shape[len(leaf.shape) - len(spec) + fsdp_dim],
+                mesh.shape["data"]):
+            spec[fsdp_dim] = data
+        return tuple(spec)
+
+    def expert_spec(leaf, transpose: bool):
+        # (E, d, f) or (E, f, d): shard E if divisible, else the ff dim
+        e = leaf.shape[-3]
+        if _divides(e, model):
+            return maybe_fsdp(("model", None, None), leaf, 1)
+        if transpose:                 # (E, f, d)
+            return (None, "model", None)
+        return (None, None, "model")  # (E, d, f)
+
+    rules = [
+        # embedding tables: rows over model
+        (r"embed/emb$", lambda l: ("model", None)),
+        (r"embed/centroids", lambda l: (None, None, None)),
+        (r"embed/u$", lambda l: ("model", None)),
+        (r"embed/v$", lambda l: (None, None)),
+        # attention
+        (r"/wq$", lambda l: maybe_fsdp((None, "model"), l, 0)),
+        # kv-repeat mode: K/V are expanded to full head count inside the
+        # layer, so wk/wv stay replicated (sharding their columns would
+        # split sub-head and force per-layer resharding)
+        (r"/wk$|/wv$", lambda l: maybe_fsdp(
+            (None, None) if cfg.attn_kv_repeat
+            else ((None, "model") if _divides(l.shape[-1], model)
+                  else (None, None)), l, 0)),
+        (r"/wo$", lambda l: maybe_fsdp(("model", None), l, 1)),
+        # dense FFN
+        (r"ffn/w_gate$|ffn/w_up$", lambda l: maybe_fsdp((None, "model"), l, 0)),
+        (r"ffn/w_down$", lambda l: maybe_fsdp(("model", None), l, 1)),
+        # MoE
+        (r"moe/router$", lambda l: (None, None)),
+        (r"moe/w_gate$|moe/w_up$", lambda l: expert_spec(l, False)),
+        (r"moe/w_down$", lambda l: expert_spec(l, True)),
+        # head / norms
+        (r"lm_head$", lambda l: (None, "model")),
+        (r"ln|norm", lambda l: ()),
+    ]
+    return rules
+
+
+def lm_state_specs(cfg: LMConfig, mesh, params_template, opt_template):
+    """(params_spec, opt_spec) — opt moments get ZeRO-1 data sharding."""
+    rules = lm_param_rules(cfg, mesh)
+    p_spec = spec_tree(params_template, rules)
+
+    data_n = mesh.shape["data"]
+
+    def zero1(path, leaf, spec):
+        # moments: add "data" on the first dim where it divides & free
+        if leaf.ndim == 0:
+            return P()
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        used = {a for a in parts if a is not None}
+        if "data" in used:
+            return P(*parts)
+        for i in range(leaf.ndim):
+            if parts[i] is None and _divides(leaf.shape[i], data_n):
+                parts[i] = "data"
+                break
+        return P(*parts)
+
+    def build_opt(opt_t):
+        out = {}
+        for k, v in opt_t.items():
+            if k == "step":
+                out[k] = P()
+            elif k in ("m", "v", "acc", "mom"):
+                is_p = lambda x: isinstance(x, P)
+                flat_p = jax.tree_util.tree_flatten_with_path(v)[0]
+                spec_flat = jax.tree_util.tree_flatten(
+                    p_spec, is_leaf=is_p)[0]
+                specs = []
+                for (path, leaf), sp in zip(flat_p, spec_flat):
+                    specs.append(zero1(path, leaf, tuple(sp)))
+                out[k] = jax.tree_util.tree_unflatten(
+                    jax.tree_util.tree_structure(v), specs)
+            else:
+                out[k] = jax.tree.map(lambda _: P(), v)
+        return out
+
+    return p_spec, build_opt(opt_template)
+
+
+def lm_batch_spec(multi_pod: bool) -> Dict:
+    dp = dp_axes(multi_pod)
+    return {"tokens": P(dp, None), "labels": P(dp, None)}
+
+
+def lm_cache_spec(cfg: LMConfig, batch: int, mesh, multi_pod: bool,
+                  cache_template) -> Any:
+    """Cache sharding: batch over DP when it divides, else the sequence
+    axis (SP for the B=1 long-context cell); kv heads over model when
+    divisible, else sequence over model too."""
+    dp = dp_axes(multi_pod)
+    dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+    model = mesh.shape["model"]
+    kv_ok = _divides(cfg.num_kv_heads, model)
+    b_ok = _divides(batch, dp_n)
+
+    def assign(path, leaf):
+        ndim = len(leaf.shape)
+        if ndim == 0:
+            return P()
+        # cache stacks are (k, v, kpos) tuples: tuple index 2 == kpos
+        # with trailing dims (B, S); k/v trail with (B, S, kv, hd).
+        idx = None
+        for part in reversed(path):
+            if hasattr(part, "idx"):
+                idx = part.idx
+                break
+        is_kv = (idx is None or idx < 2)
+        lead = ndim - (4 if is_kv else 2)
+        parts = [None] * ndim
+        if b_ok:
+            parts[lead] = dp
+            if not kv_ok and is_kv:
+                parts[lead + 1] = "model"      # seq over model
+            elif is_kv and kv_ok:
+                parts[lead + 2] = "model"
+        else:
+            # B=1 (long-context): SP — shard the sequence over DP axes
+            parts[lead + 1] = dp if _divides(leaf.shape[lead + 1], dp_n) \
+                else None
+            if is_kv and kv_ok:
+                parts[lead + 2] = "model"
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(assign, cache_template)
+
+
+# ----------------------------------------------------------------------
+# GNN rules
+# ----------------------------------------------------------------------
+
+def gnn_param_rules(cfg: GNNConfig, mesh) -> List:
+    model = mesh.shape["model"]
+    c_ok = _divides(cfg.d_hidden, model)
+    ch = "model" if c_ok else None
+    return [
+        (r"species_emb$", lambda l: (None, ch)),
+        (r"feat_proj/w$", lambda l: (None, ch)),
+        (r"radial/.*w$", lambda l: ()),          # small MLP: replicate
+        (r"a_mix$|m1$|m2$|m3$", lambda l: (None, ch)),   # (L+1, C, C): shard out-C
+        (r"u2$|u3$", lambda l: (ch, None)),
+        (r"readout", lambda l: ()),
+    ]
+
+
+def gnn_graph_spec(multi_pod: bool) -> Dict:
+    dp = dp_axes(multi_pod)
+    return {
+        "positions": P(dp, None),
+        "species": P(dp),
+        "node_feats": P(dp, None),
+        "edge_index": P(None, dp),
+        "graph_id": P(dp),
+        "labels": P(dp),
+        "energy": P(),
+        "n_graphs": None,
+    }
+
+
+# ----------------------------------------------------------------------
+# RecSys rules
+# ----------------------------------------------------------------------
+
+def recsys_param_rules(cfg: RecsysConfig, mesh) -> List:
+    model = mesh.shape["model"]
+
+    def table_spec(leaf):
+        if leaf.shape[0] >= 16 * model and _divides(leaf.shape[0], model):
+            return ("model", None)
+        return (None, None)
+
+    return [
+        (r"emb$", table_spec),                 # full tables + dpq/mgqe emb
+        (r"centroids", lambda l: ()),
+        (r"codes$", lambda l: table_spec(l)),
+        (r"/u$", table_spec),                  # lrf rows
+        (r"pos_emb$", lambda l: ()),
+        (r"mlp|tower|w_out|blocks|layers|router", lambda l: ()),
+    ]
+
+
+def recsys_batch_spec(batch_dict_template, multi_pod: bool) -> Any:
+    dp = dp_axes(multi_pod)
+
+    def assign(path, leaf):
+        if len(leaf.shape) == 0:
+            return P()
+        return P(*((dp,) + (None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_dict_template)
+
+
+# ----------------------------------------------------------------------
+# generic helpers
+# ----------------------------------------------------------------------
+
+def named(mesh, spec_tree_):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if isinstance(s, P) else P()),
+        spec_tree_, is_leaf=lambda x: isinstance(x, P) or x is None)

@@ -1,0 +1,3 @@
+"""Training substrate: optimizers (built from scratch — the container
+has no optax), LR schedules, sharded checkpointing with auto-resume,
+straggler detection, elastic restore, and gradient compression."""

@@ -1,0 +1,154 @@
+"""Checkpointing built for fault tolerance on many hosts.
+
+Layout:  <dir>/step_<N>/
+             shard_<host>.npz       one file per host (its local arrays)
+             manifest.json          paths, shapes, dtypes, crc32 per array
+             COMMITTED              written last — a step dir without it
+                                    is a torn checkpoint and is ignored
+
+Restore is template-based: the caller supplies a pytree of the right
+structure (from init or jax.eval_shape) and leaves are filled by path.
+That makes restore robust to refactors of pytree container types and
+enables **elastic restore** — arrays are saved unsharded, so a restart
+may use a different mesh/DP-width and simply re-shards on device_put.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree, host_id: int = 0,
+         keep: int = 3) -> str:
+    """Atomic checkpoint write; prunes old steps beyond ``keep``."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+    os.makedirs(tmp_dir, exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(v) for k, v in leaves}
+    shard_path = os.path.join(tmp_dir, f"shard_{host_id}.npz")
+    np.savez(shard_path, **{k.replace("/", "|"): v
+                            for k, v in arrays.items()})
+    manifest = {
+        "step": step,
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                       "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes())}
+                   for k, v in arrays.items()},
+    }
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp_dir, "COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)
+    _prune(ckpt_dir, keep)
+    return step_dir
+
+
+def _prune(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(list_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def list_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "COMMITTED")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _validate(step_dir: str, arrays: Dict[str, np.ndarray]) -> None:
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    for k, meta in manifest["arrays"].items():
+        v = arrays[k]
+        crc = zlib.crc32(np.ascontiguousarray(v).tobytes())
+        if crc != meta["crc32"]:
+            raise IOError(f"checkpoint corruption: crc mismatch for {k}")
+
+
+def restore(ckpt_dir: str, step: int, template, host_id: int = 0,
+            validate: bool = True):
+    """Fill ``template``'s leaves from the checkpoint (by path)."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(step_dir, f"shard_{host_id}.npz")) as z:
+        arrays = {k.replace("|", "/"): z[k] for k in z.files}
+    if validate:
+        _validate(step_dir, arrays)
+    leaves_t = _flatten_with_paths(template)
+    filled = []
+    for key, leaf in leaves_t:
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = arrays[key]
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: ckpt shape {arr.shape} != {want}")
+        filled.append(arr.astype(leaf.dtype))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, filled)
+
+
+def restore_latest(ckpt_dir: str, template, host_id: int = 0):
+    """(tree, step) from the newest *valid* committed checkpoint.
+
+    Falls back to older checkpoints when the newest fails CRC/shape
+    validation (a torn or bit-rotted write must not take the job down —
+    that is the whole point of keeping ``keep`` > 1).
+    Returns (None, -1) when nothing restorable exists.
+    """
+    for step in reversed(list_steps(ckpt_dir)):
+        try:
+            return restore(ckpt_dir, step, template, host_id), step
+        except Exception:                      # corrupt/torn: try older
+            continue
+    return None, -1
+
+
+def elastic_restore(ckpt_dir: str, step: int, template, sharding_tree=None,
+                    host_id: int = 0):
+    """Restore + re-shard onto a (possibly different) mesh: arrays are
+    stored unsharded, so moving from e.g. 256-chip DP=16 to DP=8 is a
+    device_put with the new shardings."""
+    tree = restore(ckpt_dir, step, template, host_id)
+    if sharding_tree is None:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        tree, sharding_tree)

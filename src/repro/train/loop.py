@@ -1,0 +1,74 @@
+"""The training loop: jit'd step, periodic checkpointing, auto-resume,
+straggler monitoring, failure injection (for tests), metric logging.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import TrainState
+from repro.train.resilience import (FailureInjector, StepTimer,
+                                    StragglerDetector)
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    log_every: int = 50
+    ckpt_every: int = 0           # 0 = no checkpointing
+    ckpt_dir: str = ""
+    ckpt_keep: int = 3
+    metrics_hook: Optional[Callable[[int, Dict], None]] = None
+
+
+def fit(state: TrainState,
+        step_fn: Callable,
+        data_iter: Iterator,
+        cfg: LoopConfig,
+        donate: bool = True,
+        injector: Optional[FailureInjector] = None,
+        resume: bool = True) -> (TrainState, List[Dict]):
+    """Runs ``step_fn`` to ``total_steps``; resumes from the newest
+    committed checkpoint in ``ckpt_dir`` when present."""
+    jit_step = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+    start_step = 0
+    if resume and cfg.ckpt_dir:
+        restored, step = ckpt_lib.restore_latest(cfg.ckpt_dir, state)
+        if restored is not None:
+            state = restored
+            start_step = step
+    history: List[Dict] = []
+    timer = StepTimer()
+    detector = StragglerDetector(num_hosts=1)
+
+    for step in range(start_step, cfg.total_steps):
+        batch = next(data_iter)
+        batch = jax.tree.map(lambda x: jax.numpy.asarray(x), batch)
+        timer.start()
+        state, metrics = jit_step(state, batch)
+        if injector is not None:
+            # materialize before the failure point so the checkpoint
+            # below is never torn mid-step
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+            injector.maybe_fail(step)
+        dt = timer.stop()
+        detector.record(0, dt)
+
+        if cfg.ckpt_every and cfg.ckpt_dir \
+                and (step + 1) % cfg.ckpt_every == 0:
+            ckpt_lib.save(cfg.ckpt_dir, step + 1, state, keep=cfg.ckpt_keep)
+
+        if (step + 1) % cfg.log_every == 0 or step == cfg.total_steps - 1:
+            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            m["step"] = step + 1
+            m["step_time_s"] = dt
+            history.append(m)
+            if cfg.metrics_hook:
+                cfg.metrics_hook(step + 1, m)
+    return state, history

@@ -1,0 +1,10 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here — smoke tests run on the
+single real CPU device; multi-device sharding tests spawn subprocesses
+with their own flags (test_sharding.py)."""
+import jax
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,94 @@
+"""Property tests for the attention substrate (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.nn import attention as attn
+from repro.nn.rope import apply_rope
+
+
+@given(
+    s=st.sampled_from([8, 16, 24, 32]),
+    n_kv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2]),
+    window=st.sampled_from([4, 8, 1 << 30]),
+    block=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_chunked_equals_dense_attention(s, n_kv, g, window, block, seed):
+    """Online-softmax KV chunking is exact for every (window, block)."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 3)
+    hd = 8
+    q = jax.random.normal(ks[0], (2, s, n_kv * g, hd))
+    kk = jax.random.normal(ks[1], (2, s, n_kv, hd))
+    v = jax.random.normal(ks[2], (2, s, n_kv, hd))
+    pos = jnp.arange(s)
+    dense = attn.dense_attention(q, kk, v, pos, pos, jnp.int32(window))
+    chunk = attn.chunked_attention(q, kk, v, pos, pos, jnp.int32(window),
+                                   block=block)
+    np.testing.assert_allclose(np.asarray(dense, np.float32),
+                               np.asarray(chunk, np.float32),
+                               rtol=2e-4, atol=2e-5)
+
+
+@given(seed=st.integers(0, 10_000),
+       theta=st.sampled_from([1e4, 1e6]))
+@settings(max_examples=20, deadline=None)
+def test_rope_preserves_norm_and_identity_at_zero(seed, theta):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (1, 4, 2, 16))
+    pos = jnp.arange(4)
+    y = apply_rope(x, pos, jnp.float32(theta))
+    # rotation preserves per-pair norms -> whole-vector norm
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # position 0 -> identity
+    np.testing.assert_allclose(np.asarray(y[:, 0]), np.asarray(x[:, 0]),
+                               atol=1e-6)
+
+
+@given(seed=st.integers(0, 10_000),
+       cache_len=st.sampled_from([4, 8]),
+       n_steps=st.integers(1, 12))
+@settings(max_examples=20, deadline=None)
+def test_ring_cache_holds_last_window(seed, cache_len, n_steps):
+    """After n writes, the ring cache holds exactly the last
+    min(n, cache_len) tokens at slot token%cache_len."""
+    k_cache = jnp.zeros((1, cache_len, 1, 4))
+    v_cache = jnp.zeros((1, cache_len, 1, 4))
+    kpos = jnp.full((1, cache_len), -1, jnp.int32)
+    rng = jax.random.PRNGKey(seed)
+    written = {}
+    for t in range(n_steps):
+        rng, sub = jax.random.split(rng)
+        k_new = jax.random.normal(sub, (1, 1, 1, 4))
+        k_cache, v_cache, kpos = attn.cache_update(
+            k_cache, v_cache, kpos, k_new, k_new, jnp.int32(t))
+        written[t] = np.asarray(k_new[0, 0])
+    live = [t for t in range(n_steps) if t >= n_steps - cache_len]
+    for t in live:
+        slot = t % cache_len
+        assert int(kpos[0, slot]) == t
+        np.testing.assert_allclose(np.asarray(k_cache[0, slot]),
+                                   written[t], atol=1e-6)
+
+
+@given(seed=st.integers(0, 10_000), s=st.sampled_from([6, 10, 16]),
+       cache_len=st.sampled_from([4, 8, 16]))
+@settings(max_examples=20, deadline=None)
+def test_cache_from_prefill_layout(seed, s, cache_len):
+    """cache_from_prefill lays token t at slot t % cache_len and keeps
+    only the newest cache_len tokens."""
+    k = jax.random.normal(jax.random.PRNGKey(seed), (1, s, 1, 4))
+    pos = jnp.arange(s)
+    k_c, v_c, kp = attn.cache_from_prefill(k, k, pos, cache_len)
+    assert k_c.shape[1] == cache_len
+    for t in range(max(0, s - cache_len), s):
+        slot = t % cache_len
+        assert int(kp[0, slot]) == t
+        np.testing.assert_allclose(np.asarray(k_c[0, slot]),
+                                   np.asarray(k[0, t]), atol=1e-6)

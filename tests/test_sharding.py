@@ -1,0 +1,215 @@
+"""Multi-device sharding tests.
+
+These need >1 XLA device, so they run in a subprocess with
+``--xla_force_host_platform_device_count=8`` (the main test process
+keeps the default single device — smoke tests must see 1 device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=520)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_debug_mesh_and_param_specs():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_debug_mesh
+        from repro.sharding import rules
+        from repro.configs.registry import get_arch
+        from repro.models import lm
+
+        mesh = make_debug_mesh(2, 4)
+        assert mesh.shape == {"data": 2, "model": 4}
+        _, cfg = get_arch("stablelm-3b", smoke=True)
+        params = lm.model_init(jax.random.PRNGKey(0), cfg)
+        spec = rules.spec_tree(params, rules.lm_param_rules(cfg, mesh))
+        # vocab rows sharded over model
+        assert tuple(spec["embed"]["emb"])[-2:] == ("model", None)
+        # lm head columns over model
+        assert tuple(spec["lm_head"])[-1] == "model"
+        print("OK")
+    """)
+
+
+def test_sharded_train_step_matches_single_device():
+    """One train step under a (2, 4) mesh must match the unsharded step
+    bit-for-bit (up to float tolerance) — the SPMD-correctness test."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np, functools
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_debug_mesh
+        from repro.sharding import rules
+        from repro.configs.registry import get_arch
+        from repro.models import lm
+        from repro.train import optimizer as opt_lib
+        from repro.train.optimizer import TrainState
+
+        _, cfg = get_arch("stablelm-3b", smoke=True)
+        ocfg = opt_lib.OptimizerConfig(kind="adamw", lr=1e-3)
+        params = lm.model_init(jax.random.PRNGKey(0), cfg)
+        state = TrainState.create(ocfg, params)
+        step = opt_lib.make_step_fn(
+            ocfg, functools.partial(lm.loss_fn, cfg=cfg))
+        k = jax.random.PRNGKey(1)
+        toks = jax.random.randint(k, (8, 33), 0, cfg.vocab_size)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+        ref_state, ref_metrics = jax.jit(step)(state, batch)
+
+        mesh = make_debug_mesh(2, 4)
+        p_spec, o_spec = rules.lm_state_specs(
+            cfg, mesh, state.params, state.opt_state)
+        named = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s if isinstance(s, P) else P()),
+            t, is_leaf=lambda x: isinstance(x, P) or x is None)
+        st_shard = TrainState(named(p_spec), named(o_spec))
+        b_shard = named({"tokens": P("data", None), "labels": P("data", None)})
+        with mesh:
+            sh_state, sh_metrics = jax.jit(
+                step, in_shardings=(st_shard, b_shard),
+                out_shardings=(st_shard, None))(state, batch)
+
+        np.testing.assert_allclose(
+            float(ref_metrics["loss"]), float(sh_metrics["loss"]),
+            rtol=1e-4)
+        for a, b in zip(jax.tree.leaves(ref_state.params),
+                        jax.tree.leaves(sh_state.params)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=2e-3, atol=2e-3)
+        print("OK")
+    """)
+
+
+def test_sharded_mgqe_embedding_lookup_matches():
+    """Row-sharded MGQE table lookup == replicated lookup."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_debug_mesh
+        from repro.core import Embedding, EmbeddingConfig
+
+        cfg = EmbeddingConfig(vocab_size=128, dim=16, kind="mgqe",
+                              num_subspaces=4, num_centroids=8,
+                              tier_boundaries=(16,),
+                              tier_num_centroids=(8, 4))
+        emb = Embedding(cfg)
+        p = emb.init(jax.random.PRNGKey(0))
+        ids = jnp.arange(64)
+        ref, _ = emb.apply(p, ids)
+
+        mesh = make_debug_mesh(2, 4)
+        shard = {"emb": NamedSharding(mesh, P("model", None)),
+                 "centroids": NamedSharding(mesh, P())}
+        p_sharded = jax.device_put(p, shard)
+        with mesh:
+            out, _ = jax.jit(emb.apply)(p_sharded, ids)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   atol=1e-5)
+        print("OK")
+    """)
+
+
+def test_multipod_mesh_shape():
+    _run("""
+        import jax
+        import numpy as np
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(2, 2, multi_pod=True)
+        assert mesh.shape == {"pod": 2, "data": 2, "model": 2}
+        print("OK")
+    """)
+
+
+def test_moe_sharded_dispatch_matches_reference():
+    """moe_ffn_sharded (both strategies) == moe_ffn at high capacity."""
+    _run("""
+        import warnings; warnings.filterwarnings('ignore')
+        import jax, jax.numpy as jnp
+        from repro.nn import moe as moe_lib
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
+        for e in (8, 3):   # 8 -> expert strategy; 3 -> ffn strategy
+            p = moe_lib.moe_init(key, d_model=32, d_ff=64, num_experts=e)
+            ref, _ = moe_lib.moe_ffn(p, x, top_k=2, capacity_factor=64.0)
+            with mesh:
+                out, _ = jax.jit(lambda p, x: moe_lib.moe_ffn_sharded(
+                    p, x, top_k=2, capacity_factor=64.0))(p, x)
+            err = float(jnp.max(jnp.abs(out - ref)))
+            assert err < 1e-5, (e, err)
+        print("OK")
+    """)
+
+
+def test_sharded_row_gather_matches_take():
+    _run("""
+        import warnings; warnings.filterwarnings('ignore')
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.sharding.gather import row_gather
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
+        table = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+        ids = jax.random.randint(jax.random.PRNGKey(1), (8,), 0, 64)
+        ref = jnp.take(table, ids, axis=0)
+        with mesh:
+            out = jax.jit(lambda t, i: row_gather(t, i, sharded=True))(
+                table, ids)
+            g_s = jax.jit(jax.grad(lambda t: jnp.sum(
+                row_gather(t, ids, sharded=True) ** 2)))(table)
+        g_r = jax.grad(lambda t: jnp.sum(
+            jnp.take(t, ids, axis=0) ** 2))(table)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+        np.testing.assert_allclose(np.asarray(g_s), np.asarray(g_r))
+        print("OK")
+    """)
+
+
+def test_elastic_reshard_roundtrip():
+    """Checkpoint saved under one mesh restores under a different DP
+    width (elastic scaling)."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_debug_mesh
+        from repro.train import checkpoint as ck
+        from repro.train import optimizer as opt_lib
+        from repro.train.optimizer import TrainState
+
+        params = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
+        ocfg = opt_lib.OptimizerConfig()
+        state = TrainState.create(ocfg, params)
+
+        mesh1 = make_debug_mesh(4, 2)
+        sh1 = NamedSharding(mesh1, P("data", None))
+        state1 = jax.tree.map(
+            lambda x: jax.device_put(x, sh1) if x.ndim == 2 else x, state)
+        with tempfile.TemporaryDirectory() as d:
+            ck.save(d, 3, state1, keep=1)
+            # restore onto a *different* mesh layout
+            mesh2 = make_debug_mesh(2, 4)
+            sh2 = NamedSharding(mesh2, P("data", None))
+            template = jax.tree.map(lambda x: x, state)
+            restored, step = ck.restore_latest(d, template)
+            assert step == 3
+            r2 = jax.tree.map(
+                lambda x: jax.device_put(x, sh2) if x.ndim == 2 else x,
+                restored)
+            np.testing.assert_array_equal(
+                np.asarray(r2.params["w"]), np.asarray(params["w"]))
+        print("OK")
+    """)

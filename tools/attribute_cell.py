@@ -1,0 +1,62 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Profile proxy: compile one cell and attribute loop-weighted bytes and
+collective bytes to jax source regions (metadata op_name prefixes).
+
+    PYTHONPATH=src python tools/attribute_cell.py <arch> <shape> [depth]
+"""
+import sys
+
+import jax
+
+from repro.configs.registry import shapes_for
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analyze
+from repro.roofline.model import HBM_BW, ICI_LINK_BW
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+depth = int(sys.argv[3]) if len(sys.argv) > 3 else 5
+opts = tuple(sys.argv[4].split(",")) if len(sys.argv) > 4 else ()
+
+mesh = make_production_mesh()
+shape = [s for s in shapes_for(arch) if s.name == shape_name][0]
+cell = build_cell(arch, shape, mesh, False, opts=opts)
+jit_fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                 out_shardings=cell.out_shardings,
+                 donate_argnums=cell.donate)
+with mesh:
+    compiled = jit_fn.lower(*cell.args).compile()
+
+import repro.roofline.hlo as H
+H_depth = depth
+
+
+def patched_source_key(line_rest, depth=depth):
+    return H._source_key.__wrapped__(line_rest, depth) \
+        if hasattr(H._source_key, "__wrapped__") else None
+
+
+# use analyze with attribution at the requested depth
+orig = H._source_key
+H._source_key = lambda rest, d=depth: orig(rest, d)
+hc = analyze(compiled.as_text(), attribute=True)
+H._source_key = orig
+
+mem = compiled.memory_analysis()
+print(f"=== {arch} x {shape_name} | temps "
+      f"{mem.temp_size_in_bytes/1e9:.1f} GB ===")
+print(f"total: bytes {hc.bytes/1e12:.2f} TB "
+      f"({hc.bytes/HBM_BW*1e3:.0f} ms) | collective "
+      f"{hc.collective_bytes/1e9:.1f} GB "
+      f"({hc.collective_bytes/ICI_LINK_BW*1e3:.0f} ms)")
+
+print("\n-- top bytes by source --")
+for k, v in sorted(hc.bytes_by_source.items(), key=lambda kv: -kv[1])[:18]:
+    print(f"  {v/1e9:10.1f} GB  {k}")
+print("\n-- top collective bytes by source --")
+for k, v in sorted(hc.collective_by_source.items(),
+                   key=lambda kv: -kv[1])[:18]:
+    print(f"  {v/1e9:10.1f} GB  {k}")
+print("\n-- collective kinds --", hc.collective_by_kind)

@@ -1,0 +1,38 @@
+"""Regenerate EXPERIMENTS.md tables from results/*.json."""
+import json
+import sys
+
+
+def fmt(r):
+    uf = r.get("useful_frac")
+    rf = r.get("roofline_frac")
+    opts = r.get("opts", "")
+    return ("| {a} | {s} | {o} | {c:.1f} | {m:.1f} | {k:.1f} | {dom} | "
+            "{uf} | {rf} | {p:.1f} |").format(
+        a=r["arch"], s=r["shape"], o=opts or "—",
+        c=r["compute_ms"], m=r["memory_ms"], k=r["collective_ms"],
+        dom=r["dominant"],
+        uf="—" if uf is None else f"{uf:.3f}",
+        rf="—" if rf is None else f"{rf:.3f}", p=r["peak_gb"])
+
+
+HDR = ("| arch | shape | opts | compute ms | memory ms | collective ms | "
+       "bound | useful | roofline | peak GB/dev |\n"
+       "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main(paths):
+    for p in paths:
+        rows = json.load(open(p))
+        print(f"\n### {p} ({len(rows)} rows)\n")
+        print(HDR)
+        key = lambda r: -(max(r["compute_ms"], r["memory_ms"],
+                              r["collective_ms"]))
+        for r in sorted(rows, key=key):
+            print(fmt(r))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["results/dryrun_single.json",
+                          "results/dryrun_multi.json",
+                          "results/hillclimb.json"])

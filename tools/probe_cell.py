@@ -1,0 +1,56 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Debug probe: compile one cell, print top-N largest op outputs in the
+entry computation (proxy for what dominates temp memory) + roofline."""
+import re
+import sys
+
+import jax
+
+from repro.configs.registry import shapes_for
+from repro.launch.cells import build_cell
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+arch = sys.argv[1]
+shape_name = sys.argv[2]
+multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+
+mesh = make_production_mesh(multi_pod=multi)
+shape = [s for s in shapes_for(arch) if s.name == shape_name][0]
+cell = build_cell(arch, shape, mesh, multi)
+jit_fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                 out_shardings=cell.out_shardings,
+                 donate_argnums=cell.donate)
+with mesh:
+    compiled = jit_fn.lower(*cell.args).compile()
+txt = compiled.as_text()
+
+_DT = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+       "f32": 4, "s64": 8, "f64": 8}
+sizes = {}
+in_entry = False
+for line in txt.splitlines():
+    if line.startswith("ENTRY"):
+        in_entry = True
+        continue
+    if in_entry and line.strip() == "}":
+        break
+    if not in_entry:
+        continue
+    m = re.match(r"\s*(?:ROOT )?%([\w.\-]+) = ([a-z0-9]+)\[([\d,]*)\]", line)
+    if m:
+        dt = _DT.get(m.group(2), 0)
+        n = 1
+        for d in (m.group(3).split(",") if m.group(3) else []):
+            n *= int(d)
+        opname = line.split("=")[1].strip().split("(")[0].split()[-1]
+        sizes[m.group(1) + " :: " + opname] = n * dt
+
+print("top-15 entry-computation op outputs (per-device bytes):")
+for k, v in sorted(sizes.items(), key=lambda kv: -kv[1])[:15]:
+    print(f"  {v/1e9:8.3f} GB  {k}")
+mem = compiled.memory_analysis()
+print("temps", mem.temp_size_in_bytes / 1e9, "GB; args",
+      mem.argument_size_in_bytes / 1e9, "GB")
