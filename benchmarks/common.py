@@ -9,16 +9,15 @@ item against 100 sampled negatives per user.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data.sampler import PointwiseSampler, SequenceSampler
-from repro.data.synthetic import InteractionData, aar_like, movielens_like
+from repro.data.synthetic import InteractionData
 from repro.models.recsys.backbones import (GMF, BackboneConfig, SASRec,
                                            make_backbone)
 from repro.train import optimizer as opt_lib

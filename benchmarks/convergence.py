@@ -6,7 +6,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import numpy as np
 
 from benchmarks.common import run_pointwise, run_sasrec
 from repro.data.synthetic import movielens_like

@@ -7,18 +7,27 @@ representative of TPU).  What IS meaningful on CPU:
   * bytes-moved accounting per path (the roofline input) — e.g. ADC
     reads N*D code bytes vs N*d*4 embedding bytes, a 32x stream cut;
   * XLA-path timings of the jnp reference implementations, which the
-    serving benches compare (quantized vs full lookup).
+    serving benches compare (quantized vs full lookup);
+  * fused-vs-unfused serving decode through the backend dispatch layer
+    (on TPU "fused" is the Pallas mgqe_decode kernel; off-TPU the
+    dispatcher resolves to the XLA reference, and the resolved backend
+    is recorded alongside the numbers).
+
+Results are written to a BENCH_*.json (default BENCH_kernels.json) so
+PR-over-PR runs can be diffed.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import Embedding, EmbeddingConfig
 from repro.core.partition import frequency_boundaries
+from repro.kernels import dispatch
 from repro.kernels.mgqe_decode.ref import mgqe_decode_ref
 from repro.kernels.pq_score.ref import build_lut_ref, pq_score_ref
 
@@ -33,35 +42,80 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters
 
 
-def main():
-    print("== kernel micro-bench (CPU reference paths + byte accounting) ==")
-    n, d, D, K = 1_000_000, 64, 8, 256
+def bench_serving_decode(results: dict, n: int, d: int, D: int, K: int,
+                         batch: int):
+    """Fused (dispatched serving_lookup) vs unfused (take + jnp decode)
+    vs the full-table FE baseline."""
+    from repro.core import dpq
     k = jax.random.PRNGKey(0)
-
-    # ---- serving lookup: full vs MGQE-decode ------------------------
     bounds = frequency_boundaries(n, (0.1,))
     cfg = EmbeddingConfig(vocab_size=n, dim=d, kind="mgqe",
                           num_subspaces=D, num_centroids=K,
                           tier_boundaries=bounds,
-                          tier_num_centroids=(256, 64))
+                          tier_num_centroids=(K, max(2, K // 4)))
     codes = jax.random.randint(k, (n, D), 0, K).astype(jnp.uint8)
     cent = jax.random.normal(k, (D, K, d // D))
     full_table = jax.random.normal(k, (n, d))
-    ids = jax.random.randint(jax.random.PRNGKey(1), (4096,), 0, n)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (batch,), 0, n)
 
     t_full = _time(jax.jit(lambda t, i: jnp.take(t, i, axis=0)),
                    full_table, ids)
-    t_mgqe = _time(jax.jit(lambda c, ce, i: mgqe_decode_ref(
+    # unfused: row-wise codes gather, then take_along_axis decode in HBM
+    t_unfused = _time(jax.jit(lambda c, ce, i: mgqe_decode_ref(
         jnp.take(c, i, axis=0).astype(jnp.int32), ce)), codes, cent, ids)
-    print(f"lookup B=4096 of n=1M d=64: full {t_full*1e3:.2f} ms "
-          f"({n*d*4/1e6:.0f} MB table) | mgqe-decode {t_mgqe*1e3:.2f} ms "
+    # fused: the serving hot path as Embedding.serve runs it — through
+    # the kernel dispatch layer (Pallas one-hot-matmul kernel on TPU)
+    backend = dispatch.resolve_backend(cfg.kernel_backend)
+    t_fused = _time(jax.jit(lambda c, ce, i: dpq.serving_lookup(
+        c, ce, i, backend=backend)), codes, cent, ids)
+
+    print(f"lookup B={batch} of n={n/1e6:.1f}M d={d}: "
+          f"full {t_full*1e3:.2f} ms ({n*d*4/1e6:.0f} MB table) | "
+          f"unfused decode {t_unfused*1e3:.2f} ms | "
+          f"fused[{backend}] {t_fused*1e3:.2f} ms "
           f"({n*D/1e6:.0f} MB codes + {K*d*4/1e3:.0f} KB centroids)")
     print(f"  table bytes cut: {n*d*4/(n*D + K*d*4):.1f}x "
           f"(serving size {100*cfg.serving_size_bits()/(n*d*32):.1f}% "
           f"of full)")
+    results["serving_decode"] = {
+        "vocab": n, "dim": d, "num_subspaces": D, "num_centroids": K,
+        "batch": batch,
+        "fused_backend": backend,
+        "full_take_ms": t_full * 1e3,
+        "unfused_decode_ms": t_unfused * 1e3,
+        "fused_decode_ms": t_fused * 1e3,
+        "fused_vs_unfused_speedup": t_unfused / t_fused,
+        "table_mbytes_full": n * d * 4 / 1e6,
+        "table_mbytes_codes": (n * D + K * d * 4) / 1e6,
+        "hbm_bytes_cut_x": n * d * 4 / (n * D + K * d * 4),
+        "serving_size_pct_of_full":
+            100 * cfg.serving_size_bits() / (n * d * 32),
+    }
 
-    # ---- retrieval: dense matvec vs ADC ------------------------------
-    n_cand = 1_000_000
+
+def bench_engine(results: dict, n: int, d: int, D: int, K: int,
+                 n_requests: int, req_batch: int):
+    """Micro-batched engine throughput on the exported artifact."""
+    from repro.launch.engine import ServingEngine, drive_random_stream
+    cfg = EmbeddingConfig(vocab_size=n, dim=d, kind="dpq",
+                          num_subspaces=D, num_centroids=K)
+    emb = Embedding(cfg)
+    params = emb.init(jax.random.PRNGKey(0))
+    artifact = emb.export(params)
+    engine = ServingEngine(emb, artifact, max_queue=4096)
+    st = drive_random_stream(engine, n, n_requests, req_batch)
+    print(f"engine: {st.requests} reqs / {st.lookups} lookups "
+          f"-> {st.lookups_per_s:,.0f} lookups/s "
+          f"(block_b={engine.block_b}, {st.flushes} flushes)")
+    results["serving_engine"] = {
+        "vocab": n, "dim": d, "block_b": engine.block_b,
+        **st.as_dict(),
+    }
+
+
+def bench_adc(results: dict, d: int, D: int, K: int, n_cand: int):
+    k = jax.random.PRNGKey(0)
+    cent = jax.random.normal(k, (D, K, d // D))
     q = jax.random.normal(k, (d,))
     cand_vecs = jax.random.normal(k, (n_cand, d))
     cand_codes = jax.random.randint(k, (n_cand, D), 0, K).astype(jnp.uint8)
@@ -74,17 +128,49 @@ def main():
           f"({n_cand*D/1e6:.0f} MB codes)")
     print(f"  stream cut {d*4/D:.0f}x -> memory-roofline ceiling "
           f"{d*4/D:.0f}x faster on TPU (819 GB/s HBM)")
+    results["adc"] = {
+        "n_candidates": n_cand, "dim": d,
+        "dense_ms": t_dense * 1e3, "adc_ms": t_adc * 1e3,
+        "stream_cut_x": d * 4 / D,
+    }
 
-    # ---- DPQ assignment (training hot path) --------------------------
-    b = 65_536
+
+def bench_dpq_assign(results: dict, d: int, D: int, K: int, b: int):
+    k = jax.random.PRNGKey(0)
+    cent = jax.random.normal(k, (D, K, d // D))
     e = jax.random.normal(k, (b, D, d // D))
     from repro.kernels.dpq_assign.ref import dpq_assign_ref
     t_assign = _time(jax.jit(dpq_assign_ref), e, cent)
     fl = 2 * b * D * K * (d // D)
-    print(f"dpq_assign B=65536: {t_assign*1e3:.1f} ms "
+    print(f"dpq_assign B={b}: {t_assign*1e3:.1f} ms "
           f"({fl/1e9:.2f} GFLOP -> {fl/t_assign/1e9:.1f} GFLOP/s CPU ref)")
+    results["dpq_assign"] = {
+        "batch": b, "assign_ms": t_assign * 1e3, "gflop": fl / 1e9,
+    }
+
+
+def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
+    print("== kernel micro-bench (dispatch-layer paths + byte accounting) ==")
+    n, d, D, K = (100_000 if quick else 1_000_000), 64, 8, 256
+    results = {
+        "jax_backend": jax.default_backend(),
+        "resolved_kernel_backend": dispatch.resolve_backend(),
+    }
+    bench_serving_decode(results, n, d, D, K, batch=4096)
+    bench_engine(results, n, d, D, K,
+                 n_requests=50 if quick else 200, req_batch=64)
+    bench_adc(results, d, D, K, n_cand=n)
+    bench_dpq_assign(results, d, D, K, b=8192 if quick else 65_536)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {out_json}")
     return 0
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_kernels.json")
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    raise SystemExit(main(out_json=a.json, quick=a.quick))

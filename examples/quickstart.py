@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Embedding, EmbeddingConfig
+from repro.core import EmbeddingConfig
 from repro.core.partition import frequency_boundaries
 from repro.data.sampler import PointwiseSampler
 from repro.data.synthetic import movielens_like

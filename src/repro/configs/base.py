@@ -139,6 +139,9 @@ class RecsysConfig:
     # embedding compression spec applied to *large* fields
     embed_kind: str = "mgqe"
     mgqe_min_vocab: int = 10_000    # fields smaller than this stay full
+    # kernel backend for serving decode / bag pooling (auto | pallas |
+    # xla | interpret); $REPRO_KERNEL_BACKEND overrides — DESIGN.md §5
+    kernel_backend: str = "auto"
     # shard_map model-parallel row gathers (§Perf hillclimb)
     sharded_embedding: bool = False
     num_subspaces: int = 8

@@ -8,8 +8,7 @@ from __future__ import annotations
 import importlib
 from typing import Dict, Tuple
 
-from repro.configs.base import (GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
-                                ShapeSpec)
+from repro.configs.base import GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES
 
 ARCHS: Dict[str, Tuple[str, str]] = {
     # arch id            family    config module

@@ -14,12 +14,12 @@ offline corpus-coding step (Lloyd's k-means per subspace, pure JAX).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dpq_assign.ref import dpq_assign_ref
+from repro.kernels.dpq_assign import assign as dpq_assign_op
 from repro.kernels.pq_score import score_candidates
 
 
@@ -34,8 +34,14 @@ def fit_pq(key: jax.Array, vectors: jax.Array, num_subspaces: int,
     s = d // num_subspaces
     x = vectors.reshape(n, num_subspaces, s).transpose(1, 0, 2)  # (D, N, S)
 
-    # init: random rows per subspace
-    idx = jax.random.randint(key, (num_subspaces, num_centroids), 0, n)
+    # init: distinct random rows per subspace — sampling WITHOUT
+    # replacement; duplicate seeds collapse into dead centroids that
+    # Lloyd's update can never split, which measurably hurts recall.
+    # (Tiny corpora with n < K must sample with replacement.)
+    keys = jax.random.split(key, num_subspaces)
+    idx = jnp.stack([jax.random.choice(kk, n, (num_centroids,),
+                                       replace=n < num_centroids)
+                     for kk in keys])
     cent = jnp.take_along_axis(x, idx[..., None], axis=1)        # (D, K, S)
 
     def step(cent, _):
@@ -54,28 +60,37 @@ def fit_pq(key: jax.Array, vectors: jax.Array, num_subspaces: int,
     return cent
 
 
-def encode_corpus(vectors: jax.Array, centroids: jax.Array) -> jax.Array:
-    """vectors (N, d) -> codes (N, D) int32."""
+def encode_corpus(vectors: jax.Array, centroids: jax.Array,
+                  backend: Optional[str] = None) -> jax.Array:
+    """vectors (N, d) -> codes (N, D) int32 (dispatched dpq_assign)."""
     n, d = vectors.shape
     n_sub, _, s = centroids.shape
     e_sub = vectors.reshape(n, n_sub, s)
-    return dpq_assign_ref(e_sub, centroids)
+    return dpq_assign_op(e_sub, centroids, backend=backend)
 
 
 def build_corpus_artifact(key: jax.Array, vectors: jax.Array,
                           num_subspaces: int = 8, num_centroids: int = 256,
-                          iters: int = 10) -> Dict:
+                          iters: int = 10,
+                          backend: Optional[str] = None) -> Dict:
     """Offline step: corpus vectors -> {codes, centroids} artifact."""
     cent = fit_pq(key, vectors, num_subspaces, num_centroids, iters)
-    codes = encode_corpus(vectors, cent)
+    codes = encode_corpus(vectors, cent, backend=backend)
     dtype = jnp.uint8 if num_centroids <= 256 else jnp.int32
     return {"codes": codes.astype(dtype), "centroids": cent}
 
 
-def adc_scores(artifact: Dict, query: jax.Array) -> jax.Array:
-    """query (d,) -> scores (N,) over the coded corpus."""
+def adc_scores(artifact: Dict, query: jax.Array,
+               backend: Optional[str] = None,
+               block_n: int = 1024) -> jax.Array:
+    """query (d,) -> scores (N,) over the coded corpus.
+
+    Scoring runs through the dispatched ``pq_score`` kernel — the LUT
+    stays in VMEM on TPU; the XLA reference is the CPU fallback.
+    """
     return score_candidates(query, artifact["centroids"],
-                            artifact["codes"].astype(jnp.int32))
+                            artifact["codes"].astype(jnp.int32),
+                            block_n=block_n, backend=backend)
 
 
 def reconstruction_mse(artifact: Dict, vectors: jax.Array) -> jax.Array:

@@ -91,7 +91,8 @@ class Embedding:
             return baselines.sq_serving_lookup(artifact, ids, cfg)
         if cfg.kind == "dpq":
             return dpq.serving_lookup(artifact["codes"], artifact["centroids"],
-                                      ids)
+                                      ids, backend=cfg.kernel_backend,
+                                      block_b=cfg.decode_block_b)
         if cfg.kind == "mgqe":
             return mgqe.serving_lookup(artifact, ids, cfg)
         raise AssertionError(cfg.kind)

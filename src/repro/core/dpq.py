@@ -147,12 +147,15 @@ def lookup_train(params: dict, ids: jax.Array,
 
 
 def export_codes(params: dict, k_limit_per_row: Optional[jax.Array] = None,
-                 batch: int = 65536) -> jax.Array:
+                 batch: int = 65536,
+                 backend: Optional[str] = None) -> jax.Array:
     """Materialize serving codes for the whole vocab, shape (n, D) int32.
 
     Batched over rows so exporting a 10M-row table doesn't allocate a
-    (n, D, K) distance tensor at once.
+    (n, D, K) distance tensor at once.  The nearest-centroid search
+    runs through the dispatched ``dpq_assign`` kernel.
     """
+    from repro.kernels.dpq_assign import assign
     emb = params["emb"]
     centroids = params["centroids"]
     n = emb.shape[0]
@@ -160,8 +163,9 @@ def export_codes(params: dict, k_limit_per_row: Optional[jax.Array] = None,
 
     @jax.jit
     def one(rows, lim):
+        # backend resolution happens at trace time (static per export)
         e_sub = rows.reshape(rows.shape[0], num_sub, sub_dim)
-        return assign_codes(e_sub, centroids, lim)
+        return assign(e_sub, centroids, lim, backend=backend)
 
     outs = []
     for start in range(0, n, batch):
@@ -174,8 +178,19 @@ def export_codes(params: dict, k_limit_per_row: Optional[jax.Array] = None,
 
 
 def serving_lookup(codes_table: jax.Array, centroids: jax.Array,
-                   ids: jax.Array) -> jax.Array:
-    """Serving-path lookup: codes + centroids only (full table gone)."""
-    codes = jnp.take(codes_table, ids, axis=0)          # (..., D)
-    c = decode_codes(codes.astype(jnp.int32), centroids)  # (..., D, S)
-    return c.reshape(ids.shape + (centroids.shape[0] * centroids.shape[-1],))
+                   ids: jax.Array, backend: Optional[str] = None,
+                   block_b: int = 256) -> jax.Array:
+    """Serving-path lookup: codes + centroids only (full table gone).
+
+    The decode runs through the kernel dispatch layer (DESIGN.md §5):
+    the fused Pallas ``mgqe_decode`` kernel on TPU — one-hot matmul in
+    VMEM instead of a per-row HBM gather — with the jnp reference as
+    the XLA fallback.  ``backend``/``block_b`` usually come from
+    ``EmbeddingConfig.kernel_backend`` / ``decode_block_b``.
+    """
+    from repro.kernels.mgqe_decode import decode
+    codes = jnp.take(codes_table, ids, axis=0).astype(jnp.int32)  # (..., D)
+    d = codes.shape[-1]
+    flat = decode(codes.reshape(-1, d), centroids,
+                  block_b=block_b, backend=backend)
+    return flat.reshape(ids.shape + (centroids.shape[0] * centroids.shape[-1],))

@@ -132,14 +132,20 @@ def export_serving(params: dict, cfg: EmbeddingConfig) -> dict:
 
 def serving_lookup(artifact: dict, ids: jax.Array,
                    cfg: EmbeddingConfig) -> jax.Array:
+    """Every variant decodes through the dispatched fused kernel
+    (cfg.kernel_backend / cfg.decode_block_b; DESIGN.md §5)."""
     if cfg.mgqe_variant == "shared_k":
-        return dpq.serving_lookup(artifact["codes"], artifact["centroids"], ids)
+        return dpq.serving_lookup(artifact["codes"], artifact["centroids"],
+                                  ids, backend=cfg.kernel_backend,
+                                  block_b=cfg.decode_block_b)
     tiers = tier_of_ids(ids, cfg.tier_boundaries)
     outs = []
     for i, cent in enumerate(artifact["centroids"]):
         codes_i = (artifact["codes"][i] if isinstance(artifact["codes"], list)
                    else artifact["codes"])
-        outs.append(dpq.serving_lookup(codes_i, cent, ids))
+        outs.append(dpq.serving_lookup(codes_i, cent, ids,
+                                       backend=cfg.kernel_backend,
+                                       block_b=cfg.decode_block_b))
     out = outs[0]
     for i in range(1, len(outs)):
         out = jnp.where((tiers == i)[..., None], outs[i], out)

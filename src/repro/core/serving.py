@@ -6,7 +6,7 @@ module produces that table for any set of EmbeddingConfigs.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Tuple
+from typing import Dict, Iterable, List
 
 import numpy as np
 

@@ -14,6 +14,11 @@ from typing import Tuple
 # Supported embedding schemes.  "full" is the paper's FE baseline.
 KINDS = ("full", "dpq", "mgqe", "lrf", "sq", "hash")
 
+# Kernel backends for the serving decode path (mirrors
+# repro.kernels.dispatch.BACKENDS; duplicated so config types stay
+# importable without pulling in the kernel packages).
+KERNEL_BACKENDS = ("auto", "pallas", "xla", "interpret")
+
 # MGQE capacity-allocation variants (paper §2.2).
 MGQE_VARIANTS = ("shared_k", "private_k", "private_d")
 
@@ -58,9 +63,24 @@ class EmbeddingConfig:
     # (repro.sharding.gather) instead of plain take — §Perf hillclimb
     sharded_rows: bool = False
 
+    # kernel backend for the serving decode hot path (DESIGN.md §5):
+    # "auto" defers to the REPRO_KERNEL_BACKEND env var when set, else
+    # picks pallas on TPU and the XLA reference elsewhere; "interpret"
+    # forces Pallas interpret mode (what CI uses).  A concrete value
+    # here pins the backend regardless of the env var.
+    kernel_backend: str = "auto"
+
+    # rows per grid step for the fused decode kernel; batches are
+    # padded to this granularity inside the kernel wrapper.
+    decode_block_b: int = 256
+
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown embedding kind {self.kind!r}")
+        if self.kernel_backend not in KERNEL_BACKENDS:
+            raise ValueError(
+                f"unknown kernel backend {self.kernel_backend!r}; "
+                f"expected one of {KERNEL_BACKENDS}")
         if self.kind in ("dpq", "mgqe"):
             if self.dim % self.num_subspaces != 0:
                 raise ValueError(

@@ -4,7 +4,7 @@ a real fanout neighbor sampler (GraphSAGE-style) for minibatch_lg.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

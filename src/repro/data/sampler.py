@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import threading
 import queue as queue_mod
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

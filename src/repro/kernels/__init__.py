@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 Each subpackage ships <name>.py (pl.pallas_call + BlockSpec VMEM
-tiling), ops.py (jit'd dispatch wrapper), ref.py (pure-jnp oracle):
+tiling), ops.py (dispatch-registered wrapper), ref.py (pure-jnp
+oracle):
 
   mgqe_decode     codes + centroids -> embeddings (serving hot path)
   dpq_assign      nearest-centroid search (training/export hot path)
@@ -9,11 +10,17 @@ tiling), ops.py (jit'd dispatch wrapper), ref.py (pure-jnp oracle):
   embedding_bag   fused ragged gather + segment-sum (TBE pattern)
   flash_attention blocked causal/windowed GQA attention
 
-All validated against their oracles in interpret mode (tests/), which
-executes the kernel bodies on CPU.
+Backend selection (pallas | xla | interpret) is centralized in
+``dispatch.py``: each ops.py registers its implementations there, and
+call sites pick a backend via config field, the REPRO_KERNEL_BACKEND
+env var, or automatic hardware detection (DESIGN.md §5).
+
+All kernels are validated against their oracles in interpret mode
+(tests/), which executes the kernel bodies on CPU.
 """
+from repro.kernels import dispatch  # noqa: F401  (must import first)
 from repro.kernels import (dpq_assign, embedding_bag, flash_attention,
                            mgqe_decode, pq_score)
 
-__all__ = ["dpq_assign", "embedding_bag", "flash_attention",
+__all__ = ["dispatch", "dpq_assign", "embedding_bag", "flash_attention",
            "mgqe_decode", "pq_score"]

@@ -1,0 +1,155 @@
+"""Kernel backend dispatch — one switch for every hand-written kernel.
+
+Every hot-path op in ``repro.kernels`` ships (at least) two
+implementations:
+
+  ``pallas``     the hand-written Pallas TPU kernel (``<name>.py``)
+  ``xla``        the pure-jnp oracle (``ref.py``) — XLA fuses it well
+                 enough to be the correct CPU/GPU fallback
+  ``interpret``  the Pallas kernel run in interpret mode — executes the
+                 kernel *body* on CPU, so CI exercises the exact code
+                 that runs on TPU (DESIGN.md §5)
+
+Call sites never branch on hardware.  They call
+:func:`dispatch`/``op(..., backend=None)`` and the backend is resolved
+in precedence order:
+
+  1. explicit ``backend=`` argument (e.g. from a config field such as
+     ``EmbeddingConfig.kernel_backend``); ``"auto"`` and ``None`` both
+     mean "no preference"
+  2. the ``REPRO_KERNEL_BACKEND`` environment variable — the operator
+     override for everything left on auto (CI exports
+     ``REPRO_KERNEL_BACKEND=interpret`` and every default-configured op
+     follows; a call site that pins a concrete backend keeps it)
+  3. the process-wide default set via :func:`set_default_backend` /
+     :func:`use_backend`
+  4. ``auto``: ``pallas`` when a TPU is attached, else ``xla``
+
+``auto`` is also re-resolved *per choice*: asking for ``pallas`` with
+no TPU present silently falls back to ``xla`` (compiling a real Mosaic
+kernel without TPU hardware would just crash), while ``interpret``
+always honours the request — that is the whole point of interpret mode.
+
+Registration is done by each kernel package's ``ops.py`` at import
+time; :func:`dispatch` lazily imports ``repro.kernels`` so the registry
+is populated no matter which module is imported first.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Callable, Dict, Optional
+
+import jax
+
+BACKENDS = ("auto", "pallas", "xla", "interpret")
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+_default_backend: str = "auto"
+
+
+# ----------------------------------------------------------------------
+# backend selection
+# ----------------------------------------------------------------------
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def set_default_backend(backend: str) -> None:
+    """Set the process-wide default backend (lowest-precedence knob)."""
+    global _default_backend
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    _default_backend = backend
+
+
+def get_default_backend() -> str:
+    return _default_backend
+
+
+@contextlib.contextmanager
+def use_backend(backend: str):
+    """Temporarily override the default backend (tests, benchmarks)."""
+    prev = _default_backend
+    set_default_backend(backend)
+    try:
+        yield
+    finally:
+        set_default_backend(prev)
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Resolve a backend request to a concrete one of pallas|xla|interpret.
+
+    Precedence: explicit arg > $REPRO_KERNEL_BACKEND > process default
+    > auto.  ``auto`` (and an unfulfillable ``pallas`` request) resolve
+    to ``pallas`` on TPU and ``xla`` elsewhere.
+    """
+    if backend == "auto":
+        backend = None          # "auto" carries no preference
+    choice = backend or os.environ.get(ENV_VAR) or _default_backend
+    if choice not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {choice!r}; "
+                         f"expected one of {BACKENDS}")
+    if choice == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    if choice == "pallas" and not _on_tpu():
+        # a compiled Mosaic kernel needs real TPU hardware; interpret
+        # mode must be asked for explicitly (it is orders of magnitude
+        # slower than the XLA reference path).
+        return "xla"
+    return choice
+
+
+# ----------------------------------------------------------------------
+# op registry
+# ----------------------------------------------------------------------
+
+def register_op(name: str, *, pallas: Callable, xla: Callable,
+                interpret: Optional[Callable] = None) -> None:
+    """Register one op's implementations.
+
+    ``interpret`` defaults to the pallas entry point — kernel wrappers
+    in this repo accept ``interpret=...`` themselves, so most register
+    an explicit closure instead.
+    """
+    _REGISTRY[name] = {
+        "pallas": pallas,
+        "xla": xla,
+        "interpret": interpret if interpret is not None else pallas,
+    }
+
+
+def registered_ops() -> Dict[str, Dict[str, Callable]]:
+    _ensure_registered()
+    return dict(_REGISTRY)
+
+
+def _ensure_registered() -> None:
+    if not _REGISTRY:
+        # ops.py modules register themselves at import time
+        import repro.kernels  # noqa: F401
+
+
+def get_impl(name: str, backend: Optional[str] = None) -> Callable:
+    """Concrete callable for ``name`` under the resolved backend."""
+    _ensure_registered()
+    if name not in _REGISTRY:
+        raise KeyError(f"kernel op {name!r} not registered; known: "
+                       f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name][resolve_backend(backend)]
+
+
+def dispatch(name: str, *args, backend: Optional[str] = None, **kwargs):
+    """Run op ``name`` on the resolved backend."""
+    return get_impl(name, backend)(*args, **kwargs)
+
+
+__all__ = ["BACKENDS", "ENV_VAR", "dispatch", "get_default_backend",
+           "get_impl", "register_op", "registered_ops", "resolve_backend",
+           "set_default_backend", "use_backend"]

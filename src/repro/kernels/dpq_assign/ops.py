@@ -5,20 +5,27 @@ from typing import Optional
 
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels.dpq_assign.dpq_assign import dpq_assign
 from repro.kernels.dpq_assign.ref import dpq_assign_ref
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+dispatch.register_op(
+    "dpq_assign",
+    pallas=lambda e_sub, cent, k_limit=None, block_b=512: dpq_assign(
+        e_sub, cent, k_limit, block_b=block_b),
+    xla=lambda e_sub, cent, k_limit=None, block_b=512: dpq_assign_ref(
+        e_sub, cent, k_limit),
+    interpret=lambda e_sub, cent, k_limit=None, block_b=512: dpq_assign(
+        e_sub, cent, k_limit, block_b=block_b, interpret=True),
+)
 
 
 def assign(e_sub: jax.Array, centroids: jax.Array,
            k_limit: Optional[jax.Array] = None,
-           block_b: int = 512) -> jax.Array:
+           block_b: int = 512, backend: Optional[str] = None) -> jax.Array:
     """Nearest-centroid codes (B, D) for subvectors (B, D, S)."""
-    return dpq_assign(e_sub, centroids, k_limit, block_b=block_b,
-                      interpret=not _on_tpu())
+    return dispatch.dispatch("dpq_assign", e_sub, centroids, k_limit,
+                             block_b=block_b, backend=backend)
 
 
 __all__ = ["assign", "dpq_assign", "dpq_assign_ref"]

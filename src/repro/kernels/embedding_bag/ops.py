@@ -1,23 +1,30 @@
-"""Public wrapper for the fused EmbeddingBag kernel."""
+"""Public wrapper for the fused EmbeddingBag kernel (backend-dispatched)."""
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+dispatch.register_op(
+    "embedding_bag",
+    pallas=lambda table, ids, seg, num_bags, weights=None: embedding_bag(
+        table, ids, seg, num_bags, weights),
+    xla=embedding_bag_ref,
+    interpret=lambda table, ids, seg, num_bags, weights=None: embedding_bag(
+        table, ids, seg, num_bags, weights, interpret=True),
+)
 
 
 def bag(table: jax.Array, ids: jax.Array, segment_ids: jax.Array,
-        num_bags: int, weights: Optional[jax.Array] = None) -> jax.Array:
-    """Fused CSR embedding-bag pooling (sum mode)."""
-    return embedding_bag(table, ids, segment_ids, num_bags, weights,
-                         interpret=not _on_tpu())
+        num_bags: int, weights: Optional[jax.Array] = None,
+        backend: Optional[str] = None) -> jax.Array:
+    """Fused CSR embedding-bag pooling (sum mode), backend-dispatched."""
+    return dispatch.dispatch("embedding_bag", table, ids, segment_ids,
+                             num_bags, weights, backend=backend)
 
 
 __all__ = ["bag", "embedding_bag", "embedding_bag_ref"]

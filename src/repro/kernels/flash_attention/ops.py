@@ -1,30 +1,38 @@
 """Public wrapper: flash attention with a recompute-based backward.
 
-Forward runs the Pallas kernel; the VJP recomputes attention with the
-pure-jnp oracle (flash backward on TPU would mirror the forward's
-block structure — the recompute fallback keeps training numerically
-exact at ~2x forward cost, the standard remat trade).
+Forward routes through the kernel backend dispatch layer (Pallas on
+TPU, jnp reference under XLA elsewhere, Pallas interpret on request);
+the VJP recomputes attention with the pure-jnp oracle (flash backward
+on TPU would mirror the forward's block structure — the recompute
+fallback keeps training numerically exact at ~2x forward cost, the
+standard remat trade).
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+dispatch.register_op(
+    "flash_attention",
+    pallas=lambda q, k, v, window=1 << 30: flash_attention(
+        q, k, v, window=window),
+    xla=lambda q, k, v, window=1 << 30: flash_attention_ref(
+        q, k, v, window=window),
+    interpret=lambda q, k, v, window=1 << 30: flash_attention(
+        q, k, v, window=window, interpret=True),
+)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def attend(q: jax.Array, k: jax.Array, v: jax.Array,
            window: int = 1 << 30) -> jax.Array:
     """Blocked causal/windowed GQA attention (train/prefill layout)."""
-    return flash_attention(q, k, v, window=window, interpret=not _on_tpu())
+    return dispatch.dispatch("flash_attention", q, k, v, window=window)
 
 
 def _fwd(q, k, v, window):

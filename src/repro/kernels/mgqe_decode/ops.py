@@ -1,26 +1,36 @@
 """Public wrapper for the MGQE decode kernel.
 
-``decode(codes, centroids)`` dispatches to the Pallas kernel on TPU and
-to interpret mode elsewhere (CPU test/dev containers), so call sites
+``decode(codes, centroids)`` routes through the kernel backend dispatch
+layer (``repro.kernels.dispatch``): the Pallas kernel on TPU, the jnp
+reference under XLA elsewhere, or Pallas interpret mode when explicitly
+requested (CI runs the kernel bodies on CPU this way) — so call sites
 never branch on backend.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels.mgqe_decode.mgqe_decode import mgqe_decode
 from repro.kernels.mgqe_decode.ref import mgqe_decode_ref
 
+dispatch.register_op(
+    "mgqe_decode",
+    pallas=lambda codes, cent, block_b=256: mgqe_decode(
+        codes, cent, block_b=block_b),
+    xla=lambda codes, cent, block_b=256: mgqe_decode_ref(codes, cent),
+    interpret=lambda codes, cent, block_b=256: mgqe_decode(
+        codes, cent, block_b=block_b, interpret=True),
+)
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
-
-def decode(codes: jax.Array, centroids: jax.Array,
-           block_b: int = 256) -> jax.Array:
-    """codes (B, D) -> embeddings (B, D*S) via the fused kernel."""
-    return mgqe_decode(codes, centroids, block_b=block_b,
-                       interpret=not _on_tpu())
+def decode(codes: jax.Array, centroids: jax.Array, block_b: int = 256,
+           backend: Optional[str] = None) -> jax.Array:
+    """codes (B, D) -> embeddings (B, D*S) via the dispatched kernel."""
+    return dispatch.dispatch("mgqe_decode", codes, centroids,
+                             block_b=block_b, backend=backend)
 
 
 __all__ = ["decode", "mgqe_decode", "mgqe_decode_ref"]

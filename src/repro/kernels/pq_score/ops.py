@@ -1,15 +1,23 @@
 """Public wrapper: ADC retrieval scoring against a PQ-coded corpus."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.pq_score.pq_score import pq_score
 from repro.kernels.pq_score.ref import build_lut_ref, pq_score_ref
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+dispatch.register_op(
+    "pq_score",
+    pallas=lambda lut, codes, block_n=1024: pq_score(
+        lut, codes, block_n=block_n),
+    xla=lambda lut, codes, block_n=1024: pq_score_ref(lut, codes),
+    interpret=lambda lut, codes, block_n=1024: pq_score(
+        lut, codes, block_n=block_n, interpret=True),
+)
 
 
 def build_lut(query: jax.Array, centroids: jax.Array) -> jax.Array:
@@ -18,10 +26,12 @@ def build_lut(query: jax.Array, centroids: jax.Array) -> jax.Array:
 
 
 def score_candidates(query: jax.Array, centroids: jax.Array,
-                     codes: jax.Array, block_n: int = 1024) -> jax.Array:
+                     codes: jax.Array, block_n: int = 1024,
+                     backend: Optional[str] = None) -> jax.Array:
     """Full ADC path: query (d,) + corpus codes (N, D) -> scores (N,)."""
     lut = build_lut(query, centroids).astype(jnp.float32)
-    return pq_score(lut, codes, block_n=block_n, interpret=not _on_tpu())
+    return dispatch.dispatch("pq_score", lut, codes, block_n=block_n,
+                             backend=backend)
 
 
 __all__ = ["build_lut", "score_candidates", "pq_score",

@@ -1,0 +1,168 @@
+"""Batched embedding serving engine (paper Fig. 1 serving path).
+
+Production serving traffic is many small lookup requests, not one big
+batch.  The engine owns the exported artifact (codes + centroids) as
+*device-resident* buffers — placed once with ``jax.device_put`` and
+reused across every request, never re-uploaded — and micro-batches
+queued requests into a single fused-decode call:
+
+  * ``submit(ids)`` enqueues a request and returns a handle;
+  * ``flush()`` concatenates the queue, pads the flat id batch up to
+    the decode kernel's ``block_b`` granularity (so every launch hits
+    the kernel's full-block fast path and JIT retraces are bounded by
+    queue-size/block_b, not by request shape), runs ONE serve call,
+    and splits results back per request;
+  * ``lookup(ids)`` is submit + flush for the synchronous case.
+
+Stats accumulate across flushes; ``stats()`` reports lookups/sec — the
+number `benchmarks/kernel_bench.py` and `launch/serve.py --engine`
+print for fused-vs-unfused comparisons.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import Embedding
+
+
+@dataclasses.dataclass
+class EngineStats:
+    requests: int = 0
+    lookups: int = 0           # ids actually requested (pre-padding)
+    padded_lookups: int = 0    # ids decoded incl. block_b padding
+    flushes: int = 0
+    seconds: float = 0.0
+
+    @property
+    def lookups_per_s(self) -> float:
+        return self.lookups / self.seconds if self.seconds > 0 else 0.0
+
+    def as_dict(self) -> Dict:
+        return {**dataclasses.asdict(self),
+                "lookups_per_s": self.lookups_per_s}
+
+
+class ServingEngine:
+    """Micro-batching lookup engine over one exported embedding table."""
+
+    def __init__(self, emb: Embedding, artifact: dict,
+                 block_b: Optional[int] = None,
+                 max_queue: int = 65536,
+                 backend: Optional[str] = None):
+        if backend is not None or block_b is not None:
+            # rebuild the config so the decode path dispatches as asked
+            # and the kernel's block size matches the queue padding —
+            # otherwise a custom block_b would pad flushes to sizes the
+            # decode kernel re-pads anyway, multiplying retraces
+            emb = Embedding(dataclasses.replace(
+                emb.cfg,
+                kernel_backend=backend or emb.cfg.kernel_backend,
+                decode_block_b=block_b or emb.cfg.decode_block_b))
+        self.emb = emb
+        self.block_b = emb.cfg.decode_block_b
+        self.max_queue = max_queue
+        # device-resident once; requests only ship (B,) int32 ids
+        self.artifact = jax.device_put(artifact)
+        self._serve = jax.jit(lambda art, ids: emb.serve(art, ids))
+        self._queue: List[jax.Array] = []
+        self._queued = 0
+        self.stats_ = EngineStats()
+
+    # ------------------------------------------------------------ queue
+    def submit(self, ids) -> int:
+        """Enqueue one request of flat ids; returns its handle (index
+        into the list the next flush() returns)."""
+        ids = jnp.asarray(ids, jnp.int32).reshape(-1)
+        self._queue.append(ids)
+        self._queued += ids.shape[0]
+        return len(self._queue) - 1
+
+    @property
+    def pending(self) -> int:
+        return self._queued
+
+    def should_flush(self) -> bool:
+        return self._queued >= self.max_queue
+
+    # ------------------------------------------------------------ serve
+    def flush(self) -> List[jax.Array]:
+        """Decode every queued request in one padded micro-batch."""
+        if not self._queue:
+            return []
+        reqs, self._queue = self._queue, []
+        n_req, n_ids = len(reqs), self._queued
+        self._queued = 0
+        flat = jnp.concatenate(reqs) if n_req > 1 else reqs[0]
+        pad = (-flat.shape[0]) % self.block_b
+        if pad:
+            flat = jnp.pad(flat, (0, pad))  # id 0 is always valid
+        t0 = time.perf_counter()
+        out = self._serve(self.artifact, flat)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        self.stats_.requests += n_req
+        self.stats_.lookups += n_ids
+        self.stats_.padded_lookups += int(flat.shape[0])
+        self.stats_.flushes += 1
+        self.stats_.seconds += dt
+        splits = np.cumsum([r.shape[0] for r in reqs])[:-1].tolist()
+        return [s for s in jnp.split(out[:n_ids], splits)] if splits \
+            else [out[:n_ids]]
+
+    def lookup(self, ids) -> jax.Array:
+        """Synchronous single-request path (submit + flush).  Flushes
+        whatever else is queued too and returns THIS request's rows."""
+        handle = self.submit(ids)
+        return self.flush()[handle]
+
+    def serve_stream(self, requests: Sequence[np.ndarray]) -> EngineStats:
+        """Drive a request stream through the micro-batcher; flush
+        whenever the queue reaches max_queue, once more at the end."""
+        for r in requests:
+            self.submit(r)
+            if self.should_flush():
+                self.flush()
+        self.flush()
+        return self.stats_
+
+    def stats(self) -> EngineStats:
+        return self.stats_
+
+
+def drive_random_stream(engine: ServingEngine, vocab_size: int,
+                        n_requests: int, req_batch: int,
+                        seed: int = 0) -> EngineStats:
+    """Shared bench/demo harness: stream n_requests random-size
+    requests (1..req_batch ids each) and return the throughput stats.
+
+    The identical stream is driven twice: flush points are a pure
+    function of the request sizes, so the first pass compiles every
+    padded shape the measured pass will hit — the returned stats
+    contain zero XLA compile time."""
+    rng = np.random.default_rng(seed)
+    reqs = [rng.integers(0, vocab_size, int(rng.integers(1, req_batch + 1)))
+            for _ in range(n_requests)]
+    engine.serve_stream(reqs)          # warm pass: pays all jit traces
+    engine.stats_ = EngineStats()
+    return engine.serve_stream(reqs)
+
+
+def embedding_config_of_arch(family: str, cfg):
+    """Pick the arch's main large-vocab EmbeddingConfig (engine demo)."""
+    from repro.models.recsys.fields import field_embedding_config
+    if family == "lm":
+        return cfg.embedding
+    if cfg.model == "bst":
+        return field_embedding_config(cfg, cfg.n_items)
+    if cfg.model == "two_tower":
+        return field_embedding_config(cfg, cfg.n_items)
+    return field_embedding_config(cfg, max(cfg.field_vocab_sizes))
+
+
+__all__ = ["EngineStats", "ServingEngine", "embedding_config_of_arch"]

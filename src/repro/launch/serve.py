@@ -6,6 +6,14 @@ discarded).
         --prompt-len 32 --decode-steps 16 --batch 4
     PYTHONPATH=src python -m repro.launch.serve --arch two-tower-retrieval \
         --smoke --candidates 10000
+
+``--engine`` drives a request stream through the micro-batching
+:class:`repro.launch.engine.ServingEngine` instead (device-resident
+artifact, queued lookups padded to the decode kernel's block_b) and
+reports lookups/second:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch deepfm --smoke \
+        --engine --requests 200 --req-batch 64
 """
 from __future__ import annotations
 
@@ -17,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_arch
+from repro.core.types import KERNEL_BACKENDS
 
 
 def serve_lm(cfg, batch: int, prompt_len: int, decode_steps: int):
@@ -118,6 +127,34 @@ def serve_ctr(cfg, batch: int):
           f"scores mean {float(jnp.mean(scores)):.4f}")
 
 
+def serve_engine(family, cfg, n_requests: int, req_batch: int,
+                 backend=None, max_queue: int = 4096):
+    """Request-stream demo of the micro-batching engine: N requests of
+    random size <= req_batch against the arch's main embedding table."""
+    from repro.core import Embedding
+    from repro.launch.engine import (ServingEngine, drive_random_stream,
+                                     embedding_config_of_arch)
+    ecfg = embedding_config_of_arch(family, cfg)
+    emb = Embedding(ecfg)
+    params = emb.init(jax.random.PRNGKey(0))
+    artifact = emb.export(params)
+    full_bits = ecfg.vocab_size * ecfg.dim * 32
+    print(f"engine table: kind={ecfg.kind} vocab={ecfg.vocab_size} "
+          f"d={ecfg.dim}; artifact "
+          f"{emb.serving_size_bits()/8/1e6:.2f} MB "
+          f"({100*emb.serving_size_bits()/full_bits:.1f}% of full)")
+
+    engine = ServingEngine(emb, artifact, backend=backend,
+                           max_queue=max_queue)
+    st = drive_random_stream(engine, ecfg.vocab_size, n_requests, req_batch)
+    print(f"engine: {st.requests} requests / {st.lookups} lookups in "
+          f"{st.flushes} flushes, {st.seconds:.3f}s -> "
+          f"{st.lookups_per_s:,.0f} lookups/s "
+          f"(block_b={engine.block_b}, pad overhead "
+          f"{100*(st.padded_lookups/st.lookups-1) if st.lookups else 0.0:.1f}%)")
+    return st
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -127,10 +164,19 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=16)
     ap.add_argument("--candidates", type=int, default=10000)
+    ap.add_argument("--engine", action="store_true",
+                    help="drive the micro-batching ServingEngine")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--req-batch", type=int, default=64)
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=KERNEL_BACKENDS)
     args = ap.parse_args()
 
     family, cfg = get_arch(args.arch, smoke=args.smoke)
-    if family == "lm":
+    if args.engine:
+        serve_engine(family, cfg, args.requests, args.req_batch,
+                     backend=args.kernel_backend)
+    elif family == "lm":
         serve_lm(cfg, args.batch, args.prompt_len, args.decode_steps)
     elif cfg.model == "two_tower":
         serve_retrieval(cfg, args.candidates)

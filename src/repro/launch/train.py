@@ -45,7 +45,6 @@ def _lm_setup(cfg, batch: int, seq: int):
 
 
 def _recsys_setup(cfg, batch: int):
-    from repro.data.sampler import PointwiseSampler
     from repro.data.synthetic import CTRStream
     from repro.launch.cells import _recsys_model
     model = _recsys_model(cfg)

@@ -28,7 +28,6 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import GNNConfig
 from repro.models.gnn import so3

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import math
 from functools import lru_cache
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

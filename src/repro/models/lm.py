@@ -250,7 +250,6 @@ def forward(params: dict, tokens: jax.Array, cfg: LMConfig,
     kv_out = {}
     if cfg.is_pattern:
         p_ = cfg.local_global_pattern
-        g = cfg.num_layers // (p_ + 1)
         r = cfg.num_layers % (p_ + 1)
         w_loc = jnp.int32(cfg.sliding_window)
         w_glob = attn.FULL_WINDOW

@@ -7,7 +7,7 @@ switch — these are the models the reproduction experiments train.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

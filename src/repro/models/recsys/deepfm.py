@@ -11,7 +11,6 @@ import jax.numpy as jnp
 from repro.configs.base import RecsysConfig
 from repro.core import Embedding, EmbeddingConfig
 from repro.models.recsys.fields import FieldEmbeddings
-from repro.nn import initializers as init
 from repro.nn.mlp import mlp, mlp_init
 
 

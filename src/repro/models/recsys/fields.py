@@ -1,10 +1,12 @@
 """Multi-field categorical embedding collection + EmbeddingBag.
 
-JAX has no native EmbeddingBag or CSR sparse; the bag is built from
-``jnp.take`` + ``jax.ops.segment_sum`` (kernel_taxonomy §B.6 — this IS
-part of the system).  Large-vocab fields are compressed with the
-paper's MGQE; small fields stay full (quantizing a 100-row table is
-pure overhead — same reasoning as DESIGN.md §4 MACE note).
+JAX has no native EmbeddingBag or CSR sparse; sum/mean CSR pooling
+routes through the fused ``embedding_bag`` Pallas kernel via the
+backend dispatch layer (each table row read once, each bag written
+once — the FBGEMM-TBE pattern), with the take+segment_sum jnp path as
+the XLA fallback and for max mode.  Large-vocab fields are compressed
+with the paper's MGQE; small fields stay full (quantizing a 100-row
+table is pure overhead — same reasoning as DESIGN.md §4 MACE note).
 """
 from __future__ import annotations
 
@@ -22,14 +24,15 @@ def field_embedding_config(cfg: RecsysConfig, vocab: int) -> EmbeddingConfig:
     """Per-field embedding spec: MGQE/DPQ for big fields, full for small."""
     kind = cfg.embed_kind
     sharded = cfg.sharded_embedding and vocab >= cfg.mgqe_min_vocab
+    kb = cfg.kernel_backend
     if vocab < cfg.mgqe_min_vocab or kind == "full":
         return EmbeddingConfig(vocab_size=vocab, dim=cfg.embed_dim,
-                               sharded_rows=sharded)
+                               sharded_rows=sharded, kernel_backend=kb)
     if kind == "dpq":
         return EmbeddingConfig(
             vocab_size=vocab, dim=cfg.embed_dim, kind="dpq",
             num_subspaces=cfg.num_subspaces, num_centroids=cfg.num_centroids,
-            sharded_rows=sharded)
+            sharded_rows=sharded, kernel_backend=kb)
     if kind == "mgqe":
         bounds = frequency_boundaries(vocab, (cfg.tier_head_fraction,))
         return EmbeddingConfig(
@@ -37,7 +40,7 @@ def field_embedding_config(cfg: RecsysConfig, vocab: int) -> EmbeddingConfig:
             num_subspaces=cfg.num_subspaces, num_centroids=cfg.num_centroids,
             tier_boundaries=bounds,
             tier_num_centroids=(cfg.num_centroids, cfg.tier_tail_centroids),
-            sharded_rows=sharded)
+            sharded_rows=sharded, kernel_backend=kb)
     # baselines for the comparison sweeps
     if kind == "lrf":
         return EmbeddingConfig(vocab_size=vocab, dim=cfg.embed_dim,
@@ -104,18 +107,26 @@ class FieldEmbeddings:
 
 def embedding_bag(table: jax.Array, ids: jax.Array, segment_ids: jax.Array,
                   num_bags: int, weights: Optional[jax.Array] = None,
-                  mode: str = "sum") -> jax.Array:
+                  mode: str = "sum",
+                  backend: Optional[str] = None) -> jax.Array:
     """CSR-style bag: ids (nnz,), segment_ids (nnz,) sorted ascending,
-    -> pooled (num_bags, d).  mode: sum | mean | max."""
-    rows = jnp.take(table, ids, axis=0)                   # (nnz, d)
-    if weights is not None:
-        rows = rows * weights[:, None]
+    -> pooled (num_bags, d).  mode: sum | mean | max.
+
+    sum/mean run through the dispatched fused kernel (gather +
+    segment-sum in one pass); max has no fused kernel and stays on the
+    jnp path.
+    """
     if mode == "max":
+        rows = jnp.take(table, ids, axis=0)               # (nnz, d)
+        if weights is not None:
+            rows = rows * weights[:, None]
         return jax.ops.segment_max(rows, segment_ids, num_segments=num_bags)
-    pooled = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    from repro.kernels.embedding_bag import bag
+    pooled = bag(table, ids, segment_ids, num_bags, weights, backend=backend)
     if mode == "mean":
-        counts = jax.ops.segment_sum(jnp.ones_like(ids, dtype=rows.dtype),
-                                     segment_ids, num_segments=num_bags)
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(ids, dtype=pooled.dtype), segment_ids,
+            num_segments=num_bags)
         pooled = pooled / jnp.maximum(counts, 1.0)[:, None]
     return pooled
 

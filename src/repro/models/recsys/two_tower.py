@@ -7,14 +7,13 @@ without ever materializing their embeddings (ADC — DESIGN.md §3).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RecsysConfig
-from repro.core import Embedding, EmbeddingConfig
-from repro.core.partition import frequency_boundaries
+from repro.core import Embedding
 from repro.models.recsys.fields import field_embedding_config
 from repro.nn.mlp import mlp, mlp_init
 

@@ -14,8 +14,6 @@ buffer slots that haven't been written yet carry kpos = -1).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

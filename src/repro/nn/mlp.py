@@ -1,7 +1,7 @@
 """Dense FFN blocks: GeGLU/SwiGLU (LM) and plain MLP stacks (recsys)."""
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -26,11 +26,13 @@ Router aux loss: load-balancing loss from Switch Transformer
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.sharding.compat import shard_map
 
 from repro.nn import initializers as init
 
@@ -168,8 +170,6 @@ def moe_ffn_sharded(params: dict, x: jax.Array, *, top_k: int,
         cap = capacity(t_loc, num_experts, top_k, capacity_factor)
 
         if expert_par:
-            e_loc = num_experts // model_n
-
             def expert_fn(buf):                      # (E, cap, d) local grp
                 # route expert rows to their owning model shard
                 buf = jax.lax.all_to_all(buf, model_axis, split_axis=0,
@@ -199,10 +199,10 @@ def moe_ffn_sharded(params: dict, x: jax.Array, *, top_k: int,
         # expert GEMMs split over d_ff
         x_spec = P(data_axes, None, None)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), w_spec, w_spec, wd_spec, x_spec),
         out_specs=(x_spec, P()),
-        check_vma=False)
+        check=False)
     return fn(params["router"], params["w_gate"], params["w_up"],
               params["w_down"], x)

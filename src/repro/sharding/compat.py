@@ -1,0 +1,24 @@
+"""jax version compatibility for shard_map.
+
+``jax.shard_map`` (with ``check_vma=``) landed in jax 0.6; older
+releases ship ``jax.experimental.shard_map.shard_map`` (with
+``check_rep=``).  Everything in this repo goes through this wrapper so
+both API generations work — CI floats on recent jax while pinned TPU
+containers may lag.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Version-agnostic shard_map; ``check`` maps to check_vma/check_rep."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
+__all__ = ["shard_map"]

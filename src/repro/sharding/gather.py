@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding.compat import shard_map
+
 
 def _ambient_mesh():
     from jax.interpreters import pxla
@@ -92,16 +94,16 @@ def row_gather(table: jax.Array, ids: jax.Array,
         dt = dt.at[local].add(dout * hit[:, None].astype(dout.dtype))
         return dt
 
-    gather_sm = jax.shard_map(
+    gather_sm = shard_map(
         fwd_body, mesh=mesh,
         in_specs=(P(model_axis, None), P(data_axes or None)),
         out_specs=P(data_axes or None, None),
-        check_vma=False)
-    scatter_sm = jax.shard_map(
+        check=False)
+    scatter_sm = shard_map(
         bwd_body, mesh=mesh,
         in_specs=(P(data_axes or None), P(data_axes or None, None)),
         out_specs=P(model_axis, None),      # identical across data: no psum
-        check_vma=False)
+        check=False)
 
     @jax.custom_vjp
     def _gather(table, ids_flat):

@@ -18,7 +18,7 @@ Sharding strategy (DESIGN.md §5):
 from __future__ import annotations
 
 import re
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import numpy as np

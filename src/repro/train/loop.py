@@ -4,8 +4,7 @@ straggler monitoring, failure injection (for tests), metric logging.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional
 
 import jax
 import numpy as np

@@ -78,9 +78,8 @@ def apply_updates(cfg: OptimizerConfig, params, grads,
                   state: Dict) -> Tuple[Any, Dict]:
     step = state["step"]
     lr = schedule_lr(cfg, step)
-    grad_norm = jnp.float32(0.0)
     if cfg.grad_clip is not None:
-        grads, grad_norm = clip_by_global_norm(grads, cfg.grad_clip)
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
     new_state: Dict[str, Any] = {"step": step + 1}
 
     if cfg.kind in ("adam", "adamw"):

@@ -1,7 +1,6 @@
 """Synthetic data generators: statistical properties the paper's
 technique depends on (power law, frequency-sorted ids)."""
 import numpy as np
-import pytest
 
 from repro.data.synthetic import (CTRStream, aar_like, criteo_field_vocabs,
                                   movielens_like, zipf_ids)

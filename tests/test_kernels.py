@@ -10,8 +10,7 @@ from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
 from repro.kernels.flash_attention import (attend, flash_attention,
                                            flash_attention_ref)
 from repro.kernels.mgqe_decode import mgqe_decode, mgqe_decode_ref
-from repro.kernels.pq_score import (build_lut_ref, pq_score, pq_score_ref,
-                                    score_candidates)
+from repro.kernels.pq_score import build_lut_ref, pq_score, pq_score_ref
 
 
 # ----------------------------------------------------------- mgqe_decode

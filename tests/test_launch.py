@@ -19,6 +19,7 @@ def test_registry_covers_assignment():
                                 ("qwen3-moe-30b-a3b", "long_500k")}
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_full_batch():
     """The microbatchN train step must produce the same update as the
     full-batch step (linearity of gradients)."""

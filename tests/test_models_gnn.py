@@ -27,6 +27,7 @@ def _graph(n=12, e=30, n_species=10, seed=0, d_feat=0):
     return g
 
 
+@pytest.mark.slow
 def test_mace_smoke_energy_and_grads():
     _, cfg = get_arch("mace", smoke=True)
     m = MACE(cfg)
@@ -70,6 +71,7 @@ def test_mace_rotation_invariance():
                                atol=1e-4)
 
 
+@pytest.mark.slow
 def test_mace_permutation_equivariance():
     _, cfg = get_arch("mace", smoke=True)
     m = MACE(cfg)

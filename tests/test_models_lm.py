@@ -16,6 +16,7 @@ def _batch(cfg, b=2, s=32, seed=0):
     return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_lm_smoke_train_step(arch):
     _, cfg = get_arch(arch, smoke=True)
@@ -38,6 +39,7 @@ def test_lm_smoke_output_shapes(arch):
     assert np.all(np.isfinite(np.asarray(h, np.float32)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_lm_decode_matches_forward(arch):
     """Greedy decode after prefill must match the full-sequence forward
@@ -126,6 +128,7 @@ def test_gemma3_pattern_layout():
         assert params["rem"]["wq"].shape[0] == r
 
 
+@pytest.mark.slow
 def test_split_cache_decode_matches_uniform_cache():
     """Beyond-paper split local/global cache must be numerically
     identical to the uniform max-length cache."""
@@ -194,6 +197,7 @@ def test_kv_repeat_forward_identical():
                                   np.asarray(h2, np.float32))
 
 
+@pytest.mark.slow
 def test_group_remat_matches_layer_remat():
     """Remat granularity changes memory, never values or gradients."""
     import dataclasses

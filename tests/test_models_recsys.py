@@ -24,6 +24,7 @@ def _ctr_batch(cfg, seed=0):
 
 @pytest.mark.parametrize("arch,cls", [("autoint", AutoInt),
                                       ("deepfm", DeepFM)])
+@pytest.mark.slow
 def test_ctr_smoke_train_and_serve(arch, cls):
     _, cfg = get_arch(arch, smoke=True)
     m = cls(cfg)
@@ -41,6 +42,7 @@ def test_ctr_smoke_train_and_serve(arch, cls):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_bst_smoke_and_serve():
     _, cfg = get_arch("bst", smoke=True)
     m = BST(cfg)
@@ -60,6 +62,7 @@ def test_bst_smoke_and_serve():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_two_tower_smoke_and_adc():
     _, cfg = get_arch("two-tower-retrieval", smoke=True)
     m = TwoTower(cfg)

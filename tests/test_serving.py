@@ -92,6 +92,47 @@ def test_adc_reconstruction_beats_random():
     assert mse < float(jnp.var(vecs))  # better than predicting the mean
 
 
+def test_serving_engine_microbatches_and_returns_right_request():
+    """Queued requests decode in one flush; each handle gets ITS rows,
+    including lookup() racing a non-empty queue."""
+    from repro.launch.engine import ServingEngine
+    cfg = EmbeddingConfig(vocab_size=200, dim=16, kind="dpq",
+                          num_subspaces=4, num_centroids=8,
+                          decode_block_b=32)
+    emb = Embedding(cfg)
+    params = emb.init(jax.random.PRNGKey(0))
+    art = emb.export(params)
+    eng = ServingEngine(emb, art)
+
+    ids_a, ids_b = jnp.arange(5), jnp.asarray([7, 3])
+    eng.submit(ids_a)
+    out_b = eng.lookup(ids_b)          # queue non-empty: must return b's rows
+    np.testing.assert_allclose(np.asarray(out_b),
+                               np.asarray(emb.serve(art, ids_b)), atol=1e-6)
+
+    h1 = eng.submit(jnp.asarray([0]))
+    h2 = eng.submit(jnp.arange(40))
+    outs = eng.flush()
+    assert outs[h1].shape == (1, 16) and outs[h2].shape == (40, 16)
+    np.testing.assert_allclose(
+        np.asarray(outs[h2]), np.asarray(emb.serve(art, jnp.arange(40))),
+        atol=1e-6)
+    st = eng.stats()
+    assert st.lookups == 5 + 2 + 1 + 40
+    assert st.padded_lookups % cfg.decode_block_b == 0
+    assert st.flushes == 2 and st.requests == 4
+
+
+def test_fit_pq_corpus_smaller_than_codebook():
+    """n < K must fall back to with-replacement seeding, not crash."""
+    vecs = jax.random.normal(jax.random.PRNGKey(0), (10, 8))
+    art = adc.build_corpus_artifact(jax.random.PRNGKey(1), vecs,
+                                    num_subspaces=4, num_centroids=16,
+                                    iters=3)
+    assert art["codes"].shape == (10, 4)
+    assert float(adc.reconstruction_mse(art, vecs)) < float(jnp.var(vecs))
+
+
 def test_mgqe_decode_kernel_serves_same_as_jnp_path():
     """The Pallas mgqe_decode kernel (interpret mode) must reproduce the
     framework serving lookup exactly."""

@@ -11,6 +11,7 @@ import textwrap
 
 import pytest
 
+
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -46,6 +47,7 @@ def test_debug_mesh_and_param_specs():
     """)
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """One train step under a (2, 4) mesh must match the unsharded step
     bit-for-bit (up to float tolerance) — the SPMD-correctness test."""

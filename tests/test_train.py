@@ -206,8 +206,8 @@ def test_compressed_psum_mean_single_device():
     """shard_map'd compressed all-reduce on a 1-device mesh: the mean
     must equal the (dequantized) local gradient."""
     from jax.sharding import Mesh
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+    from repro.sharding.compat import shard_map
     from repro.train.compression import compressed_psum_mean
 
     mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
@@ -220,7 +220,7 @@ def test_compressed_psum_mean_single_device():
 
     out, new_err = jax.jit(shard_map(
         f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-        check_vma=False))(g, err)
+        check=False))(g, err)
     q, scale = quantize_int8(g["w"])
     np.testing.assert_allclose(np.asarray(out["w"]),
                                np.asarray(dequantize(q, scale)), rtol=1e-6)

@@ -10,7 +10,6 @@ import jax
 
 from repro.configs.registry import shapes_for
 from repro.launch.cells import build_cell
-from repro.launch.dryrun import run_cell
 from repro.launch.mesh import make_production_mesh
 
 arch = sys.argv[1]
