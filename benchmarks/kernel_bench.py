@@ -113,6 +113,77 @@ def bench_engine(results: dict, n: int, d: int, D: int, K: int,
     }
 
 
+def bench_sharded_decode(results: dict, n: int, d: int, D: int, K: int,
+                         batch: int):
+    """Sharded (Mesh(data=2, model=2) shard_map quantized gather) vs
+    single-device serving decode on the same artifact + batch.
+
+    Needs >= 4 devices; as a script this file forces 4 host devices
+    before jax initializes, so the bench runs on a CPU dev box too (the
+    shards then timeshare one CPU — the number that matters there is
+    parity and the wire-byte accounting, not wall-clock).
+    """
+    import dataclasses
+    from repro.sharding.rules import shard_quantized_artifact
+    if jax.device_count() < 4:
+        print(f"sharded decode: skipped ({jax.device_count()} device(s); "
+              f"run benchmarks/kernel_bench.py as a script for forced "
+              f"host devices)")
+        results["sharded_decode"] = {
+            "skipped": f"needs >= 4 devices, have {jax.device_count()}"}
+        return
+    k = jax.random.PRNGKey(0)
+    bounds = frequency_boundaries(n, (0.1,))
+    cfg = EmbeddingConfig(vocab_size=n, dim=d, kind="mgqe",
+                          num_subspaces=D, num_centroids=K,
+                          tier_boundaries=bounds,
+                          tier_num_centroids=(K, max(2, K // 4)),
+                          sharded_codes=True)
+    artifact = {
+        "codes": jax.random.randint(k, (n, D), 0, K).astype(jnp.uint8),
+        "centroids": jax.random.normal(k, (D, K, d // D)),
+    }
+    ids = jax.random.randint(jax.random.PRNGKey(1), (batch,), 0, n)
+
+    single_cfg = dataclasses.replace(cfg, sharded_codes=False)
+    single_fn = jax.jit(Embedding(single_cfg).serve)
+    t_single = _time(single_fn, artifact, ids)
+    ref = single_fn(artifact, ids)
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    emb_sharded = Embedding(cfg)
+    art_sharded = shard_quantized_artifact(artifact, cfg, mesh)
+    with mesh:
+        sharded_fn = jax.jit(emb_sharded.serve)
+        t_sharded = _time(sharded_fn, art_sharded, ids)
+        out = sharded_fn(art_sharded, ids)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    parity_ok = err < 1e-5
+    if not parity_ok:
+        # recorded + reported, never a bare assert: the json must still
+        # be written (CI uploads it), and the check must survive -O
+        print(f"WARNING: sharded decode parity FAILED (max err {err:.2e})")
+
+    model_n = dict(mesh.shape)["model"]
+    wire_mb = batch * d * 4 / 1e6          # psum of (B, d) partials
+    print(f"sharded decode B={batch} mesh{dict(mesh.shape)}: "
+          f"single-dev {t_single*1e3:.2f} ms | sharded {t_sharded*1e3:.2f} "
+          f"ms (parity err {err:.1e}); codes {n*D/1e6:.1f} MB -> "
+          f"{n*D/model_n/1e6:.1f} MB/shard, wire {wire_mb:.2f} MB/step "
+          f"(vocab-independent)")
+    results["sharded_decode"] = {
+        "vocab": n, "dim": d, "num_subspaces": D, "num_centroids": K,
+        "batch": batch, "mesh": dict(mesh.shape),
+        "single_device_ms": t_single * 1e3,
+        "sharded_ms": t_sharded * 1e3,
+        "parity_max_err": err,
+        "parity_ok": parity_ok,
+        "codes_mbytes_total": n * D / 1e6,
+        "codes_mbytes_per_shard": n * D / model_n / 1e6,
+        "wire_mbytes_per_step": wire_mb,
+    }
+
+
 def bench_adc(results: dict, d: int, D: int, K: int, n_cand: int):
     k = jax.random.PRNGKey(0)
     cent = jax.random.normal(k, (D, K, d // D))
@@ -157,6 +228,7 @@ def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
         "resolved_kernel_backend": dispatch.resolve_backend(),
     }
     bench_serving_decode(results, n, d, D, K, batch=4096)
+    bench_sharded_decode(results, n, d, D, K, batch=4096)
     bench_engine(results, n, d, D, K,
                  n_requests=50 if quick else 200, req_batch=64)
     bench_adc(results, d, D, K, n_cand=n)
@@ -165,12 +237,21 @@ def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
         with open(out_json, "w") as f:
             json.dump(results, f, indent=1)
         print(f"wrote {out_json}")
-    return 0
+    # parity failures flip the exit code AFTER the json is written, so
+    # CI still uploads the full results for diagnosis
+    return 0 if results.get("sharded_decode", {}).get("parity_ok", True) \
+        else 1
 
 
 if __name__ == "__main__":
+    # touches no jax device state at import (see its module docstring),
+    # so the flag still lands before backend init
+    from repro.launch.mesh import force_host_device_count
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="BENCH_kernels.json")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="forced host device count for the sharded bench")
     a = ap.parse_args()
+    force_host_device_count(a.devices)
     raise SystemExit(main(out_json=a.json, quick=a.quick))

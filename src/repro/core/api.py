@@ -89,6 +89,11 @@ class Embedding:
             return baselines.hash_lookup(artifact, ids, cfg)[0]
         if cfg.kind == "sq":
             return baselines.sq_serving_lookup(artifact, ids, cfg)
+        if cfg.kind in ("dpq", "mgqe") and cfg.sharded_codes:
+            # distributed codes: shard_map gather over the ambient mesh
+            # (single-device fallback inside) — DESIGN.md §6
+            from repro.sharding.quantized import quantized_gather
+            return quantized_gather(artifact, ids, cfg)
         if cfg.kind == "dpq":
             return dpq.serving_lookup(artifact["codes"], artifact["centroids"],
                                       ids, backend=cfg.kernel_backend,

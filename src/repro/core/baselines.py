@@ -15,7 +15,13 @@ import jax.numpy as jnp
 
 from repro.core.types import EmbeddingConfig
 
-_ZERO = jnp.float32(0.0)
+
+def _zero():
+    """Aux-loss placeholder.  Built per call, NOT at module scope:
+    a module-level jnp constant would initialize the jax backend at
+    import time, breaking tools that must set XLA_FLAGS first
+    (launch/dryrun.py, launch/serve.py --mesh)."""
+    return jnp.float32(0.0)
 
 
 # ---------------------------------------------------------------- full
@@ -28,7 +34,7 @@ def full_init(key, cfg: EmbeddingConfig, dtype=jnp.float32) -> dict:
 def full_lookup(params, ids, cfg) -> Tuple[jax.Array, jax.Array]:
     from repro.sharding.gather import row_gather
     return row_gather(params["emb"], ids,
-                      sharded=cfg.sharded_rows), _ZERO
+                      sharded=cfg.sharded_rows), _zero()
 
 
 # ----------------------------------------------------------------- lrf
@@ -44,7 +50,7 @@ def lrf_init(key, cfg: EmbeddingConfig, dtype=jnp.float32) -> dict:
 
 def lrf_lookup(params, ids, cfg) -> Tuple[jax.Array, jax.Array]:
     rows = jnp.take(params["u"], ids, axis=0)
-    return rows @ params["v"], _ZERO
+    return rows @ params["v"], _zero()
 
 
 # ------------------------------------------------------------------ sq
@@ -85,4 +91,4 @@ def _hash_ids(ids, buckets: int):
 
 def hash_lookup(params, ids, cfg) -> Tuple[jax.Array, jax.Array]:
     return jnp.take(params["emb"], _hash_ids(ids, cfg.hash_buckets),
-                    axis=0), _ZERO
+                    axis=0), _zero()

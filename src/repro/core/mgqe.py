@@ -6,7 +6,10 @@ Three variants, all built on dpq.py:
   only use the first K_i centroids.  Implemented as a *masked single
   pass* — per-item ``k_limit = K_tier(id)`` fed to ``dpq.assign_codes``
   — instead of the paper's dynamic group-split loop (Algorithm 1),
-  which would force dynamic shapes on TPU.  See DESIGN.md §3.
+  which would force dynamic shapes on TPU.  See DESIGN.md §3
+  ("masked single pass"); serving decodes through the fused kernel
+  (DESIGN.md §5) and, when codes are distributed, the sharded gather
+  (DESIGN.md §6).
 
 * ``private_k``: tier i owns a private codebook with K_i centroids
   (allocated at K_max and masked).  Static python loop over tiers.
@@ -20,7 +23,7 @@ Tier membership is pure arithmetic over frequency-sorted ids
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -84,8 +87,11 @@ def lookup_train(params: dict, ids: jax.Array,
         return dpq.lookup_train(params, ids, k_limit=k_limit, beta=cfg.beta,
                                 sharded_rows=cfg.sharded_rows)
 
-    # private variants: static loop over tiers, blend with masks.
-    e = jnp.take(params["emb"], ids, axis=0)            # (..., d)
+    # private variants: static loop over tiers, blend with masks.  The
+    # full-table row gather takes the shard_map model-parallel path
+    # when the table is row-sharded (same as shared_k via dpq).
+    from repro.sharding.gather import row_gather
+    e = row_gather(params["emb"], ids, sharded=cfg.sharded_rows)  # (..., d)
     tiers = tier_of_ids(ids, cfg.tier_boundaries)       # (...,)
     out = jnp.zeros_like(e)
     aux = jnp.asarray(0.0, dtype=jnp.float32)
@@ -130,18 +136,28 @@ def export_serving(params: dict, cfg: EmbeddingConfig) -> dict:
     return out
 
 
-def serving_lookup(artifact: dict, ids: jax.Array,
-                   cfg: EmbeddingConfig) -> jax.Array:
-    """Every variant decodes through the dispatched fused kernel
-    (cfg.kernel_backend / cfg.decode_block_b; DESIGN.md §5)."""
-    if cfg.mgqe_variant == "shared_k":
+def decode_codes_blend(artifact: dict, ids: jax.Array, cfg: EmbeddingConfig,
+                       tier_ids: Optional[jax.Array] = None) -> jax.Array:
+    """Decode ``ids`` against the artifact's code tables through the
+    dispatched fused kernel, blending private-variant tiers by mask.
+
+    Handles dpq and every MGQE variant.  ``tier_ids`` defaults to
+    ``ids``; the sharded gather (sharding/quantized.py) passes GLOBAL
+    ids there while ``ids`` are shard-local row offsets — tier
+    membership is defined on the global frequency-sorted id space.
+    ONE implementation shared by the single-device serve path and each
+    shard's local decode, so the two cannot drift.
+    """
+    if cfg.kind == "dpq" or cfg.mgqe_variant == "shared_k":
         return dpq.serving_lookup(artifact["codes"], artifact["centroids"],
                                   ids, backend=cfg.kernel_backend,
                                   block_b=cfg.decode_block_b)
-    tiers = tier_of_ids(ids, cfg.tier_boundaries)
+    tiers = tier_of_ids(ids if tier_ids is None else tier_ids,
+                        cfg.tier_boundaries)
     outs = []
     for i, cent in enumerate(artifact["centroids"]):
-        codes_i = (artifact["codes"][i] if isinstance(artifact["codes"], list)
+        codes_i = (artifact["codes"][i]
+                   if isinstance(artifact["codes"], (list, tuple))
                    else artifact["codes"])
         outs.append(dpq.serving_lookup(codes_i, cent, ids,
                                        backend=cfg.kernel_backend,
@@ -150,3 +166,13 @@ def serving_lookup(artifact: dict, ids: jax.Array,
     for i in range(1, len(outs)):
         out = jnp.where((tiers == i)[..., None], outs[i], out)
     return out
+
+
+def serving_lookup(artifact: dict, ids: jax.Array,
+                   cfg: EmbeddingConfig) -> jax.Array:
+    """Every variant decodes through the dispatched fused kernel
+    (cfg.kernel_backend / cfg.decode_block_b; DESIGN.md §5).  For
+    row-sharded code tables use ``sharding.quantized.quantized_gather``
+    (or set ``cfg.sharded_codes`` and call ``Embedding.serve``), which
+    reuses this decode on each shard's local block — DESIGN.md §6."""
+    return decode_codes_blend(artifact, ids, cfg)

@@ -45,13 +45,18 @@ def frequency_boundaries(vocab_size: int,
 
 
 def validate_partition(vocab_size: int, boundaries: Sequence[int]) -> None:
-    """Assert the partition is a disjoint cover of [0, vocab)."""
+    """Raise ValueError unless the partition disjointly covers [0, vocab)."""
     edges = (0,) + tuple(boundaries) + (vocab_size,)
     for lo, hi in zip(edges, edges[1:]):
         if hi <= lo:
             raise ValueError(f"empty/inverted tier [{lo}, {hi})")
     sizes = [hi - lo for lo, hi in zip(edges, edges[1:])]
-    assert sum(sizes) == vocab_size
+    # Defensive coverage check (non-numeric/NaN boundaries slip past the
+    # pairwise comparisons above).  A ValueError, not an assert — it
+    # must survive ``python -O``.
+    if sum(sizes) != vocab_size:
+        raise ValueError(
+            f"tiers cover {sum(sizes)} ids, expected {vocab_size}")
 
 
 def tier_of_ids(ids, boundaries: Sequence[int]):

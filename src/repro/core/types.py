@@ -63,6 +63,14 @@ class EmbeddingConfig:
     # (repro.sharding.gather) instead of plain take — §Perf hillclimb
     sharded_rows: bool = False
 
+    # serving-path code tables row-sharded over the "model" mesh axis
+    # (repro.sharding.quantized; DESIGN.md §6).  When True,
+    # ``Embedding.serve`` routes through the shard_map quantized gather
+    # whenever a >1-device mesh with a "model" axis is ambient, and
+    # falls back to the single-device fused decode otherwise — so the
+    # flag is safe to leave on in single-device tests/tools.
+    sharded_codes: bool = False
+
     # kernel backend for the serving decode hot path (DESIGN.md §5):
     # "auto" defers to the REPRO_KERNEL_BACKEND env var when set, else
     # picks pallas on TPU and the XLA reference elsewhere; "interpret"

@@ -49,26 +49,67 @@ class EngineStats:
 
 
 class ServingEngine:
-    """Micro-batching lookup engine over one exported embedding table."""
+    """Micro-batching lookup engine over one exported embedding table.
+
+    Single-device by default.  Pass ``mesh`` to serve a *sharded*
+    quantized artifact (DESIGN.md §6): code tables are placed
+    row-sharded over ``model_axis`` and codebooks replicated — each
+    shard device-resident once — and every flush fans ONE batched
+    decode across the whole mesh through the shard_map quantized
+    gather, padded to ``block_b x data_shards`` so each data shard's
+    local batch still hits the decode kernel's full-block fast path.
+    """
 
     def __init__(self, emb: Embedding, artifact: dict,
                  block_b: Optional[int] = None,
                  max_queue: int = 65536,
-                 backend: Optional[str] = None):
-        if backend is not None or block_b is not None:
-            # rebuild the config so the decode path dispatches as asked
-            # and the kernel's block size matches the queue padding —
+                 backend: Optional[str] = None,
+                 mesh=None, model_axis: str = "model"):
+        overrides = {}
+        if backend is not None:
+            overrides["kernel_backend"] = backend
+        if block_b is not None:
+            # the kernel's block size must match the queue padding —
             # otherwise a custom block_b would pad flushes to sizes the
             # decode kernel re-pads anyway, multiplying retraces
-            emb = Embedding(dataclasses.replace(
-                emb.cfg,
-                kernel_backend=backend or emb.cfg.kernel_backend,
-                decode_block_b=block_b or emb.cfg.decode_block_b))
+            overrides["decode_block_b"] = block_b
+        self.mesh = mesh
+        self.model_axis = model_axis
+        data_shards = 1
+        if mesh is not None:
+            cfg = emb.cfg
+            if cfg.kind not in ("dpq", "mgqe"):
+                raise ValueError(
+                    f"sharded serving needs a quantized table, got "
+                    f"kind={cfg.kind!r}")
+            if model_axis not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh {dict(mesh.shape)} has no {model_axis!r} axis "
+                    f"to shard codes over")
+            model_n = dict(mesh.shape)[model_axis]
+            if model_n > 1 and cfg.vocab_size % model_n:
+                raise ValueError(
+                    f"vocab={cfg.vocab_size} does not divide over "
+                    f"{model_axis}={model_n}")
+            data_shards = int(np.prod(
+                [n for a, n in mesh.shape.items() if a != model_axis])) or 1
+            overrides["sharded_codes"] = True
+        if overrides:
+            # rebuild the config so the decode path dispatches as asked
+            emb = Embedding(dataclasses.replace(emb.cfg, **overrides))
         self.emb = emb
         self.block_b = emb.cfg.decode_block_b
+        # flushes pad to this granularity: block_b per data shard
+        self.pad_multiple = self.block_b * data_shards
+        self.data_shards = data_shards
         self.max_queue = max_queue
         # device-resident once; requests only ship (B,) int32 ids
-        self.artifact = jax.device_put(artifact)
+        if mesh is not None:
+            from repro.sharding.rules import shard_quantized_artifact
+            self.artifact = shard_quantized_artifact(
+                artifact, emb.cfg, mesh, model_axis=model_axis)
+        else:
+            self.artifact = jax.device_put(artifact)
         self._serve = jax.jit(lambda art, ids: emb.serve(art, ids))
         self._queue: List[jax.Array] = []
         self._queued = 0
@@ -99,11 +140,16 @@ class ServingEngine:
         n_req, n_ids = len(reqs), self._queued
         self._queued = 0
         flat = jnp.concatenate(reqs) if n_req > 1 else reqs[0]
-        pad = (-flat.shape[0]) % self.block_b
+        pad = (-flat.shape[0]) % self.pad_multiple
         if pad:
             flat = jnp.pad(flat, (0, pad))  # id 0 is always valid
         t0 = time.perf_counter()
-        out = self._serve(self.artifact, flat)
+        if self.mesh is not None:
+            # ambient mesh at trace time -> shard_map quantized gather
+            with self.mesh:
+                out = self._serve(self.artifact, flat)
+        else:
+            out = self._serve(self.artifact, flat)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         self.stats_.requests += n_req

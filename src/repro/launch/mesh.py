@@ -6,7 +6,24 @@ set XLA_FLAGS before any jax initialization.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+
+def force_host_device_count(n: int) -> None:
+    """Give CPU boxes ``n`` XLA host devices for mesh tests/demos.
+
+    Appends ``--xla_force_host_platform_device_count`` to XLA_FLAGS;
+    an existing setting is left alone.  Must run before the process's
+    first jax call (backend init reads XLA_FLAGS once); inert when
+    real accelerators are attached.  Shared by ``launch/serve.py
+    --mesh`` and ``benchmarks/kernel_bench.py``.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}").strip()
 
 
 def make_production_mesh(*, multi_pod: bool = False):

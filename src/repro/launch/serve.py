@@ -14,6 +14,16 @@ reports lookups/second:
 
     PYTHONPATH=src python -m repro.launch.serve --arch deepfm --smoke \
         --engine --requests 200 --req-batch 64
+
+``--mesh data=2,model=2`` serves the engine's artifact *sharded*
+(DESIGN.md §6): codes row-sharded over the ``model`` axis, codebooks
+replicated, one shard_map decode fanned across the mesh per flush.
+Off-TPU the requested device count is forced via
+``--xla_force_host_platform_device_count`` (set before jax
+initializes), so the same command works on a CPU dev box:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch deepfm --smoke \
+        --engine --mesh data=2,model=2
 """
 from __future__ import annotations
 
@@ -26,6 +36,18 @@ import numpy as np
 
 from repro.configs.registry import get_arch
 from repro.core.types import KERNEL_BACKENDS
+
+
+def parse_mesh(spec: str):
+    """'data=2,model=2' -> (("data", "model"), (2, 2))."""
+    axes, shape = [], []
+    for part in spec.split(","):
+        name, _, n = part.partition("=")
+        if not n:
+            raise ValueError(f"bad mesh axis {part!r}; want name=N")
+        axes.append(name.strip())
+        shape.append(int(n))
+    return tuple(axes), tuple(shape)
 
 
 def serve_lm(cfg, batch: int, prompt_len: int, decode_steps: int):
@@ -128,7 +150,7 @@ def serve_ctr(cfg, batch: int):
 
 
 def serve_engine(family, cfg, n_requests: int, req_batch: int,
-                 backend=None, max_queue: int = 4096):
+                 backend=None, max_queue: int = 4096, mesh_spec=None):
     """Request-stream demo of the micro-batching engine: N requests of
     random size <= req_batch against the arch's main embedding table."""
     from repro.core import Embedding
@@ -144,13 +166,39 @@ def serve_engine(family, cfg, n_requests: int, req_batch: int,
           f"{emb.serving_size_bits()/8/1e6:.2f} MB "
           f"({100*emb.serving_size_bits()/full_bits:.1f}% of full)")
 
+    mesh = None
+    if mesh_spec is not None:
+        axes, shape = parse_mesh(mesh_spec)
+        need = int(np.prod(shape))
+        if jax.device_count() < need:
+            raise SystemExit(
+                f"--mesh {mesh_spec} needs {need} devices, found "
+                f"{jax.device_count()} (XLA_FLAGS was set too late? "
+                f"export XLA_FLAGS=--xla_force_host_platform_device_"
+                f"count={need})")
+        mesh = jax.make_mesh(shape, axes)
+        model_n = dict(mesh.shape).get("model", 1)
+        # size report only for quantized artifacts; other kinds fall
+        # through so ServingEngine raises its designed ValueError
+        if ecfg.kind in ("dpq", "mgqe"):
+            def mb(leaves):
+                leaves = leaves if isinstance(leaves, list) else [leaves]
+                return sum(x.size * x.dtype.itemsize for x in leaves) / 1e6
+            codes_mb = mb(artifact["codes"])
+            cb_mb = mb(artifact["centroids"])
+            print(f"mesh {dict(mesh.shape)}: codes {codes_mb:.2f} MB "
+                  f"row-sharded x{model_n} -> {codes_mb/model_n:.2f} "
+                  f"MB/shard, + {cb_mb:.3f} MB codebooks replicated "
+                  f"per device")
+
     engine = ServingEngine(emb, artifact, backend=backend,
-                           max_queue=max_queue)
+                           max_queue=max_queue, mesh=mesh)
     st = drive_random_stream(engine, ecfg.vocab_size, n_requests, req_batch)
     print(f"engine: {st.requests} requests / {st.lookups} lookups in "
           f"{st.flushes} flushes, {st.seconds:.3f}s -> "
           f"{st.lookups_per_s:,.0f} lookups/s "
-          f"(block_b={engine.block_b}, pad overhead "
+          f"(block_b={engine.block_b} x {engine.data_shards} data "
+          f"shard(s), pad overhead "
           f"{100*(st.padded_lookups/st.lookups-1) if st.lookups else 0.0:.1f}%)")
     return st
 
@@ -170,12 +218,23 @@ def main():
     ap.add_argument("--req-batch", type=int, default=64)
     ap.add_argument("--kernel-backend", default=None,
                     choices=KERNEL_BACKENDS)
+    ap.add_argument("--mesh", default=None, metavar="data=2,model=2",
+                    help="serve the engine's artifact sharded over this "
+                         "mesh (codes over 'model', batch over the rest)")
     args = ap.parse_args()
+
+    if args.mesh and not args.engine:
+        ap.error("--mesh requires --engine")
+    if args.mesh:
+        # must happen before the first jax call of the process
+        from repro.launch.mesh import force_host_device_count
+        _, shape = parse_mesh(args.mesh)
+        force_host_device_count(int(np.prod(shape)))
 
     family, cfg = get_arch(args.arch, smoke=args.smoke)
     if args.engine:
         serve_engine(family, cfg, args.requests, args.req_batch,
-                     backend=args.kernel_backend)
+                     backend=args.kernel_backend, mesh_spec=args.mesh)
     elif family == "lm":
         serve_lm(cfg, args.batch, args.prompt_len, args.decode_steps)
     elif cfg.model == "two_tower":

@@ -19,7 +19,10 @@ import jax
 import jax.numpy as jnp
 
 # "infinite" window sentinel — bigger than any sequence we lower.
-FULL_WINDOW = jnp.int32(2 ** 30)
+# Plain python int, NOT a jnp constant: a module-level jnp value would
+# initialize the jax backend at import time, breaking tools that must
+# set XLA_FLAGS first (launch/dryrun.py, launch/serve.py --mesh).
+FULL_WINDOW = 2 ** 30
 
 _NEG_INF = -1e30
 

@@ -1,2 +1,3 @@
 """Distribution layer: PartitionSpec rule engine per arch family,
-shard_map helpers (mod-sharded embedding lookup, split-KV decode)."""
+shard_map helpers — dense row gather (gather.py) and the sharded
+quantized-table serving gather (quantized.py, DESIGN.md §6)."""

@@ -32,6 +32,17 @@ def _ambient_mesh():
     return None if mesh.empty else mesh
 
 
+def data_shard_index(mesh, data_axes) -> jax.Array:
+    """Linearized index of this device's data shard — shard_map-body
+    helper shared by the dense row gather and the quantized gather
+    (sharding/quantized.py), so their batch-slice arithmetic is one
+    implementation."""
+    idx = jnp.int32(0)
+    for a in data_axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
 def row_gather(table: jax.Array, ids: jax.Array,
                sharded: bool = False, model_axis: str = "model"
                ) -> jax.Array:
@@ -73,9 +84,7 @@ def row_gather(table: jax.Array, ids: jax.Array,
         full = jax.lax.psum(rows, model_axis)          # (B_global, d)
         # slice this data shard's batch back out
         if data_axes:
-            idx = jnp.int32(0)
-            for a in data_axes:
-                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+            idx = data_shard_index(mesh, data_axes)
             full = jax.lax.dynamic_slice_in_dim(full, idx * b_local,
                                                 b_local, axis=0)
         return full

@@ -1,0 +1,147 @@
+"""Sharded quantized-table serving: distributed codes + replicated
+codebooks (DESIGN.md §6).
+
+MGQE's production story (paper §2, Fig. 1) is that after export only
+integer codes ``(n, D)`` and tiny centroid tables remain.  The codes
+are still O(vocab) — at billion-row vocabs they outgrow one chip's HBM
+— so this module row-shards the *code* tables over the ``model`` mesh
+axis exactly like ``sharding/gather.py`` row-shards dense tables, while
+the codebooks (KBs each; they fit in VMEM, let alone HBM) are simply
+replicated on every device.
+
+The lookup is a shard_map with the same wire-cost shape as the dense
+``row_gather`` path:
+
+  forward: all-gather ids over the data axes (KBs) -> each model shard
+           decodes the rows it owns through the *fused* ``mgqe_decode``
+           kernel on its local code block (zeros elsewhere) -> psum
+           over model of the (B_global, d) partials -> slice the local
+           data-shard batch back out.
+
+Wire bytes per lookup: O(B_global · d · 4), independent of vocab —
+versus the table-sized all-reduces a naive pjit of ``take`` over a
+row-sharded code table makes XLA emit.  There is no backward pass:
+codes are a frozen export artifact.
+
+Every MGQE variant is supported; the per-variant artifact placement
+(which leaves are row-sharded vs replicated) lives in
+``sharding.rules.quantized_artifact_specs`` so the ServingEngine, the
+benches, and the tests all place artifacts the same way.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mgqe
+from repro.core.types import EmbeddingConfig
+from repro.sharding.compat import shard_map
+from repro.sharding.gather import _ambient_mesh, data_shard_index
+
+# Embedding kinds whose serving artifacts this module can distribute.
+SHARDED_KINDS = ("dpq", "mgqe")
+
+
+def supports_sharding(kind: str, variant: str = "-") -> bool:
+    """True when :func:`quantized_gather` can distribute this scheme's
+    codes — the source of truth for the README support matrix
+    (tools/gen_tables.py)."""
+    del variant  # every MGQE variant of a shardable kind is supported
+    return kind in SHARDED_KINDS
+
+
+def sharded_variants():
+    """(kind, variant) pairs the sharded gather supports."""
+    from repro.core.types import MGQE_VARIANTS
+    pairs = [("dpq", "-")] + [("mgqe", v) for v in MGQE_VARIANTS]
+    return [p for p in pairs if supports_sharding(*p)]
+
+
+def _codes_rows(artifact: dict) -> int:
+    """Vocab row count of the (possibly per-tier list of) code tables."""
+    codes = artifact["codes"]
+    if isinstance(codes, (list, tuple)):
+        ns = {c.shape[0] for c in codes}
+        if len(ns) != 1:
+            raise ValueError(
+                f"per-tier code tables disagree on vocab rows: {sorted(ns)}")
+        return ns.pop()
+    return codes.shape[0]
+
+
+def quantized_gather(artifact: dict, ids: jax.Array, cfg: EmbeddingConfig,
+                     model_axis: str = "model",
+                     mesh: Optional[jax.sharding.Mesh] = None) -> jax.Array:
+    """Sharded serving decode: ``Embedding.serve`` for distributed codes.
+
+    Falls back to the single-device fused decode when no usable mesh is
+    ambient or the shapes don't divide (single-device tests, export
+    tooling) — call sites never branch.
+    """
+    if cfg.kind not in SHARDED_KINDS:
+        raise ValueError(f"cannot shard codes of kind={cfg.kind!r}")
+    mesh = mesh or _ambient_mesh()
+    if mesh is None or mesh.size == 1 or model_axis not in mesh.axis_names:
+        return mgqe.decode_codes_blend(artifact, ids, cfg)
+
+    data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    model_n = mesh.shape[model_axis]
+    data_n = int(np.prod([mesh.shape[a] for a in data_axes]))
+    v = _codes_rows(artifact)
+    lead = ids.shape
+    flat = int(np.prod(lead))
+    if model_n == 1 or v % model_n or flat == 0:
+        # NOTE: on an actually-sharded artifact this fallback makes
+        # XLA all-gather the O(vocab) code table — correct but slow.
+        # Only reachable for indivisible vocabs (the engine rejects
+        # those up front) or empty batches; indivisible *batches* are
+        # padded below instead of falling back.
+        return mgqe.decode_codes_blend(artifact, ids, cfg)
+    # pad the flat batch up to the data-shard granularity (id 0 is
+    # always valid) so odd request sizes keep the O(B·d) wire path
+    flat_ids = ids.reshape(-1)
+    pad = (-flat) % data_n
+    if pad:
+        flat_ids = jnp.pad(flat_ids, (0, pad))
+    rows_local = v // model_n
+    b_local = (flat + pad) // data_n
+    d_out = cfg.dim
+
+    def body(art_loc, ids_loc):
+        ids_all = ids_loc
+        if data_axes:
+            ids_all = jax.lax.all_gather(ids_all, data_axes, tiled=True)
+        shard = jax.lax.axis_index(model_axis)
+        local = ids_all - shard * rows_local
+        hit = (local >= 0) & (local < rows_local)
+        local = jnp.clip(local, 0, rows_local - 1)
+        # decode against the LOCAL code shard; tier membership comes
+        # from the global id (frequency rank), not the shard offset
+        rows = mgqe.decode_codes_blend(art_loc, local, cfg,
+                                       tier_ids=ids_all)  # (B_global, d)
+        rows = rows * hit[:, None].astype(rows.dtype)
+        full = jax.lax.psum(rows, model_axis)
+        if data_axes:
+            idx = data_shard_index(mesh, data_axes)
+            full = jax.lax.dynamic_slice_in_dim(full, idx * b_local,
+                                                b_local, axis=0)
+        return full
+
+    from repro.sharding.rules import quantized_artifact_specs
+    art_specs = quantized_artifact_specs(cfg, model_axis=model_axis)
+    gather_sm = shard_map(
+        body, mesh=mesh,
+        in_specs=(art_specs, P(data_axes or None)),
+        out_specs=P(data_axes or None, None),
+        check=False)
+    out = gather_sm(artifact, flat_ids)[:flat]
+    return out.reshape(lead + (d_out,))
+
+
+__all__ = ["SHARDED_KINDS", "quantized_gather", "sharded_variants",
+           "supports_sharding"]

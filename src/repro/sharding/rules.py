@@ -287,6 +287,42 @@ def recsys_batch_spec(batch_dict_template, multi_pod: bool) -> Any:
 
 
 # ----------------------------------------------------------------------
+# quantized serving artifacts (DESIGN.md §6)
+# ----------------------------------------------------------------------
+
+def quantized_artifact_specs(cfg, model_axis: str = "model"):
+    """PartitionSpec pytree for a dpq/mgqe serving artifact.
+
+    Placement policy (sharding/quantized.py): code tables — the only
+    O(vocab) leaves — are row-sharded over ``model_axis``; centroid
+    tables are KBs and replicated everywhere.  The returned tree
+    matches ``Embedding.serving_artifact_struct()`` leaf-for-leaf, so
+    it can be zipped against a real artifact for ``jax.device_put`` or
+    passed whole as shard_map ``in_specs``.
+    """
+    if cfg.kind not in ("dpq", "mgqe"):
+        raise ValueError(f"no quantized artifact for kind={cfg.kind!r}")
+    codes = P(model_axis, None)
+    if cfg.kind == "dpq" or cfg.mgqe_variant == "shared_k":
+        return {"codes": codes, "centroids": P()}
+    if cfg.mgqe_variant == "private_k":
+        return {"codes": codes,
+                "centroids": [P() for _ in range(cfg.num_tiers)]}
+    # private_d: one (n, D_i) code table per tier, each row-sharded
+    return {"codes": [codes for _ in range(cfg.num_tiers)],
+            "centroids": [P() for _ in range(cfg.num_tiers)]}
+
+
+def shard_quantized_artifact(artifact, cfg, mesh, model_axis: str = "model"):
+    """Place an exported artifact onto ``mesh``: codes row-sharded,
+    codebooks replicated.  Returns the device-resident pytree."""
+    specs = quantized_artifact_specs(cfg, model_axis=model_axis)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(artifact, shardings)
+
+
+# ----------------------------------------------------------------------
 # generic helpers
 # ----------------------------------------------------------------------
 

@@ -26,11 +26,19 @@ except ImportError:          # pragma: no cover - exercised on bare installs
         return deco
 
     class _StrategyStub:
-        """st.<anything>(...) placeholder; never executed (tests skip)."""
+        """st.<anything>(...) placeholder; never executed (tests skip).
+
+        Returns itself from every attribute/call so chained strategy
+        builders (``st.integers(...).flatmap(...).map(...)``) evaluated
+        at decoration time still collect cleanly.
+        """
 
         def __getattr__(self, name):
             def strategy(*args, **kwargs):
-                return None
+                return self
             return strategy
+
+        def __call__(self, *args, **kwargs):
+            return self
 
     st = _StrategyStub()

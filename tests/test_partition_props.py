@@ -1,0 +1,116 @@
+"""Property tests for frequency-based vocabulary partitioning
+(core/partition.py) — the arithmetic the whole tier system rests on.
+
+Hypothesis cases skip individually on bare installs
+(tests/_hypothesis_compat.py); the plain pytest cases always run.
+"""
+import numpy as np
+import pytest
+
+from repro.core.partition import (frequency_boundaries, rank_by_frequency,
+                                  tier_of_ids, validate_partition)
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+
+
+# ----------------------------------------------------------------------
+# rank_by_frequency
+# ----------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=10_000),
+                min_size=1, max_size=300))
+def test_rank_remap_inverse_roundtrip(counts):
+    """remap and inverse are mutually inverse permutations:
+    remap[inverse] == arange == inverse-composed-with-remap."""
+    counts = np.asarray(counts)
+    remap, inverse = rank_by_frequency(counts)
+    n = len(counts)
+    assert sorted(remap.tolist()) == list(range(n))
+    np.testing.assert_array_equal(remap[inverse], np.arange(n))
+    np.testing.assert_array_equal(inverse[remap], np.arange(n))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=10_000),
+                min_size=1, max_size=300))
+def test_rank_orders_counts_descending_with_stable_ties(counts):
+    counts = np.asarray(counts)
+    remap, inverse = rank_by_frequency(counts)
+    ranked = counts[inverse]
+    assert np.all(ranked[:-1] >= ranked[1:])
+    # ties broken by old id: equal counts keep ascending old-id order
+    for i in range(len(ranked) - 1):
+        if ranked[i] == ranked[i + 1]:
+            assert inverse[i] < inverse[i + 1]
+
+
+# ----------------------------------------------------------------------
+# tier_of_ids
+# ----------------------------------------------------------------------
+
+def _boundaries_strategy():
+    """(vocab_size, strictly-ascending in-range boundaries)."""
+    return st.integers(min_value=2, max_value=5_000).flatmap(
+        lambda v: st.tuples(
+            st.just(v),
+            st.lists(st.integers(min_value=1, max_value=v - 1),
+                     unique=True, max_size=6).map(sorted).map(tuple)))
+
+
+@settings(max_examples=200, deadline=None)
+@given(_boundaries_strategy())
+def test_tier_of_ids_monotone_and_bounded(vb):
+    vocab, bounds = vb
+    validate_partition(vocab, bounds)
+    ids = np.arange(vocab)
+    tiers = tier_of_ids(ids, bounds)
+    # monotone non-decreasing in id, range [0, num_tiers)
+    assert np.all(np.diff(tiers) >= 0)
+    assert tiers[0] == 0 and tiers[-1] == len(bounds)
+    # each boundary id is exactly where the tier increments
+    for i, b in enumerate(bounds):
+        assert tiers[b] == i + 1 and tiers[b - 1] == i
+    # tier sizes telescope back to the edges
+    np.testing.assert_array_equal(
+        np.bincount(tiers, minlength=len(bounds) + 1),
+        np.diff(np.asarray((0,) + bounds + (vocab,))))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=10, max_value=100_000),
+       st.floats(min_value=0.001, max_value=0.999))
+def test_frequency_boundaries_always_validate(vocab, frac):
+    bounds = frequency_boundaries(vocab, (frac,))
+    validate_partition(vocab, bounds)
+    assert 1 <= bounds[0] <= vocab - 1
+
+
+# ----------------------------------------------------------------------
+# validate_partition error paths (plain pytest — always run)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("vocab,bounds", [
+    (100, (0,)),        # empty first tier
+    (100, (100,)),      # empty last tier
+    (100, (60, 40)),    # inverted
+    (100, (50, 50)),    # duplicate boundary
+])
+def test_validate_partition_rejects_bad_tiers(vocab, bounds):
+    with pytest.raises(ValueError):
+        validate_partition(vocab, bounds)
+
+
+def test_validate_partition_coverage_check_is_an_exception():
+    """The coverage-sum branch must raise ValueError (NOT a bare assert
+    that vanishes under ``python -O``).  A NaN boundary slips past the
+    pairwise ordering checks — NaN comparisons are all False — and only
+    the coverage sum catches it."""
+    with pytest.raises(ValueError, match="cover"):
+        validate_partition(100, (float("nan"),))
+
+
+def test_validate_partition_accepts_good_partitions():
+    validate_partition(100, ())
+    validate_partition(100, (10,))
+    validate_partition(100, (10, 50, 99))

@@ -127,6 +127,124 @@ def test_sharded_mgqe_embedding_lookup_matches():
     """)
 
 
+def test_sharded_quantized_gather_matches_serve_all_variants():
+    """Row-sharded codes + replicated codebooks on Mesh(data=2, model=2)
+    must serve identically to the single-device fused decode, for DPQ
+    and all three MGQE variants (DESIGN.md §6)."""
+    _run("""
+        import warnings; warnings.filterwarnings('ignore')
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import Embedding, EmbeddingConfig
+        from repro.sharding.rules import shard_quantized_artifact
+
+        variants = [
+            dict(kind="dpq", num_subspaces=4, num_centroids=8),
+            dict(kind="mgqe", num_subspaces=4, num_centroids=8,
+                 tier_boundaries=(16,), tier_num_centroids=(8, 4)),
+            dict(kind="mgqe", mgqe_variant="private_k", num_subspaces=4,
+                 num_centroids=8, tier_boundaries=(16,),
+                 tier_num_centroids=(8, 4)),
+            dict(kind="mgqe", mgqe_variant="private_d", num_subspaces=4,
+                 num_centroids=8, tier_boundaries=(16,),
+                 tier_num_subspaces=(4, 2)),
+        ]
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        assert dict(mesh.shape) == {"data": 2, "model": 2}
+        for kw in variants:
+            cfg = EmbeddingConfig(vocab_size=128, dim=16, **kw)
+            emb = Embedding(cfg)
+            art = emb.export(emb.init(jax.random.PRNGKey(0)))
+            ids = jax.random.randint(jax.random.PRNGKey(1), (8, 8), 0, 128)
+            ref = emb.serve(art, ids)
+
+            scfg = dataclasses.replace(cfg, sharded_codes=True)
+            semb = Embedding(scfg)
+            art_s = shard_quantized_artifact(art, scfg, mesh)
+            with mesh:
+                out = jax.jit(semb.serve)(art_s, ids)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=1e-5)
+            # no ambient mesh -> single-device fallback, same result
+            np.testing.assert_allclose(np.asarray(semb.serve(art, ids)),
+                                       np.asarray(ref), atol=1e-5)
+        print("OK")
+    """)
+
+
+def test_sharded_engine_matches_single_device():
+    """ServingEngine(mesh=...) — per-shard device-resident artifact,
+    flushes padded to block_b x data shards — returns the same rows as
+    the single-device engine."""
+    _run("""
+        import warnings; warnings.filterwarnings('ignore')
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import Embedding, EmbeddingConfig
+        from repro.launch.engine import ServingEngine
+
+        cfg = EmbeddingConfig(vocab_size=256, dim=16, kind="mgqe",
+                              num_subspaces=4, num_centroids=8,
+                              tier_boundaries=(32,),
+                              tier_num_centroids=(8, 4),
+                              decode_block_b=32)
+        emb = Embedding(cfg)
+        art = emb.export(emb.init(jax.random.PRNGKey(0)))
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        eng = ServingEngine(emb, art, mesh=mesh)
+        ref_eng = ServingEngine(emb, art)
+        assert eng.pad_multiple == 32 * 2 and eng.data_shards == 2
+
+        rng = np.random.default_rng(0)
+        reqs = [rng.integers(0, 256, n) for n in (5, 40, 1, 17)]
+        handles = [eng.submit(r) for r in reqs]
+        ref_handles = [ref_eng.submit(r) for r in reqs]
+        outs, ref_outs = eng.flush(), ref_eng.flush()
+        for h, rh in zip(handles, ref_handles):
+            np.testing.assert_allclose(np.asarray(outs[h]),
+                                       np.asarray(ref_outs[rh]), atol=1e-5)
+        st = eng.stats()
+        assert st.padded_lookups % eng.pad_multiple == 0
+        print("OK")
+    """)
+
+
+def test_sharded_rows_train_lookup_private_variants():
+    """Training-path row gather (sharded_rows) parity for the private
+    MGQE variants — the full table row-sharded over model."""
+    _run("""
+        import warnings; warnings.filterwarnings('ignore')
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import Embedding, EmbeddingConfig
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        for variant, extra in [
+                ("private_k", dict(tier_num_centroids=(8, 4))),
+                ("private_d", dict(tier_num_subspaces=(4, 2)))]:
+            cfg = EmbeddingConfig(vocab_size=128, dim=16, kind="mgqe",
+                                  mgqe_variant=variant, num_subspaces=4,
+                                  num_centroids=8, tier_boundaries=(16,),
+                                  **extra)
+            emb = Embedding(cfg)
+            p = emb.init(jax.random.PRNGKey(0))
+            ids = jax.random.randint(jax.random.PRNGKey(1), (64,), 0, 128)
+            ref, ref_aux = emb.apply(p, ids)
+
+            semb = Embedding(dataclasses.replace(cfg, sharded_rows=True))
+            shard = {"emb": NamedSharding(mesh, P("model", None)),
+                     "centroids": [NamedSharding(mesh, P())] * 2}
+            p_sharded = jax.device_put(p, shard)
+            with mesh:
+                out, aux = jax.jit(semb.apply)(p_sharded, ids)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=1e-5)
+            np.testing.assert_allclose(float(aux), float(ref_aux),
+                                       rtol=1e-5)
+        print("OK")
+    """)
+
+
 def test_multipod_mesh_shape():
     _run("""
         import jax

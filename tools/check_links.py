@@ -1,0 +1,58 @@
+"""Markdown link check: every relative link must resolve to a file.
+
+    python tools/check_links.py [file.md ...]
+
+With no arguments, checks every tracked *.md in the repo.  External
+(http/mailto) links and pure-anchor links are skipped — this is a
+does-the-file-exist check, not a crawler; it catches the common docs
+rot (renamed/deleted files leaving dangling `[x](path)` references).
+Exit code 1 when any link is broken (the CI docs job gate).
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+# [text](target) — target up to the first ')' or '#appendix'
+_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def check_file(path: str) -> list:
+    text = open(path, encoding="utf-8").read()
+    # fenced code blocks contain example paths, not links — drop them
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    bad = []
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP_PREFIXES):
+            continue
+        full = os.path.normpath(
+            os.path.join(os.path.dirname(path) or ".", target))
+        if not os.path.exists(full):
+            bad.append((path, target))
+    return bad
+
+
+def tracked_markdown() -> list:
+    out = subprocess.run(["git", "ls-files", "*.md"],
+                         capture_output=True, text=True, check=True)
+    return out.stdout.split()
+
+
+def main(argv: list) -> int:
+    files = argv or tracked_markdown()
+    bad = []
+    for f in files:
+        bad += check_file(f)
+    for path, target in bad:
+        print(f"BROKEN {path}: ({target})")
+    print(f"checked {len(files)} file(s): "
+          f"{'all links resolve' if not bad else f'{len(bad)} broken'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

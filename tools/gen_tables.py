@@ -1,6 +1,19 @@
-"""Regenerate EXPERIMENTS.md tables from results/*.json."""
+"""Regenerate doc tables: EXPERIMENTS.md rows from results/*.json, and
+the README backend/variant support matrix (``--support-matrix``).
+
+The support matrix is *introspected*, not hand-written: variants come
+from ``repro.core.types``, backends from the kernel dispatch registry,
+and sharded-serving support from ``repro.sharding.quantized`` — so the
+table in README.md cannot drift from the code.  Regenerate with:
+
+    python tools/gen_tables.py --support-matrix
+"""
 import json
+import os
 import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
 
 
 def fmt(r):
@@ -21,6 +34,68 @@ HDR = ("| arch | shape | opts | compute ms | memory ms | collective ms | "
        "|---|---|---|---|---|---|---|---|---|---|")
 
 
+def _scheme_cfg(kind, var):
+    """Tiny EmbeddingConfig for capability probing one scheme."""
+    from repro.core.types import EmbeddingConfig
+    kw = dict(vocab_size=32, dim=8, kind=kind, num_subspaces=4,
+              num_centroids=4)
+    if kind == "mgqe":
+        kw.update(mgqe_variant=var, tier_boundaries=(8,))
+        if var in ("shared_k", "private_k"):
+            kw["tier_num_centroids"] = (4, 2)
+        else:
+            kw["tier_num_subspaces"] = (4, 2)
+    return EmbeddingConfig(**kw)
+
+
+def support_matrix():
+    """Markdown matrix: table scheme x decode backend x placement.
+
+    Every cell is PROBED, not hardcoded: backend columns come from the
+    kernel dispatch registry, the single-device cell from an actual
+    init -> export -> serve round trip, and the sharded cell from the
+    sharding layer's own capability check plus its artifact placement
+    specs — so the README table cannot drift from the code (CI gates
+    on the output matching).
+    """
+    import jax
+    from repro.core.api import Embedding
+    from repro.core.types import MGQE_VARIANTS
+    from repro.kernels import dispatch
+    from repro.sharding.quantized import supports_sharding
+    from repro.sharding.rules import quantized_artifact_specs
+
+    backends = sorted(dispatch.registered_ops()["mgqe_decode"])
+    schemes = ([("`dpq`", "dpq", "-")]
+               + [(f"`mgqe` ({v})", "mgqe", v) for v in MGQE_VARIANTS])
+
+    def probe(fn):
+        try:
+            fn()
+            return "✓"
+        except Exception:
+            return "—"
+
+    notes = {"pallas": "TPU hw", "xla": "any", "interpret": "any, slow"}
+    lines = ["| scheme | " + " | ".join(
+        f"`{b}` ({notes.get(b, 'any')})" for b in backends)
+        + " | single-device | sharded codes |",
+        "|---" * (len(backends) + 3) + "|"]
+    for label, kind, var in schemes:
+        cfg = _scheme_cfg(kind, var)
+        emb = Embedding(cfg)
+        art = emb.export(emb.init(jax.random.PRNGKey(0)))
+        ids = jax.numpy.arange(8)
+        cells = [probe(lambda b=b: dispatch.get_impl("mgqe_decode", b))
+                 for b in backends]
+        cells.append(probe(lambda: emb.serve(art, ids)))
+        cells.append("✓" if supports_sharding(kind, var)
+                     and probe(lambda: quantized_artifact_specs(cfg)) == "✓"
+                     else "—")
+        lines.append(f"| {label} | " + " | ".join(cells) + " |")
+    return "\n".join(lines)
+
+
 def main(paths):
     for p in paths:
         rows = json.load(open(p))
@@ -33,6 +108,9 @@ def main(paths):
 
 
 if __name__ == "__main__":
-    main(sys.argv[1:] or ["results/dryrun_single.json",
-                          "results/dryrun_multi.json",
-                          "results/hillclimb.json"])
+    if "--support-matrix" in sys.argv:
+        print(support_matrix())
+    else:
+        main(sys.argv[1:] or ["results/dryrun_single.json",
+                              "results/dryrun_multi.json",
+                              "results/hillclimb.json"])
