@@ -184,6 +184,77 @@ def bench_sharded_decode(results: dict, n: int, d: int, D: int, K: int,
     }
 
 
+def bench_rq_decode(results: dict, n: int, d: int, M: int, K: int,
+                    batch: int):
+    """Residual-quantization serving decode: kernel form vs gather.
+
+    Fused = the ``mgqe_decode`` kernel form with "subspace" width
+    S = d (one-hot matmul pins the codebooks in VMEM), stages summed
+    outside the kernel — what the rq scheme serves through on
+    pallas/interpret.  Unfused = per-stage HBM row gathers + sum — the
+    scheme's XLA serving path, because at S = d the one-hot form costs
+    ~2K x the FLOPs of a gather and only pays on the MXU.  Off-TPU
+    expect speedup < 1 (that measured gap is WHY serve picks the
+    gather path there).  Parity between the two forms is recorded as
+    ``parity_ok`` and flips the exit code (after the json is written).
+    """
+    from repro.kernels.mgqe_decode import decode as kernel_decode
+    k = jax.random.PRNGKey(0)
+    cfg = EmbeddingConfig(vocab_size=n, dim=d, kind="rq", num_levels=M,
+                          num_centroids=K)
+    artifact = {
+        "codes": jax.random.randint(k, (n, M), 0, K).astype(jnp.uint8),
+        "codebooks": jax.random.normal(k, (M, K, d)),
+    }
+    ids = jax.random.randint(jax.random.PRNGKey(1), (batch,), 0, n)
+
+    backend = dispatch.resolve_backend(cfg.kernel_backend)
+
+    def fused(cbs, codes, i):
+        sel = jnp.take(codes, i, axis=0).astype(jnp.int32)   # (B, M)
+        flat = kernel_decode(sel, cbs, block_b=cfg.decode_block_b,
+                             backend=backend)                # (B, M*d)
+        return jnp.sum(flat.reshape(-1, M, d), axis=1)
+    fused_fn = jax.jit(lambda a, i: fused(a["codebooks"], a["codes"], i))
+    t_fused = _time(fused_fn, artifact, ids)
+
+    def unfused(cbs, codes, i):
+        sel = jnp.take(codes, i, axis=0).astype(jnp.int32)   # (B, M)
+        return sum(jnp.take(cbs[m], sel[:, m], axis=0)
+                   for m in range(M))
+    unfused_fn = jax.jit(lambda a, i: unfused(a["codebooks"],
+                                              a["codes"], i))
+    t_unfused = _time(unfused_fn, artifact, ids)
+
+    err = float(jnp.max(jnp.abs(fused_fn(artifact, ids)
+                                - unfused_fn(artifact, ids))))
+    parity_ok = err < 1e-5
+    if not parity_ok:
+        print(f"WARNING: rq decode parity FAILED (max err {err:.2e})")
+    serve_path = ("kernel" if backend in ("pallas", "interpret")
+                  else "gather")
+    print(f"rq decode B={batch} n={n/1e6:.1f}M d={d} M={M}: "
+          f"gather {t_unfused*1e3:.2f} ms | kernel-form[{backend}] "
+          f"{t_fused*1e3:.2f} ms (parity err {err:.1e}; serve uses the "
+          f"{serve_path} path here); "
+          f"codes {n*M/1e6:.1f} MB + {M*K*d*4/1e3:.0f} KB codebooks vs "
+          f"{n*d*4/1e6:.0f} MB full")
+    results["rq_decode"] = {
+        "vocab": n, "dim": d, "num_levels": M, "num_centroids": K,
+        "batch": batch,
+        "fused_backend": backend,
+        "serve_path": serve_path,
+        "unfused_decode_ms": t_unfused * 1e3,
+        "fused_decode_ms": t_fused * 1e3,
+        "fused_vs_unfused_speedup": t_unfused / t_fused,
+        "parity_max_err": err,
+        "parity_ok": parity_ok,
+        "table_mbytes_codes": (n * M + M * K * d * 4) / 1e6,
+        "serving_size_pct_of_full":
+            100 * cfg.serving_size_bits() / (n * d * 32),
+    }
+
+
 def bench_adc(results: dict, d: int, D: int, K: int, n_cand: int):
     k = jax.random.PRNGKey(0)
     cent = jax.random.normal(k, (D, K, d // D))
@@ -229,6 +300,7 @@ def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
     }
     bench_serving_decode(results, n, d, D, K, batch=4096)
     bench_sharded_decode(results, n, d, D, K, batch=4096)
+    bench_rq_decode(results, n, d, M=4, K=K, batch=4096)
     bench_engine(results, n, d, D, K,
                  n_requests=50 if quick else 200, req_batch=64)
     bench_adc(results, d, D, K, n_cand=n)
@@ -239,8 +311,8 @@ def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
         print(f"wrote {out_json}")
     # parity failures flip the exit code AFTER the json is written, so
     # CI still uploads the full results for diagnosis
-    return 0 if results.get("sharded_decode", {}).get("parity_ok", True) \
-        else 1
+    return 0 if all(results.get(k, {}).get("parity_ok", True)
+                    for k in ("sharded_decode", "rq_decode")) else 1
 
 
 if __name__ == "__main__":

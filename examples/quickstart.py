@@ -77,6 +77,14 @@ def main():
     print(f"\nat production vocab (100k): MGQE = "
           f"{100*cfg.serving_size_bits()/(100_000*64*32):.1f}% of full")
 
+    # any registered scheme is a one-line swap — e.g. the rq plugin
+    # (residual quantization, core/schemes/rq.py), same code budget
+    # per row as MGQE's D=8 but M=8 full-width codebooks:
+    rq = EmbeddingConfig(vocab_size=100_000, dim=64, kind="rq",
+                         num_levels=8, num_centroids=256)
+    print(f"rq (registry plugin)      = "
+          f"{100*rq.serving_size_bits()/(100_000*64*32):.1f}% of full")
+
 
 if __name__ == "__main__":
     main()

@@ -12,6 +12,11 @@ Models call ``apply`` during training (aux_loss must be added to the
 task loss) and ``serve`` during inference.  Swapping FE -> MGQE is a
 one-line config change, which is the paper's "drop-in replacement"
 claim made concrete.
+
+Every method dispatches through the scheme plugin registry
+(``repro.core.schemes``, DESIGN.md §7): the config's ``kind`` resolves
+to one Scheme class, so adding a compression scheme is a one-file
+change and this facade never grows per-kind branches.
 """
 from __future__ import annotations
 
@@ -20,140 +25,46 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import baselines, dpq, mgqe
+from repro.core.schemes import Scheme, get_scheme
 from repro.core.types import EmbeddingConfig
 
 
 class Embedding:
     def __init__(self, cfg: EmbeddingConfig):
         self.cfg = cfg
+        self.scheme: Scheme = get_scheme(cfg)
 
     # ------------------------------------------------------------ train
-    def init(self, key: jax.Array, dtype=jnp.float32) -> dict:
-        cfg = self.cfg
-        if cfg.kind == "full":
-            return baselines.full_init(key, cfg, dtype)
-        if cfg.kind == "lrf":
-            return baselines.lrf_init(key, cfg, dtype)
-        if cfg.kind == "sq":
-            return baselines.sq_init(key, cfg, dtype)
-        if cfg.kind == "hash":
-            return baselines.hash_init(key, cfg, dtype)
-        if cfg.kind == "dpq":
-            return dpq.init(key, cfg.vocab_size, cfg.dim, cfg.num_subspaces,
-                            cfg.num_centroids, dtype=dtype)
-        if cfg.kind == "mgqe":
-            return mgqe.init(key, cfg, dtype=dtype)
-        raise AssertionError(cfg.kind)
+    def init(self, key: jax.Array, dtype=None) -> dict:
+        """Training params.  ``dtype`` defaults to ``cfg.param_dtype``."""
+        if dtype is None:
+            dtype = jnp.dtype(self.cfg.param_dtype)
+        return self.scheme.init(key, dtype)
 
     def apply(self, params: dict, ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
-        cfg = self.cfg
-        if cfg.kind == "full":
-            return baselines.full_lookup(params, ids, cfg)
-        if cfg.kind == "lrf":
-            return baselines.lrf_lookup(params, ids, cfg)
-        if cfg.kind == "sq":
-            return baselines.sq_lookup(params, ids, cfg)
-        if cfg.kind == "hash":
-            return baselines.hash_lookup(params, ids, cfg)
-        if cfg.kind == "dpq":
-            return dpq.lookup_train(params, ids, beta=cfg.beta,
-                                    sharded_rows=cfg.sharded_rows)
-        if cfg.kind == "mgqe":
-            return mgqe.lookup_train(params, ids, cfg)
-        raise AssertionError(cfg.kind)
+        return self.scheme.apply(params, ids)
 
     # ------------------------------------------------------------ serve
     def export(self, params: dict) -> dict:
-        cfg = self.cfg
-        if cfg.kind in ("full", "lrf", "hash"):
-            return params  # nothing to strip
-        if cfg.kind == "sq":
-            return baselines.sq_export(params, cfg)
-        if cfg.kind == "dpq":
-            codes = dpq.export_codes(params)
-            dtype = jnp.uint8 if cfg.num_centroids <= 256 else jnp.int32
-            return {"codes": codes.astype(dtype),
-                    "centroids": params["centroids"]}
-        if cfg.kind == "mgqe":
-            return mgqe.export_serving(params, cfg)
-        raise AssertionError(cfg.kind)
+        return self.scheme.export(params)
 
     def serve(self, artifact: dict, ids: jax.Array) -> jax.Array:
-        cfg = self.cfg
-        if cfg.kind == "full":
-            return jnp.take(artifact["emb"], ids, axis=0)
-        if cfg.kind == "lrf":
-            return baselines.lrf_lookup(artifact, ids, cfg)[0]
-        if cfg.kind == "hash":
-            return baselines.hash_lookup(artifact, ids, cfg)[0]
-        if cfg.kind == "sq":
-            return baselines.sq_serving_lookup(artifact, ids, cfg)
-        if cfg.kind in ("dpq", "mgqe") and cfg.sharded_codes:
-            # distributed codes: shard_map gather over the ambient mesh
-            # (single-device fallback inside) — DESIGN.md §6
-            from repro.sharding.quantized import quantized_gather
-            return quantized_gather(artifact, ids, cfg)
-        if cfg.kind == "dpq":
-            return dpq.serving_lookup(artifact["codes"], artifact["centroids"],
-                                      ids, backend=cfg.kernel_backend,
-                                      block_b=cfg.decode_block_b)
-        if cfg.kind == "mgqe":
-            return mgqe.serving_lookup(artifact, ids, cfg)
-        raise AssertionError(cfg.kind)
+        return self.scheme.serve(artifact, ids)
 
     # -------------------------------------------------- abstract shapes
     def serving_artifact_struct(self) -> dict:
         """ShapeDtypeStruct pytree of the serving artifact — lets the
         dry-run lower the serving path without materializing/exporting
-        a real table."""
-        cfg = self.cfg
-        S = jax.ShapeDtypeStruct
-        d = jnp.dtype(cfg.param_dtype)
-        if cfg.kind == "full":
-            return {"emb": S((cfg.vocab_size, cfg.dim), d)}
-        if cfg.kind == "lrf":
-            return {"u": S((cfg.vocab_size, cfg.rank), d),
-                    "v": S((cfg.rank, cfg.dim), d)}
-        if cfg.kind == "hash":
-            return {"emb": S((cfg.hash_buckets, cfg.dim), d)}
-        if cfg.kind == "sq":
-            qd = jnp.uint8 if cfg.sq_bits <= 8 else jnp.int32
-            return {"q": S((cfg.vocab_size, cfg.dim), qd),
-                    "lo": S((cfg.dim,), jnp.float32),
-                    "scale": S((cfg.dim,), jnp.float32)}
-        code_dtype = jnp.uint8 if cfg.num_centroids <= 256 else jnp.int32
-        if cfg.kind == "dpq" or (cfg.kind == "mgqe"
-                                 and cfg.mgqe_variant == "shared_k"):
-            return {
-                "codes": S((cfg.vocab_size, cfg.num_subspaces), code_dtype),
-                "centroids": S((cfg.num_subspaces, cfg.num_centroids,
-                                cfg.subspace_dim), d),
-            }
-        if cfg.kind == "mgqe" and cfg.mgqe_variant == "private_k":
-            return {
-                "codes": S((cfg.vocab_size, cfg.num_subspaces), code_dtype),
-                "centroids": [
-                    S((cfg.num_subspaces, k_i, cfg.subspace_dim), d)
-                    for k_i in cfg.tier_num_centroids],
-            }
-        if cfg.kind == "mgqe" and cfg.mgqe_variant == "private_d":
-            return {
-                "codes": [
-                    S((cfg.vocab_size, d_i), code_dtype)
-                    for d_i in cfg.tier_num_subspaces],
-                "centroids": [
-                    S((d_i, cfg.num_centroids, cfg.dim // d_i), d)
-                    for d_i in cfg.tier_num_subspaces],
-            }
-        raise AssertionError(cfg.kind)
+        a real table.  Derived from the scheme's artifact spec, so it
+        cannot drift from what ``export`` produces."""
+        return self.scheme.serving_artifact_struct()
 
     # ------------------------------------------------------------ sizes
     def serving_size_bits(self) -> int:
-        return self.cfg.serving_size_bits()
+        return self.scheme.serving_size_bits()
 
     def training_param_count(self) -> int:
-        return self.cfg.training_param_count()
+        return self.scheme.training_param_count()
 
 
 def make_embedding(cfg: EmbeddingConfig) -> Embedding:

@@ -23,7 +23,7 @@ Tier membership is pure arithmetic over frequency-sorted ids
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -136,43 +136,7 @@ def export_serving(params: dict, cfg: EmbeddingConfig) -> dict:
     return out
 
 
-def decode_codes_blend(artifact: dict, ids: jax.Array, cfg: EmbeddingConfig,
-                       tier_ids: Optional[jax.Array] = None) -> jax.Array:
-    """Decode ``ids`` against the artifact's code tables through the
-    dispatched fused kernel, blending private-variant tiers by mask.
-
-    Handles dpq and every MGQE variant.  ``tier_ids`` defaults to
-    ``ids``; the sharded gather (sharding/quantized.py) passes GLOBAL
-    ids there while ``ids`` are shard-local row offsets — tier
-    membership is defined on the global frequency-sorted id space.
-    ONE implementation shared by the single-device serve path and each
-    shard's local decode, so the two cannot drift.
-    """
-    if cfg.kind == "dpq" or cfg.mgqe_variant == "shared_k":
-        return dpq.serving_lookup(artifact["codes"], artifact["centroids"],
-                                  ids, backend=cfg.kernel_backend,
-                                  block_b=cfg.decode_block_b)
-    tiers = tier_of_ids(ids if tier_ids is None else tier_ids,
-                        cfg.tier_boundaries)
-    outs = []
-    for i, cent in enumerate(artifact["centroids"]):
-        codes_i = (artifact["codes"][i]
-                   if isinstance(artifact["codes"], (list, tuple))
-                   else artifact["codes"])
-        outs.append(dpq.serving_lookup(codes_i, cent, ids,
-                                       backend=cfg.kernel_backend,
-                                       block_b=cfg.decode_block_b))
-    out = outs[0]
-    for i in range(1, len(outs)):
-        out = jnp.where((tiers == i)[..., None], outs[i], out)
-    return out
-
-
-def serving_lookup(artifact: dict, ids: jax.Array,
-                   cfg: EmbeddingConfig) -> jax.Array:
-    """Every variant decodes through the dispatched fused kernel
-    (cfg.kernel_backend / cfg.decode_block_b; DESIGN.md §5).  For
-    row-sharded code tables use ``sharding.quantized.quantized_gather``
-    (or set ``cfg.sharded_codes`` and call ``Embedding.serve``), which
-    reuses this decode on each shard's local block — DESIGN.md §6."""
-    return decode_codes_blend(artifact, ids, cfg)
+# The serving decode (fused kernel + private-variant tier blending)
+# lives on the scheme class — core/schemes/mgqe.py ``decode`` — shared
+# by the single-device serve path and each shard's local decode
+# (sharding/quantized.py), so the two cannot drift.

@@ -1,0 +1,17 @@
+"""Scheme plugin registry (DESIGN.md §7).
+
+Importing this package registers every built-in scheme; third-party
+schemes register themselves with :func:`register_scheme` on import.
+"""
+from repro.core.schemes.base import (ArtifactLeaf, QuantizedScheme, Scheme,
+                                     get_scheme, register_scheme,
+                                     registered_kinds, scheme_class)
+
+# built-in schemes — importing the module registers the class
+from repro.core.schemes import baselines as _baselines   # noqa: F401
+from repro.core.schemes import dpq as _dpq               # noqa: F401
+from repro.core.schemes import mgqe as _mgqe             # noqa: F401
+from repro.core.schemes import rq as _rq                 # noqa: F401
+
+__all__ = ["ArtifactLeaf", "QuantizedScheme", "Scheme", "get_scheme",
+           "register_scheme", "registered_kinds", "scheme_class"]

@@ -1,0 +1,244 @@
+"""Scheme plugin protocol + registry (DESIGN.md §7).
+
+A *scheme* is one embedding-compression technique — the paper's
+DPQ/MGQE, the baselines they are compared against, or anything the
+survey literature suggests next (residual quantization lives in
+``rq.py``).  Each scheme is ONE class registered under its
+``EmbeddingConfig.kind`` string:
+
+    @register_scheme("rq")
+    class ResidualQuantization(QuantizedScheme):
+        ...
+
+Every integration layer resolves schemes through this registry instead
+of ``cfg.kind ==`` chains: ``Embedding`` (core/api.py), the
+``ServingEngine``, the sharded quantized gather
+(sharding/quantized.py), the placement rules (sharding/rules.py), the
+README support matrix (tools/gen_tables.py) and the dry-run all pick
+up a new scheme with zero edits — adding one is a one-file change.
+
+The single source of truth for a scheme's serving artifact is
+:meth:`Scheme.artifact_spec`: a pytree of :class:`ArtifactLeaf`
+carrying shape, dtype, sharding placement, and the *logical* (packed)
+bit count per leaf.  The three consumers that used to re-encode this
+by hand are all DERIVED from it on the base class, so they can never
+drift:
+
+  * ``serving_artifact_struct()`` — ShapeDtypeStruct pytree (dry-run
+    lowering, export validation);
+  * ``artifact_shard_specs()``    — PartitionSpec pytree (device_put
+    placement + shard_map in_specs, DESIGN.md §6);
+  * ``serving_size_bits()``      — the paper's §1.1/§3.5 accounting,
+    with float widths taken from the leaf dtype (``param_dtype``
+    aware: bfloat16 tables count 16 bits, not a hardcoded 32).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+
+def log2ceil(k: int) -> int:
+    """Bits to address k code slots (min 1)."""
+    return max(1, math.ceil(math.log2(k)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactLeaf:
+    """One leaf of a serving artifact, fully described.
+
+    ``rows=True`` marks O(vocab) leaves that are row-sharded over the
+    model mesh axis when the artifact is distributed; everything else
+    is replicated.  ``logical_bits`` overrides the storage-derived bit
+    count for the size accounting — code tables are *stored* at
+    uint8/int32 granularity but *accounted* at their packed width
+    (``log2ceil(K)`` bits per code, paper §1.1).
+    """
+
+    shape: Tuple[int, ...]
+    dtype: Any
+    rows: bool = False
+    logical_bits: Optional[int] = None
+
+    @property
+    def storage_bits(self) -> int:
+        return math.prod(self.shape) * jnp.dtype(self.dtype).itemsize * 8
+
+    @property
+    def size_bits(self) -> int:
+        return self.storage_bits if self.logical_bits is None \
+            else self.logical_bits
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, ArtifactLeaf)
+
+
+class Scheme:
+    """Protocol every embedding scheme implements.
+
+    Required overrides: ``init`` / ``apply`` / ``export`` / ``serve`` /
+    ``artifact_spec`` / ``training_param_count`` (plus ``validate`` /
+    ``variants`` / ``probe_config`` classmethods where the defaults
+    don't fit).  ``serving_artifact_struct`` / ``artifact_shard_specs``
+    / ``serving_size_bits`` are derived from ``artifact_spec`` — do not
+    override them.
+    """
+
+    kind: str = "?"                    # set by @register_scheme
+    # True for codes+codebooks schemes whose code tables the sharded
+    # quantized gather (sharding/quantized.py) can row-shard.
+    supports_sharded_codes: bool = False
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ------------------------------------------------------- class hooks
+    @classmethod
+    def validate(cls, cfg) -> None:
+        """Kind-specific config validation (EmbeddingConfig.__post_init__
+        calls this through the registry)."""
+
+    @classmethod
+    def variants(cls) -> Tuple[str, ...]:
+        """Sub-variant labels for enumeration (support matrix, sharded
+        parity sweeps).  "-" means the scheme has no variants."""
+        return ("-",)
+
+    @classmethod
+    def probe_config(cls, variant: str = "-"):
+        """A tiny EmbeddingConfig for capability probing / conformance
+        (init -> apply -> export -> serve must run in milliseconds)."""
+        raise NotImplementedError(cls)
+
+    # --------------------------------------------------------- required
+    def init(self, key: jax.Array, dtype) -> dict:
+        raise NotImplementedError
+
+    def apply(self, params: dict, ids: jax.Array):
+        """Training path: (emb (..., d), aux_loss scalar)."""
+        raise NotImplementedError
+
+    def export(self, params: dict) -> dict:
+        raise NotImplementedError
+
+    def serve(self, artifact: dict, ids: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def artifact_spec(self):
+        """Pytree of :class:`ArtifactLeaf` matching ``export()``
+        leaf-for-leaf — the single source of truth for artifact shape,
+        dtype, placement, and size accounting."""
+        raise NotImplementedError
+
+    def training_param_count(self) -> int:
+        raise NotImplementedError
+
+    # ---------------------------------------------------------- derived
+    @property
+    def variant_label(self) -> str:
+        """Active variant for reporting ("" when the scheme has none)."""
+        return ""
+
+    def artifact_leaves(self) -> List[ArtifactLeaf]:
+        return jax.tree.leaves(self.artifact_spec(), is_leaf=_is_leaf)
+
+    def serving_artifact_struct(self):
+        """ShapeDtypeStruct pytree of the serving artifact — lets the
+        dry-run lower the serving path without materializing a table."""
+        return jax.tree.map(
+            lambda leaf: jax.ShapeDtypeStruct(leaf.shape,
+                                              jnp.dtype(leaf.dtype)),
+            self.artifact_spec(), is_leaf=_is_leaf)
+
+    def artifact_shard_specs(self, model_axis: str = "model"):
+        """PartitionSpec pytree: ``rows`` leaves row-sharded over
+        ``model_axis``, everything else replicated (DESIGN.md §6)."""
+        from jax.sharding import PartitionSpec as P
+        if not self.supports_sharded_codes:
+            raise ValueError(
+                f"no quantized artifact for kind={self.kind!r}")
+        return jax.tree.map(
+            lambda leaf: P(model_axis, *((None,) * (len(leaf.shape) - 1)))
+            if leaf.rows else P(),
+            self.artifact_spec(), is_leaf=_is_leaf)
+
+    def serving_size_bits(self) -> int:
+        """Paper §1.1/§3.5 serving-size accounting, summed over the
+        artifact spec (packed code widths, dtype-true float widths)."""
+        return sum(leaf.size_bits for leaf in self.artifact_leaves())
+
+
+class QuantizedScheme(Scheme):
+    """Base for codes+codebooks schemes (dpq, mgqe, rq).
+
+    Serving decodes through the dispatched fused kernel; code tables
+    may be row-sharded over the model axis, in which case ``serve``
+    routes through the shard_map quantized gather (DESIGN.md §6) with
+    a single-device fallback inside — call sites never branch.
+    """
+
+    supports_sharded_codes = True
+
+    @property
+    def code_dtype(self):
+        return jnp.uint8 if self.cfg.num_centroids <= 256 else jnp.int32
+
+    def serve(self, artifact: dict, ids: jax.Array) -> jax.Array:
+        if self.cfg.sharded_codes:
+            from repro.sharding.quantized import quantized_gather
+            return quantized_gather(artifact, ids, self.cfg)
+        return self.decode(artifact, ids)
+
+    def decode(self, artifact: dict, ids: jax.Array,
+               tier_ids: Optional[jax.Array] = None) -> jax.Array:
+        """Single-device fused decode of ``ids`` against the artifact's
+        code tables.  ``tier_ids`` defaults to ``ids``; the sharded
+        gather passes GLOBAL ids there while ``ids`` are shard-local
+        row offsets — any frequency-rank-dependent blending must key on
+        the global id.  ONE implementation shared by the single-device
+        serve path and each shard's local decode, so they cannot
+        drift."""
+        raise NotImplementedError
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Scheme]] = {}
+
+
+def register_scheme(kind: str):
+    """Class decorator: register a Scheme under its kind string."""
+    def deco(cls: Type[Scheme]) -> Type[Scheme]:
+        prev = _REGISTRY.get(kind)
+        if prev is not None and prev is not cls:
+            raise ValueError(
+                f"scheme kind {kind!r} already registered to {prev}")
+        cls.kind = kind
+        _REGISTRY[kind] = cls
+        return cls
+    return deco
+
+
+def registered_kinds() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def scheme_class(kind: str) -> Type[Scheme]:
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        raise KeyError(
+            f"unknown embedding kind {kind!r}; registered schemes: "
+            f"{', '.join(registered_kinds()) or '(none)'}") from None
+
+
+def get_scheme(cfg) -> Scheme:
+    """Resolve a config to its scheme instance."""
+    return scheme_class(cfg.kind)(cfg)

@@ -1,0 +1,160 @@
+"""Baseline schemes (paper §3.4) as registry plugins.
+
+Thin classes over the functional implementations in
+``repro.core.baselines`` — the math stays where it was; the plugin
+layer owns dispatch, artifact specs, and size accounting.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import baselines
+from repro.core.schemes.base import ArtifactLeaf, Scheme, register_scheme
+
+
+@register_scheme("full")
+class FullEmbedding(Scheme):
+    """FE — the conventional (n, d) table; the 100% size baseline."""
+
+    def init(self, key, dtype):
+        return baselines.full_init(key, self.cfg, dtype)
+
+    def apply(self, params, ids):
+        return baselines.full_lookup(params, ids, self.cfg)
+
+    def export(self, params):
+        return params  # nothing to strip
+
+    def serve(self, artifact, ids):
+        return jnp.take(artifact["emb"], ids, axis=0)
+
+    def artifact_spec(self):
+        cfg = self.cfg
+        return {"emb": ArtifactLeaf((cfg.vocab_size, cfg.dim),
+                                    cfg.param_dtype)}
+
+    def training_param_count(self):
+        return self.cfg.vocab_size * self.cfg.dim
+
+    @classmethod
+    def probe_config(cls, variant="-"):
+        from repro.core.types import EmbeddingConfig
+        return EmbeddingConfig(vocab_size=32, dim=8)
+
+
+@register_scheme("lrf")
+class LowRankFactorization(Scheme):
+    """(n, r) @ (r, d) factorized table."""
+
+    @classmethod
+    def validate(cls, cfg):
+        if cfg.rank <= 0:
+            raise ValueError("lrf embedding needs rank > 0")
+
+    def init(self, key, dtype):
+        return baselines.lrf_init(key, self.cfg, dtype)
+
+    def apply(self, params, ids):
+        return baselines.lrf_lookup(params, ids, self.cfg)
+
+    def export(self, params):
+        return params
+
+    def serve(self, artifact, ids):
+        return baselines.lrf_lookup(artifact, ids, self.cfg)[0]
+
+    def artifact_spec(self):
+        cfg = self.cfg
+        return {"u": ArtifactLeaf((cfg.vocab_size, cfg.rank),
+                                  cfg.param_dtype),
+                "v": ArtifactLeaf((cfg.rank, cfg.dim), cfg.param_dtype)}
+
+    def training_param_count(self):
+        cfg = self.cfg
+        return cfg.vocab_size * cfg.rank + cfg.rank * cfg.dim
+
+    @classmethod
+    def probe_config(cls, variant="-"):
+        from repro.core.types import EmbeddingConfig
+        return EmbeddingConfig(vocab_size=32, dim=8, kind="lrf", rank=2)
+
+
+@register_scheme("sq")
+class ScalarQuantization(Scheme):
+    """Post-training per-dim uniform quantization; trains exactly like
+    FE, quantizes at export."""
+
+    @classmethod
+    def validate(cls, cfg):
+        if not 1 <= cfg.sq_bits <= 32:
+            raise ValueError(f"sq_bits must be in [1, 32], got {cfg.sq_bits}")
+
+    def init(self, key, dtype):
+        return baselines.sq_init(key, self.cfg, dtype)
+
+    def apply(self, params, ids):
+        return baselines.sq_lookup(params, ids, self.cfg)
+
+    def export(self, params):
+        return baselines.sq_export(params, self.cfg)
+
+    def serve(self, artifact, ids):
+        return baselines.sq_serving_lookup(artifact, ids, self.cfg)
+
+    def artifact_spec(self):
+        cfg = self.cfg
+        qd = jnp.uint8 if cfg.sq_bits <= 8 else jnp.int32
+        # q is stored at uint8/int32 granularity but accounted at
+        # sq_bits per element; lo/scale are fp32 by construction
+        # (sq_export) regardless of param_dtype.
+        return {
+            "q": ArtifactLeaf((cfg.vocab_size, cfg.dim), qd,
+                              logical_bits=cfg.vocab_size * cfg.dim
+                              * cfg.sq_bits),
+            "lo": ArtifactLeaf((cfg.dim,), jnp.float32),
+            "scale": ArtifactLeaf((cfg.dim,), jnp.float32),
+        }
+
+    def training_param_count(self):
+        return self.cfg.vocab_size * self.cfg.dim
+
+    @classmethod
+    def probe_config(cls, variant="-"):
+        from repro.core.types import EmbeddingConfig
+        return EmbeddingConfig(vocab_size=32, dim=8, kind="sq", sq_bits=8)
+
+
+@register_scheme("hash")
+class HashingTrick(Scheme):
+    """Ids hashed into a smaller table (Weinberger et al. 2009)."""
+
+    @classmethod
+    def validate(cls, cfg):
+        if cfg.hash_buckets <= 0:
+            raise ValueError("hash embedding needs hash_buckets > 0")
+
+    def init(self, key, dtype):
+        return baselines.hash_init(key, self.cfg, dtype)
+
+    def apply(self, params, ids):
+        return baselines.hash_lookup(params, ids, self.cfg)
+
+    def export(self, params):
+        return params
+
+    def serve(self, artifact, ids):
+        return baselines.hash_lookup(artifact, ids, self.cfg)[0]
+
+    def artifact_spec(self):
+        cfg = self.cfg
+        return {"emb": ArtifactLeaf((cfg.hash_buckets, cfg.dim),
+                                    cfg.param_dtype)}
+
+    def training_param_count(self):
+        return self.cfg.hash_buckets * self.cfg.dim
+
+    @classmethod
+    def probe_config(cls, variant="-"):
+        from repro.core.types import EmbeddingConfig
+        return EmbeddingConfig(vocab_size=32, dim=8, kind="hash",
+                               hash_buckets=16)

@@ -1,0 +1,62 @@
+"""DPQ (paper §1.1) as a registry plugin over ``repro.core.dpq``."""
+from __future__ import annotations
+
+from repro.core import dpq
+from repro.core.schemes.base import (ArtifactLeaf, QuantizedScheme,
+                                     log2ceil, register_scheme)
+
+
+@register_scheme("dpq")
+class DifferentiableProductQuantization(QuantizedScheme):
+    """Product quantization learned end-to-end with a straight-through
+    estimator; serving artifact = codes (n, D) + centroids (D, K, S)."""
+
+    @classmethod
+    def validate(cls, cfg):
+        if cfg.dim % cfg.num_subspaces != 0:
+            raise ValueError(
+                f"dim={cfg.dim} not divisible by D={cfg.num_subspaces}")
+
+    def init(self, key, dtype):
+        cfg = self.cfg
+        return dpq.init(key, cfg.vocab_size, cfg.dim, cfg.num_subspaces,
+                        cfg.num_centroids, dtype=dtype)
+
+    def apply(self, params, ids):
+        cfg = self.cfg
+        return dpq.lookup_train(params, ids, beta=cfg.beta,
+                                sharded_rows=cfg.sharded_rows)
+
+    def export(self, params):
+        codes = dpq.export_codes(params)
+        return {"codes": codes.astype(self.code_dtype),
+                "centroids": params["centroids"]}
+
+    def decode(self, artifact, ids, tier_ids=None):
+        cfg = self.cfg
+        return dpq.serving_lookup(artifact["codes"], artifact["centroids"],
+                                  ids, backend=cfg.kernel_backend,
+                                  block_b=cfg.decode_block_b)
+
+    def artifact_spec(self):
+        cfg = self.cfg
+        return {
+            "codes": ArtifactLeaf(
+                (cfg.vocab_size, cfg.num_subspaces), self.code_dtype,
+                rows=True,
+                logical_bits=cfg.vocab_size * cfg.num_subspaces
+                * log2ceil(cfg.num_centroids)),
+            "centroids": ArtifactLeaf(
+                (cfg.num_subspaces, cfg.num_centroids, cfg.subspace_dim),
+                cfg.param_dtype),
+        }
+
+    def training_param_count(self):
+        cfg = self.cfg
+        return cfg.vocab_size * cfg.dim + cfg.num_centroids * cfg.dim
+
+    @classmethod
+    def probe_config(cls, variant="-"):
+        from repro.core.types import EmbeddingConfig
+        return EmbeddingConfig(vocab_size=32, dim=8, kind="dpq",
+                               num_subspaces=4, num_centroids=4)

@@ -1,0 +1,167 @@
+"""Residual quantization (``rq``) — the registry's proof-of-abstraction.
+
+This file is the ONLY place ``rq`` exists: registration here is enough
+for ``Embedding``, the ServingEngine, the sharded quantized gather,
+the placement rules, the README support matrix, and the dry-run to
+pick the scheme up — the "one-file plugin" the registry promises
+(DESIGN.md §7).  Pointers: RecJPQ (arXiv:2312.06165) and the
+embedding-compression survey (arXiv:2408.02304) both flag
+residual/joint quantization as the natural next family after PQ.
+
+Training (straight-through, VQ-VAE-style like DPQ): M = ``num_levels``
+sequential *full-width* codebooks ``C_m (K, d)``; stage m quantizes
+the residual left by stages < m:
+
+    r_0 = e
+    c_m = argmin_k ||r_m - C_m[k]||^2
+    r_{m+1} = r_m - sg(C_m[c_m])
+    out = e + sg(sum_m C_m[c_m] - e)
+
+Codebook gradients flow through the differentiable gather in the
+per-stage codebook loss; commitment gradients reach ``e`` through the
+residual chain — exactly the ``dpq.quantize`` recipe, applied
+sequentially instead of per-subspace.
+
+Serving artifact: codes ``(n, M)`` + codebooks ``(M, K, d)``.  On the
+kernel backends (pallas/interpret) the fused decode REUSES the
+existing ``mgqe_decode`` kernel through the dispatch layer: with
+"subspace" width S = d the kernel's one-hot matmul emits the
+per-stage decode ``(B, M·d)``, summed over stages outside the kernel.
+At S = d the one-hot form costs ~2K x the FLOPs of a gather and only
+pays on the MXU, so the XLA path serves per-stage row gathers instead
+(the gap is measured in BENCH_kernels.json ``rq_decode``).  Versus PQ
+at equal code bytes, RQ spends ``M·K·d`` floats of codebook (vs
+``K·d``) to quantize the *joint* space instead of independent
+subspaces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dpq
+from repro.core.schemes.base import (ArtifactLeaf, QuantizedScheme,
+                                     log2ceil, register_scheme)
+
+
+def _stage_assign(r: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Nearest-codeword ids for residuals r (..., d) against (K, d)."""
+    # dpq's MXU-friendly distance with a single full-width "subspace"
+    return dpq.assign_codes(r[..., None, :], codebook[None])[..., 0]
+
+
+@register_scheme("rq")
+class ResidualQuantization(QuantizedScheme):
+    """M sequential full-width codebooks over residuals."""
+
+    @classmethod
+    def validate(cls, cfg):
+        if cfg.num_levels < 1:
+            raise ValueError(
+                f"rq needs num_levels >= 1, got {cfg.num_levels}")
+        if cfg.num_centroids < 2:
+            raise ValueError("rq needs num_centroids >= 2")
+
+    # ------------------------------------------------------------ train
+    def init(self, key, dtype):
+        cfg = self.cfg
+        k_emb, k_cb = jax.random.split(key)
+        emb = dpq.init_full_table(k_emb, cfg.vocab_size, cfg.dim,
+                                  dtype=dtype)
+        # stage-0 codebook at embedding scale; later stages model
+        # residuals, which shrink — geometric damping keeps early
+        # argmins spread at every level
+        scales = jnp.asarray([cfg.dim ** -0.5 * 0.5 ** m
+                              for m in range(cfg.num_levels)], dtype=dtype)
+        cbs = jax.random.normal(
+            k_cb, (cfg.num_levels, cfg.num_centroids, cfg.dim),
+            dtype=dtype) * scales[:, None, None]
+        return {"emb": emb, "codebooks": cbs}
+
+    def _quantize(self, e: jax.Array, codebooks: jax.Array):
+        """Residual-quantize rows e (..., d); returns
+        (quantized (..., d), codes (..., M), aux_loss scalar)."""
+        beta = self.cfg.beta
+        r, q_total = e, jnp.zeros_like(e)
+        codes, aux = [], jnp.asarray(0.0, jnp.float32)
+        for m in range(codebooks.shape[0]):
+            cb = codebooks[m]
+            code = _stage_assign(r, cb)
+            c = jnp.take(cb, code, axis=0)            # differentiable
+            codebook_loss = jnp.mean(jnp.sum(jnp.square(
+                jax.lax.stop_gradient(r) - c), axis=-1))
+            commit = jnp.mean(jnp.sum(jnp.square(
+                r - jax.lax.stop_gradient(c)), axis=-1))
+            aux = aux + codebook_loss + beta * commit
+            q_total = q_total + c
+            r = r - jax.lax.stop_gradient(c)
+            codes.append(code)
+        out = e + jax.lax.stop_gradient(q_total) - jax.lax.stop_gradient(e)
+        return out, jnp.stack(codes, axis=-1), aux
+
+    def apply(self, params, ids):
+        from repro.sharding.gather import row_gather
+        e = row_gather(params["emb"], ids, sharded=self.cfg.sharded_rows)
+        out, _, aux = self._quantize(e, params["codebooks"])
+        return out, aux
+
+    # ------------------------------------------------------------ serve
+    def export(self, params, batch: int = 65536):
+        emb, cbs = params["emb"], params["codebooks"]
+
+        @jax.jit
+        def codes_of(rows):
+            return self._quantize(rows, cbs)[1]
+
+        outs = [codes_of(emb[s:s + batch])
+                for s in range(0, emb.shape[0], batch)]
+        return {"codes": jnp.concatenate(outs).astype(self.code_dtype),
+                "codebooks": cbs}
+
+    def decode(self, artifact, ids, tier_ids=None):
+        cfg = self.cfg
+        from repro.kernels import dispatch
+        from repro.kernels.mgqe_decode import decode
+        codes = jnp.take(artifact["codes"], ids, axis=0).astype(jnp.int32)
+        cbs = artifact["codebooks"]
+        m = codes.shape[-1]
+        backend = dispatch.resolve_backend(cfg.kernel_backend)
+        if backend in ("pallas", "interpret"):
+            # fused kernel with S = d: one-hot matmul keeps the
+            # codebooks pinned in VMEM — (B, M) codes -> (B, M*d)
+            # stages, summed outside the kernel.  Only pays on the MXU:
+            # at S = d the one-hot form costs ~2K x the FLOPs of a
+            # gather, so off-TPU the XLA path below wins ~16x
+            # (BENCH_kernels.json rq_decode).
+            flat = decode(codes.reshape(-1, m), cbs,
+                          block_b=cfg.decode_block_b, backend=backend)
+            out = jnp.sum(flat.reshape(-1, m, cfg.dim), axis=1)
+            return out.reshape(ids.shape + (cfg.dim,))
+        # xla reference: per-stage row gather + sum
+        return sum(jnp.take(cbs[i], codes[..., i], axis=0)
+                   for i in range(m))
+
+    # -------------------------------------------------------- structure
+    def artifact_spec(self):
+        cfg = self.cfg
+        return {
+            "codebooks": ArtifactLeaf(
+                (cfg.num_levels, cfg.num_centroids, cfg.dim),
+                cfg.param_dtype),
+            "codes": ArtifactLeaf(
+                (cfg.vocab_size, cfg.num_levels), self.code_dtype,
+                rows=True,
+                logical_bits=cfg.vocab_size * cfg.num_levels
+                * log2ceil(cfg.num_centroids)),
+        }
+
+    def training_param_count(self):
+        cfg = self.cfg
+        return (cfg.vocab_size * cfg.dim
+                + cfg.num_levels * cfg.num_centroids * cfg.dim)
+
+    @classmethod
+    def probe_config(cls, variant="-"):
+        from repro.core.types import EmbeddingConfig
+        return EmbeddingConfig(vocab_size=32, dim=8, kind="rq",
+                               num_levels=2, num_centroids=4)

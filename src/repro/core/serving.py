@@ -10,6 +10,7 @@ from typing import Dict, Iterable, List
 
 import numpy as np
 
+from repro.core.schemes import get_scheme
 from repro.core.types import EmbeddingConfig
 
 
@@ -17,7 +18,7 @@ def size_row(cfg: EmbeddingConfig, baseline_bits: int) -> Dict:
     bits = cfg.serving_size_bits()
     return {
         "kind": cfg.kind,
-        "variant": cfg.mgqe_variant if cfg.kind == "mgqe" else "",
+        "variant": get_scheme(cfg).variant_label,
         "bits": bits,
         "mbytes": bits / 8 / 1e6,
         "pct_of_full": 100.0 * bits / baseline_bits,

@@ -1,18 +1,22 @@
 """Configuration types for the embedding subsystem.
 
-Every embedding scheme in the framework (the paper's DPQ/MGQE and the
-baselines it compares against) is described by a single frozen
-:class:`EmbeddingConfig`.  The config is hashable so it can be closed
-over by ``jax.jit`` without retracing surprises.
+Every embedding scheme in the framework (the paper's DPQ/MGQE, the
+baselines it compares against, and registry plugins such as ``rq``) is
+described by a single frozen :class:`EmbeddingConfig`.  The config is
+hashable so it can be closed over by ``jax.jit`` without retracing
+surprises.
+
+Valid ``kind`` strings are whatever the scheme registry
+(``repro.core.schemes``) currently holds — there is no frozen kind
+tuple here, so a scheme plugin is usable the moment it registers.
+The registry is imported lazily inside ``__post_init__`` (and the
+size-accounting delegates) so this module stays importable without
+the scheme package.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Tuple
-
-# Supported embedding schemes.  "full" is the paper's FE baseline.
-KINDS = ("full", "dpq", "mgqe", "lrf", "sq", "hash")
 
 # Kernel backends for the serving decode path (mirrors
 # repro.kernels.dispatch.BACKENDS; duplicated so config types stay
@@ -46,6 +50,9 @@ class EmbeddingConfig:
     tier_boundaries: Tuple[int, ...] = ()       # len m-1, ascending ids
     tier_num_centroids: Tuple[int, ...] = ()    # len m, non-increasing
     tier_num_subspaces: Tuple[int, ...] = ()    # len m, non-increasing (private_d)
+
+    # --- residual quantization (rq) ---
+    num_levels: int = 4             # M sequential full-width codebooks
 
     # --- low-rank factorization baseline ---
     rank: int = 16
@@ -83,46 +90,18 @@ class EmbeddingConfig:
     decode_block_b: int = 256
 
     def __post_init__(self):
-        if self.kind not in KINDS:
-            raise ValueError(f"unknown embedding kind {self.kind!r}")
+        from repro.core.schemes import registered_kinds, scheme_class
+        try:
+            scheme = scheme_class(self.kind)
+        except KeyError:
+            raise ValueError(
+                f"unknown embedding kind {self.kind!r}; registered "
+                f"schemes: {', '.join(registered_kinds())}") from None
         if self.kernel_backend not in KERNEL_BACKENDS:
             raise ValueError(
                 f"unknown kernel backend {self.kernel_backend!r}; "
                 f"expected one of {KERNEL_BACKENDS}")
-        if self.kind in ("dpq", "mgqe"):
-            if self.dim % self.num_subspaces != 0:
-                raise ValueError(
-                    f"dim={self.dim} not divisible by D={self.num_subspaces}")
-        if self.kind == "mgqe":
-            if self.mgqe_variant not in MGQE_VARIANTS:
-                raise ValueError(f"unknown MGQE variant {self.mgqe_variant!r}")
-            m = len(self.tier_boundaries) + 1
-            if self.mgqe_variant in ("shared_k", "private_k"):
-                if len(self.tier_num_centroids) != m:
-                    raise ValueError(
-                        f"tier_num_centroids must have {m} entries, got "
-                        f"{len(self.tier_num_centroids)}")
-                ks = self.tier_num_centroids
-                if any(ks[i] < ks[i + 1] for i in range(len(ks) - 1)):
-                    raise ValueError("tier_num_centroids must be non-increasing")
-                if max(ks) > self.num_centroids:
-                    raise ValueError("tier K_i exceeds num_centroids")
-            if self.mgqe_variant == "private_d":
-                if len(self.tier_num_subspaces) != m:
-                    raise ValueError(
-                        f"tier_num_subspaces must have {m} entries, got "
-                        f"{len(self.tier_num_subspaces)}")
-                for d_i in self.tier_num_subspaces:
-                    if self.dim % d_i != 0:
-                        raise ValueError(
-                            f"dim={self.dim} not divisible by tier D={d_i}")
-            if any(b <= 0 or b >= self.vocab_size for b in self.tier_boundaries):
-                raise ValueError("tier boundaries must lie inside (0, vocab)")
-            if any(self.tier_boundaries[i] >= self.tier_boundaries[i + 1]
-                   for i in range(len(self.tier_boundaries) - 1)):
-                raise ValueError("tier boundaries must be strictly ascending")
-        if self.kind == "hash" and self.hash_buckets <= 0:
-            raise ValueError("hash embedding needs hash_buckets > 0")
+        scheme.validate(self)
 
     # ------------------------------------------------------------------
     @property
@@ -139,64 +118,14 @@ class EmbeddingConfig:
         return tuple(edges[i + 1] - edges[i] for i in range(len(edges) - 1))
 
     # ------------------------------------------------------------------
-    # Serving-size accounting (bits), following paper §1.1 / §3.5.
+    # Size accounting (paper §1.1/§3.5) — delegated to the scheme,
+    # which derives it from its artifact spec (core/schemes/base.py).
     # ------------------------------------------------------------------
     def serving_size_bits(self) -> int:
-        n, d = self.vocab_size, self.dim
-        if self.kind == "full":
-            return n * d * 32
-        if self.kind == "lrf":
-            return (n * self.rank + self.rank * d) * 32
-        if self.kind == "sq":
-            # per-dim min/max fp32 + b bits per element
-            return n * d * self.sq_bits + 2 * d * 32
-        if self.kind == "hash":
-            return self.hash_buckets * d * 32
-        if self.kind == "dpq":
-            code_bits = n * self.num_subspaces * _log2ceil(self.num_centroids)
-            centroid_bits = 32 * self.num_centroids * d   # K*D*(d/D)*32
-            return code_bits + centroid_bits
-        if self.kind == "mgqe":
-            sizes = self.tier_sizes()
-            if self.mgqe_variant == "shared_k":
-                code_bits = sum(
-                    sz * self.num_subspaces * _log2ceil(k)
-                    for sz, k in zip(sizes, self.tier_num_centroids))
-                centroid_bits = 32 * self.num_centroids * d
-                return code_bits + centroid_bits
-            if self.mgqe_variant == "private_k":
-                code_bits = sum(
-                    sz * self.num_subspaces * _log2ceil(k)
-                    for sz, k in zip(sizes, self.tier_num_centroids))
-                centroid_bits = 32 * d * sum(self.tier_num_centroids)
-                return code_bits + centroid_bits
-            # private_d: fixed K per tier, D_i subspaces of dim d/D_i
-            code_bits = sum(
-                sz * d_i * _log2ceil(self.num_centroids)
-                for sz, d_i in zip(sizes, self.tier_num_subspaces))
-            centroid_bits = 32 * d * self.num_centroids * self.num_tiers
-            return code_bits + centroid_bits
-        raise AssertionError(self.kind)
+        from repro.core.schemes import get_scheme
+        return get_scheme(self).serving_size_bits()
 
     def training_param_count(self) -> int:
         """Dense parameters alive during training (full table included)."""
-        n, d = self.vocab_size, self.dim
-        if self.kind in ("full", "sq"):
-            return n * d
-        if self.kind == "lrf":
-            return n * self.rank + self.rank * d
-        if self.kind == "hash":
-            return self.hash_buckets * d
-        if self.kind == "dpq":
-            return n * d + self.num_centroids * d
-        if self.kind == "mgqe":
-            if self.mgqe_variant == "shared_k":
-                return n * d + self.num_centroids * d
-            if self.mgqe_variant == "private_k":
-                return n * d + d * sum(self.tier_num_centroids)
-            return n * d + d * self.num_centroids * self.num_tiers
-        raise AssertionError(self.kind)
-
-
-def _log2ceil(k: int) -> int:
-    return max(1, math.ceil(math.log2(k)))
+        from repro.core.schemes import get_scheme
+        return get_scheme(self).training_param_count()

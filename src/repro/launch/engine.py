@@ -78,7 +78,9 @@ class ServingEngine:
         data_shards = 1
         if mesh is not None:
             cfg = emb.cfg
-            if cfg.kind not in ("dpq", "mgqe"):
+            # registry-driven capability check: any scheme whose codes
+            # the sharded gather can row-shard qualifies (DESIGN.md §7)
+            if not emb.scheme.supports_sharded_codes:
                 raise ValueError(
                     f"sharded serving needs a quantized table, got "
                     f"kind={cfg.kind!r}")

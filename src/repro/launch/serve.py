@@ -179,13 +179,14 @@ def serve_engine(family, cfg, n_requests: int, req_batch: int,
         mesh = jax.make_mesh(shape, axes)
         model_n = dict(mesh.shape).get("model", 1)
         # size report only for quantized artifacts; other kinds fall
-        # through so ServingEngine raises its designed ValueError
-        if ecfg.kind in ("dpq", "mgqe"):
-            def mb(leaves):
-                leaves = leaves if isinstance(leaves, list) else [leaves]
-                return sum(x.size * x.dtype.itemsize for x in leaves) / 1e6
-            codes_mb = mb(artifact["codes"])
-            cb_mb = mb(artifact["centroids"])
+        # through so ServingEngine raises its designed ValueError.
+        # Placement info comes off the scheme's artifact spec — the
+        # leaves tagged rows=True are what gets row-sharded.
+        if emb.scheme.supports_sharded_codes:
+            spec = emb.scheme.artifact_leaves()
+            mb = lambda ls: sum(l.storage_bits for l in ls) / 8 / 1e6
+            codes_mb = mb([l for l in spec if l.rows])
+            cb_mb = mb([l for l in spec if not l.rows])
             print(f"mesh {dict(mesh.shape)}: codes {codes_mb:.2f} MB "
                   f"row-sharded x{model_n} -> {codes_mb/model_n:.2f} "
                   f"MB/shard, + {cb_mb:.3f} MB codebooks replicated "

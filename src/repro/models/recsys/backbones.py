@@ -61,6 +61,12 @@ class BackboneConfig:
                 num_centroids=self.num_centroids, tier_boundaries=bounds,
                 tier_num_centroids=(self.num_centroids,
                                     self.tier_tail_centroids), **base)
+        if k == "rq":
+            # residual-quantization plugin (core/schemes/rq.py):
+            # num_subspaces doubles as the stage count M
+            return EmbeddingConfig(
+                kind="rq", num_levels=self.num_subspaces,
+                num_centroids=self.num_centroids, **base)
         raise ValueError(k)
 
 

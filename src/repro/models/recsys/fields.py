@@ -41,6 +41,13 @@ def field_embedding_config(cfg: RecsysConfig, vocab: int) -> EmbeddingConfig:
             tier_boundaries=bounds,
             tier_num_centroids=(cfg.num_centroids, cfg.tier_tail_centroids),
             sharded_rows=sharded, kernel_backend=kb)
+    if kind == "rq":
+        # residual-quantization plugin: num_subspaces doubles as the
+        # stage count M (same code-bytes-per-row knob as PQ's D)
+        return EmbeddingConfig(
+            vocab_size=vocab, dim=cfg.embed_dim, kind="rq",
+            num_levels=cfg.num_subspaces, num_centroids=cfg.num_centroids,
+            sharded_rows=sharded, kernel_backend=kb)
     # baselines for the comparison sweeps
     if kind == "lrf":
         return EmbeddingConfig(vocab_size=vocab, dim=cfg.embed_dim,

@@ -13,9 +13,9 @@ The lookup is a shard_map with the same wire-cost shape as the dense
 ``row_gather`` path:
 
   forward: all-gather ids over the data axes (KBs) -> each model shard
-           decodes the rows it owns through the *fused* ``mgqe_decode``
-           kernel on its local code block (zeros elsewhere) -> psum
-           over model of the (B_global, d) partials -> slice the local
+           decodes the rows it owns through the *fused* decode kernel
+           on its local code block (zeros elsewhere) -> psum over
+           model of the (B_global, d) partials -> slice the local
            data-shard batch back out.
 
 Wire bytes per lookup: O(B_global · d · 4), independent of vocab —
@@ -23,10 +23,12 @@ versus the table-sized all-reduces a naive pjit of ``take`` over a
 row-sharded code table makes XLA emit.  There is no backward pass:
 codes are a frozen export artifact.
 
-Every MGQE variant is supported; the per-variant artifact placement
-(which leaves are row-sharded vs replicated) lives in
-``sharding.rules.quantized_artifact_specs`` so the ServingEngine, the
-benches, and the tests all place artifacts the same way.
+Which schemes can be distributed, the per-scheme artifact placement,
+and the per-shard local decode all come from the scheme registry
+(``Scheme.supports_sharded_codes`` / ``artifact_shard_specs`` /
+``QuantizedScheme.decode`` — core/schemes/), so the ServingEngine, the
+benches, the tests, and any new scheme plugin all place and decode
+artifacts the same way with zero edits here.
 """
 from __future__ import annotations
 
@@ -38,28 +40,31 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import mgqe
+from repro.core.schemes import get_scheme, registered_kinds, scheme_class
 from repro.core.types import EmbeddingConfig
 from repro.sharding.compat import shard_map
 from repro.sharding.gather import _ambient_mesh, data_shard_index
-
-# Embedding kinds whose serving artifacts this module can distribute.
-SHARDED_KINDS = ("dpq", "mgqe")
 
 
 def supports_sharding(kind: str, variant: str = "-") -> bool:
     """True when :func:`quantized_gather` can distribute this scheme's
     codes — the source of truth for the README support matrix
     (tools/gen_tables.py)."""
-    del variant  # every MGQE variant of a shardable kind is supported
-    return kind in SHARDED_KINDS
+    del variant  # every variant of a shardable scheme is supported
+    try:
+        cls = scheme_class(kind)
+    except KeyError:
+        return False
+    return cls.supports_sharded_codes
 
 
 def sharded_variants():
-    """(kind, variant) pairs the sharded gather supports."""
-    from repro.core.types import MGQE_VARIANTS
-    pairs = [("dpq", "-")] + [("mgqe", v) for v in MGQE_VARIANTS]
-    return [p for p in pairs if supports_sharding(*p)]
+    """(kind, variant) pairs the sharded gather supports — enumerated
+    from the scheme registry."""
+    return [(kind, v)
+            for kind in registered_kinds()
+            if supports_sharding(kind)
+            for v in scheme_class(kind).variants()]
 
 
 def _codes_rows(artifact: dict) -> int:
@@ -83,11 +88,12 @@ def quantized_gather(artifact: dict, ids: jax.Array, cfg: EmbeddingConfig,
     ambient or the shapes don't divide (single-device tests, export
     tooling) — call sites never branch.
     """
-    if cfg.kind not in SHARDED_KINDS:
+    scheme = get_scheme(cfg)
+    if not scheme.supports_sharded_codes:
         raise ValueError(f"cannot shard codes of kind={cfg.kind!r}")
     mesh = mesh or _ambient_mesh()
     if mesh is None or mesh.size == 1 or model_axis not in mesh.axis_names:
-        return mgqe.decode_codes_blend(artifact, ids, cfg)
+        return scheme.decode(artifact, ids)
 
     data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
     model_n = mesh.shape[model_axis]
@@ -101,7 +107,7 @@ def quantized_gather(artifact: dict, ids: jax.Array, cfg: EmbeddingConfig,
         # Only reachable for indivisible vocabs (the engine rejects
         # those up front) or empty batches; indivisible *batches* are
         # padded below instead of falling back.
-        return mgqe.decode_codes_blend(artifact, ids, cfg)
+        return scheme.decode(artifact, ids)
     # pad the flat batch up to the data-shard granularity (id 0 is
     # always valid) so odd request sizes keep the O(B·d) wire path
     flat_ids = ids.reshape(-1)
@@ -120,10 +126,10 @@ def quantized_gather(artifact: dict, ids: jax.Array, cfg: EmbeddingConfig,
         local = ids_all - shard * rows_local
         hit = (local >= 0) & (local < rows_local)
         local = jnp.clip(local, 0, rows_local - 1)
-        # decode against the LOCAL code shard; tier membership comes
-        # from the global id (frequency rank), not the shard offset
-        rows = mgqe.decode_codes_blend(art_loc, local, cfg,
-                                       tier_ids=ids_all)  # (B_global, d)
+        # decode against the LOCAL code shard; any frequency-dependent
+        # blending (MGQE tiers) keys on the GLOBAL id, not the shard
+        # offset — the scheme's decode hook takes both
+        rows = scheme.decode(art_loc, local, tier_ids=ids_all)  # (B_global, d)
         rows = rows * hit[:, None].astype(rows.dtype)
         full = jax.lax.psum(rows, model_axis)
         if data_axes:
@@ -132,8 +138,7 @@ def quantized_gather(artifact: dict, ids: jax.Array, cfg: EmbeddingConfig,
                                                 b_local, axis=0)
         return full
 
-    from repro.sharding.rules import quantized_artifact_specs
-    art_specs = quantized_artifact_specs(cfg, model_axis=model_axis)
+    art_specs = scheme.artifact_shard_specs(model_axis=model_axis)
     gather_sm = shard_map(
         body, mesh=mesh,
         in_specs=(art_specs, P(data_axes or None)),
@@ -143,5 +148,4 @@ def quantized_gather(artifact: dict, ids: jax.Array, cfg: EmbeddingConfig,
     return out.reshape(lead + (d_out,))
 
 
-__all__ = ["SHARDED_KINDS", "quantized_gather", "sharded_variants",
-           "supports_sharding"]
+__all__ = ["quantized_gather", "sharded_variants", "supports_sharding"]

@@ -291,26 +291,21 @@ def recsys_batch_spec(batch_dict_template, multi_pod: bool) -> Any:
 # ----------------------------------------------------------------------
 
 def quantized_artifact_specs(cfg, model_axis: str = "model"):
-    """PartitionSpec pytree for a dpq/mgqe serving artifact.
+    """PartitionSpec pytree for a quantized serving artifact.
 
     Placement policy (sharding/quantized.py): code tables — the only
-    O(vocab) leaves — are row-sharded over ``model_axis``; centroid
-    tables are KBs and replicated everywhere.  The returned tree
-    matches ``Embedding.serving_artifact_struct()`` leaf-for-leaf, so
-    it can be zipped against a real artifact for ``jax.device_put`` or
-    passed whole as shard_map ``in_specs``.
+    O(vocab) leaves — are row-sharded over ``model_axis``; codebooks
+    are KBs and replicated everywhere.  The tree is DERIVED from the
+    scheme's own artifact spec (``Scheme.artifact_shard_specs``,
+    core/schemes/base.py), so it matches
+    ``Embedding.serving_artifact_struct()`` leaf-for-leaf and can be
+    zipped against a real artifact for ``jax.device_put`` or passed
+    whole as shard_map ``in_specs`` — any registered scheme with
+    row-shardable codes (dpq, mgqe, rq, ...) is covered with no edits
+    here.
     """
-    if cfg.kind not in ("dpq", "mgqe"):
-        raise ValueError(f"no quantized artifact for kind={cfg.kind!r}")
-    codes = P(model_axis, None)
-    if cfg.kind == "dpq" or cfg.mgqe_variant == "shared_k":
-        return {"codes": codes, "centroids": P()}
-    if cfg.mgqe_variant == "private_k":
-        return {"codes": codes,
-                "centroids": [P() for _ in range(cfg.num_tiers)]}
-    # private_d: one (n, D_i) code table per tier, each row-sharded
-    return {"codes": [codes for _ in range(cfg.num_tiers)],
-            "centroids": [P() for _ in range(cfg.num_tiers)]}
+    from repro.core.schemes import get_scheme
+    return get_scheme(cfg).artifact_shard_specs(model_axis=model_axis)
 
 
 def shard_quantized_artifact(artifact, cfg, mesh, model_axis: str = "model"):

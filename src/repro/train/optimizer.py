@@ -3,11 +3,19 @@
 Supported: adam, adamw, adagrad (the classic for sparse recsys
 embeddings), sgd (momentum).  All state lives in a pytree mirroring the
 params, so it shards/checkpoints exactly like the params do.
+
+Each optimizer is one :class:`OptimizerRule` registered under its kind
+string (same pattern as the embedding-scheme registry, DESIGN.md §7):
+``init``/``apply_updates`` resolve the rule from the registry instead
+of branching per kind, so adding an optimizer is one class + one
+decorator.  Moment-buffer keys (``m``/``v``/``acc``/``mom``) are part
+of the rule, so checkpoints and the ZeRO-1 sharding rules
+(sharding/rules.py) see the same state layout as before.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
@@ -44,21 +52,119 @@ def schedule_lr(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
     raise ValueError(cfg.schedule)
 
 
+# ----------------------------------------------------------------------
+# optimizer-rule registry
+# ----------------------------------------------------------------------
+
+class OptimizerRule:
+    """One optimizer: moment-buffer layout + the update math."""
+
+    state_keys: Tuple[str, ...] = ()
+
+    @classmethod
+    def update(cls, cfg: OptimizerConfig, lr, step, params, grads,
+               moments: Dict) -> Tuple[Any, Dict]:
+        """-> (new_params, new_moments) with the same ``state_keys``."""
+        raise NotImplementedError
+
+
+_OPTIMIZERS: Dict[str, Type[OptimizerRule]] = {}
+
+
+def register_optimizer(kind: str):
+    def deco(cls: Type[OptimizerRule]) -> Type[OptimizerRule]:
+        prev = _OPTIMIZERS.get(kind)
+        if prev is not None and prev is not cls:
+            raise ValueError(
+                f"optimizer kind {kind!r} already registered to {prev}")
+        _OPTIMIZERS[kind] = cls
+        return cls
+    return deco
+
+
+def _rule(kind: str) -> Type[OptimizerRule]:
+    try:
+        return _OPTIMIZERS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown optimizer kind {kind!r}; registered: "
+            f"{', '.join(sorted(_OPTIMIZERS))}") from None
+
+
+@register_optimizer("adam")
+class _Adam(OptimizerRule):
+    state_keys = ("m", "v")
+    decoupled_weight_decay = False
+
+    @classmethod
+    def update(cls, cfg, lr, step, params, grads, moments):
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1 - cfg.b1 ** t
+        bc2 = 1 - cfg.b2 ** t
+        # all moment math in fp32 (grads may be bf16)
+        m = jax.tree.map(
+            lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g.astype(jnp.float32),
+            moments["m"], grads)
+        v = jax.tree.map(
+            lambda vv, g: cfg.b2 * vv
+            + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)),
+            moments["v"], grads)
+
+        def upd(p, mm, vv):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + cfg.eps)
+            if cls.decoupled_weight_decay and cfg.weight_decay:
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32)
+                    - lr * u).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m, v), {"m": m, "v": v}
+
+
+@register_optimizer("adamw")
+class _AdamW(_Adam):
+    decoupled_weight_decay = True
+
+
+@register_optimizer("adagrad")
+class _Adagrad(OptimizerRule):
+    state_keys = ("acc",)
+
+    @classmethod
+    def update(cls, cfg, lr, step, params, grads, moments):
+        acc = jax.tree.map(
+            lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+            moments["acc"], grads)
+        new_params = jax.tree.map(
+            lambda p, a, g: (p.astype(jnp.float32) - lr
+                             * g.astype(jnp.float32)
+                             / (jnp.sqrt(a) + cfg.eps)).astype(p.dtype),
+            params, acc, grads)
+        return new_params, {"acc": acc}
+
+
+@register_optimizer("sgd")
+class _SGD(OptimizerRule):
+    state_keys = ("mom",)
+
+    @classmethod
+    def update(cls, cfg, lr, step, params, grads, moments):
+        mom = jax.tree.map(lambda mm, g: cfg.momentum * mm + g,
+                           moments["mom"], grads)
+        new_params = jax.tree.map(
+            lambda p, mm: p - lr.astype(p.dtype) * mm.astype(p.dtype),
+            params, mom)
+        return new_params, {"mom": mom}
+
+
 def init(cfg: OptimizerConfig, params: Any) -> Dict:
     # Moment buffers are always fp32, independent of param dtype (bf16
     # params + fp32 moments is the standard mixed-precision recipe).
+    rule = _rule(cfg.kind)
     zeros = lambda: jax.tree.map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
     state: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
-    if cfg.kind in ("adam", "adamw"):
-        state["m"] = zeros()
-        state["v"] = zeros()
-    elif cfg.kind == "adagrad":
-        state["acc"] = zeros()
-    elif cfg.kind == "sgd":
-        state["mom"] = zeros()
-    else:
-        raise ValueError(cfg.kind)
+    for k in rule.state_keys:
+        state[k] = zeros()
     return state
 
 
@@ -76,54 +182,15 @@ def clip_by_global_norm(grads, max_norm: float):
 
 def apply_updates(cfg: OptimizerConfig, params, grads,
                   state: Dict) -> Tuple[Any, Dict]:
+    rule = _rule(cfg.kind)
     step = state["step"]
     lr = schedule_lr(cfg, step)
     if cfg.grad_clip is not None:
         grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
-    new_state: Dict[str, Any] = {"step": step + 1}
-
-    if cfg.kind in ("adam", "adamw"):
-        t = (step + 1).astype(jnp.float32)
-        bc1 = 1 - cfg.b1 ** t
-        bc2 = 1 - cfg.b2 ** t
-        # all moment math in fp32 (grads may be bf16)
-        m = jax.tree.map(
-            lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g.astype(jnp.float32),
-            state["m"], grads)
-        v = jax.tree.map(
-            lambda vv, g: cfg.b2 * vv
-            + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)),
-            state["v"], grads)
-
-        def upd(p, mm, vv):
-            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + cfg.eps)
-            if cfg.kind == "adamw" and cfg.weight_decay:
-                u = u + cfg.weight_decay * p.astype(jnp.float32)
-            return (p.astype(jnp.float32)
-                    - lr * u).astype(p.dtype)
-
-        new_params = jax.tree.map(upd, params, m, v)
-        new_state["m"], new_state["v"] = m, v
-    elif cfg.kind == "adagrad":
-        acc = jax.tree.map(
-            lambda a, g: a + jnp.square(g.astype(jnp.float32)),
-            state["acc"], grads)
-        new_params = jax.tree.map(
-            lambda p, a, g: (p.astype(jnp.float32) - lr
-                             * g.astype(jnp.float32)
-                             / (jnp.sqrt(a) + cfg.eps)).astype(p.dtype),
-            params, acc, grads)
-        new_state["acc"] = acc
-    elif cfg.kind == "sgd":
-        mom = jax.tree.map(lambda mm, g: cfg.momentum * mm + g,
-                           state["mom"], grads)
-        new_params = jax.tree.map(
-            lambda p, mm: p - lr.astype(p.dtype) * mm.astype(p.dtype),
-            params, mom)
-        new_state["mom"] = mom
-    else:
-        raise ValueError(cfg.kind)
-    return new_params, new_state
+    moments = {k: state[k] for k in rule.state_keys}
+    new_params, new_moments = rule.update(cfg, lr, step, params, grads,
+                                          moments)
+    return new_params, {"step": step + 1, **new_moments}
 
 
 # convenience container ------------------------------------------------

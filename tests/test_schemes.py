@@ -1,0 +1,248 @@
+"""Scheme-registry conformance suite (DESIGN.md §7).
+
+Parametrized over the LIVE registry — every registered scheme (and
+every variant it declares) is run through the full
+init -> apply -> export -> serve lifecycle and checked against its own
+artifact spec.  A new plugin gets this coverage the moment it
+registers; nothing here lists kinds by hand.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Embedding, EmbeddingConfig
+from repro.core.schemes import (ArtifactLeaf, get_scheme, registered_kinds,
+                                scheme_class)
+
+
+def _registry_params():
+    out = []
+    for kind in registered_kinds():
+        cls = scheme_class(kind)
+        for var in cls.variants():
+            label = kind if var == "-" else f"{kind}-{var}"
+            out.append(pytest.param(kind, var, id=label))
+    return out
+
+
+def _cfg(kind, var):
+    return scheme_class(kind).probe_config(var)
+
+
+def _spec_leaves(cfg):
+    return get_scheme(cfg).artifact_leaves()
+
+
+# ------------------------------------------------------------ lifecycle
+
+@pytest.mark.parametrize("kind,var", _registry_params())
+def test_scheme_lifecycle_roundtrip(kind, var):
+    """init -> apply -> export -> serve for every registered scheme."""
+    cfg = _cfg(kind, var)
+    emb = Embedding(cfg)
+    p = emb.init(jax.random.PRNGKey(0))
+    ids = jnp.asarray([[0, 3], [cfg.vocab_size - 1, 1], [2, 2]])
+    out, aux = emb.apply(p, ids)
+    assert out.shape == ids.shape + (cfg.dim,)
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.isfinite(float(aux))
+    art = emb.export(p)
+    sv = emb.serve(art, ids)
+    assert sv.shape == out.shape
+    # post-export serving must reproduce the training-path forward for
+    # every scheme whose export is lossless w.r.t. the forward (all but
+    # sq, whose quantization error is bounded by its own test)
+    if kind != "sq":
+        np.testing.assert_allclose(np.asarray(out), np.asarray(sv),
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("kind,var", _registry_params())
+def test_scheme_artifact_matches_spec(kind, var):
+    """The exported artifact must agree leaf-for-leaf with the scheme's
+    single artifact-spec source of truth (shape, dtype, storage)."""
+    cfg = _cfg(kind, var)
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    art_leaves = jax.tree.leaves(art)
+    spec_leaves = _spec_leaves(cfg)
+    assert len(art_leaves) == len(spec_leaves)
+    for a, s in zip(art_leaves, spec_leaves):
+        assert tuple(a.shape) == tuple(s.shape), (a.shape, s)
+        assert jnp.asarray(a).dtype == jnp.dtype(s.dtype), (a.dtype, s)
+        assert a.size * jnp.asarray(a).dtype.itemsize * 8 == s.storage_bits
+    # the derived struct is the same spec viewed as ShapeDtypeStructs
+    struct_leaves = jax.tree.leaves(emb.serving_artifact_struct())
+    for s, st in zip(spec_leaves, struct_leaves):
+        assert tuple(st.shape) == tuple(s.shape)
+        assert st.dtype == jnp.dtype(s.dtype)
+
+
+@pytest.mark.parametrize("kind,var", _registry_params())
+def test_scheme_size_accounting_vs_artifact_nbytes(kind, var):
+    """serving_size_bits() must equal the exported artifact's actual
+    storage, up to code-packing rounding: code tables are *stored* at
+    uint8/int32 granularity but *accounted* at their packed width, so
+    accounting <= storage, with equality once the per-leaf packing
+    slack (storage_bits - logical_bits, integer leaves only) is added
+    back."""
+    cfg = _cfg(kind, var)
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    actual_bits = sum(np.asarray(x).nbytes * 8
+                      for x in jax.tree.leaves(art))
+    size_bits = emb.serving_size_bits()
+    assert size_bits <= actual_bits
+    pack_slack = sum(leaf.storage_bits - leaf.size_bits
+                     for leaf in _spec_leaves(cfg))
+    assert size_bits + pack_slack == actual_bits
+    # only integer (code) leaves may carry packing slack
+    for leaf in _spec_leaves(cfg):
+        if leaf.size_bits != leaf.storage_bits:
+            assert jnp.issubdtype(jnp.dtype(leaf.dtype), jnp.integer)
+
+
+@pytest.mark.parametrize("kind,var", _registry_params())
+def test_scheme_sharding_specs_match_spec_placement(kind, var):
+    """artifact_shard_specs derives from the same spec: rows leaves get
+    P(model, ...), everything else replicated."""
+    from jax.sharding import PartitionSpec as P
+    cfg = _cfg(kind, var)
+    scheme = get_scheme(cfg)
+    if not scheme.supports_sharded_codes:
+        with pytest.raises(ValueError):
+            scheme.artifact_shard_specs()
+        return
+    spec_leaves = _spec_leaves(cfg)
+    shard_leaves = jax.tree.leaves(scheme.artifact_shard_specs(),
+                                   is_leaf=lambda x: isinstance(x, P))
+    assert len(spec_leaves) == len(shard_leaves)
+    for s, sh in zip(spec_leaves, shard_leaves):
+        if s.rows:
+            assert tuple(sh)[0] == "model"
+        else:
+            assert tuple(sh) == ()
+    # every scheme must have at least one O(vocab) leaf to shard
+    assert any(s.rows for s in spec_leaves)
+
+
+# ----------------------------------------------------- dtype accounting
+
+@pytest.mark.parametrize("kind,var", _registry_params())
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_scheme_size_accounting_tracks_param_dtype(kind, var, dtype):
+    """Float artifact leaves must be accounted at param_dtype width —
+    16 bits under bfloat16, not a hardcoded 32 (the old bug) — while
+    code widths are dtype-independent.  Exported artifacts at the
+    configured dtype must still match the spec exactly."""
+    cfg = dataclasses.replace(_cfg(kind, var), param_dtype=dtype)
+    if kind == "sq":
+        # sq's lo/scale are fp32 by construction; only q counts codes
+        assert cfg.serving_size_bits() == _cfg(kind, var).serving_size_bits()
+        return
+    width = jnp.dtype(dtype).itemsize * 8
+    float_elems = sum(math.prod(leaf.shape)
+                      for leaf in get_scheme(cfg).artifact_leaves()
+                      if jnp.issubdtype(jnp.dtype(leaf.dtype),
+                                        jnp.floating))
+    f32_bits = _cfg(kind, var).serving_size_bits()
+    assert cfg.serving_size_bits() == f32_bits - float_elems * (32 - width)
+    # real export at this dtype agrees with the spec leaf-for-leaf
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    for a, s in zip(jax.tree.leaves(art), get_scheme(cfg).artifact_leaves()):
+        assert jnp.asarray(a).dtype == jnp.dtype(s.dtype)
+        assert tuple(a.shape) == tuple(s.shape)
+
+
+# ------------------------------------------------------------- registry
+
+def test_unknown_kind_error_lists_registered_schemes():
+    with pytest.raises(ValueError, match="registered schemes"):
+        EmbeddingConfig(vocab_size=8, dim=4, kind="no-such-scheme")
+
+
+def test_registry_rejects_duplicate_kind():
+    from repro.core.schemes import Scheme, register_scheme
+    with pytest.raises(ValueError, match="already registered"):
+        @register_scheme("dpq")
+        class Impostor(Scheme):
+            pass
+
+
+def test_optimizer_registry_rejects_unknown_kind():
+    from repro.train import optimizer as opt_lib
+    cfg = opt_lib.OptimizerConfig(kind="nope")
+    with pytest.raises(ValueError, match="unknown optimizer"):
+        opt_lib.init(cfg, {"w": jnp.zeros((2,))})
+
+
+# ------------------------------------------------------------ rq extras
+
+def test_rq_residual_stages_reduce_reconstruction_error():
+    """Each additional codebook must explain residual variance: the
+    quantization error of M=3 stages is below M=1 on the same table."""
+    errs = {}
+    for m in (1, 3):
+        cfg = EmbeddingConfig(vocab_size=128, dim=16, kind="rq",
+                              num_levels=m, num_centroids=16)
+        emb = Embedding(cfg)
+        p = emb.init(jax.random.PRNGKey(0))
+        # compare decoded serving rows against the trained table rows
+        art = emb.export(p)
+        dec = emb.serve(art, jnp.arange(128))
+        errs[m] = float(jnp.mean(jnp.square(dec - p["emb"])))
+    assert errs[3] < errs[1]
+
+
+def test_rq_straight_through_gradients():
+    cfg = EmbeddingConfig(vocab_size=64, dim=8, kind="rq", num_levels=2,
+                          num_centroids=8)
+    emb = Embedding(cfg)
+    p = emb.init(jax.random.PRNGKey(0))
+    ids = jnp.arange(16)
+
+    def loss(p):
+        out, aux = emb.apply(p, ids)
+        return jnp.sum(out ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    g_emb = np.asarray(g["emb"])
+    assert np.abs(g_emb[:16]).sum() > 0       # STE reaches gathered rows
+    assert np.abs(g_emb[16:]).sum() == 0      # untouched rows: no grad
+    assert np.abs(np.asarray(g["codebooks"])).sum() > 0
+
+
+def test_rq_codes_within_range_and_uint8():
+    cfg = EmbeddingConfig(vocab_size=100, dim=8, kind="rq", num_levels=3,
+                          num_centroids=16)
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(2)))
+    codes = np.asarray(art["codes"])
+    assert codes.dtype == np.uint8 and codes.shape == (100, 3)
+    assert codes.max() < 16
+
+
+def test_rq_through_serving_engine():
+    """The micro-batching engine needs no rq-specific code."""
+    from repro.launch.engine import ServingEngine
+    cfg = EmbeddingConfig(vocab_size=200, dim=16, kind="rq", num_levels=2,
+                          num_centroids=8, decode_block_b=32)
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    eng = ServingEngine(emb, art)
+    ids = jnp.asarray([0, 7, 199, 7])
+    out = eng.lookup(ids)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(emb.serve(art, ids)), atol=1e-6)
+
+
+def test_artifact_leaf_bits():
+    leaf = ArtifactLeaf((4, 8), jnp.uint8, rows=True, logical_bits=96)
+    assert leaf.storage_bits == 4 * 8 * 8
+    assert leaf.size_bits == 96
+    assert ArtifactLeaf((2, 2), "bfloat16").size_bits == 4 * 16

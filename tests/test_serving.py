@@ -29,6 +29,8 @@ def _cfgs():
                         num_subspaces=4, num_centroids=16,
                         tier_boundaries=(10,),
                         tier_num_subspaces=(4, 2)),
+        EmbeddingConfig(vocab_size=96, dim=16, kind="rq",
+                        num_levels=3, num_centroids=16),
     ]
 
 

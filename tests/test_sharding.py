@@ -129,8 +129,8 @@ def test_sharded_mgqe_embedding_lookup_matches():
 
 def test_sharded_quantized_gather_matches_serve_all_variants():
     """Row-sharded codes + replicated codebooks on Mesh(data=2, model=2)
-    must serve identically to the single-device fused decode, for DPQ
-    and all three MGQE variants (DESIGN.md §6)."""
+    must serve identically to the single-device fused decode, for DPQ,
+    all three MGQE variants, and the rq plugin (DESIGN.md §6/§7)."""
     _run("""
         import warnings; warnings.filterwarnings('ignore')
         import dataclasses
@@ -148,6 +148,7 @@ def test_sharded_quantized_gather_matches_serve_all_variants():
             dict(kind="mgqe", mgqe_variant="private_d", num_subspaces=4,
                  num_centroids=8, tier_boundaries=(16,),
                  tier_num_subspaces=(4, 2)),
+            dict(kind="rq", num_levels=3, num_centroids=8),
         ]
         mesh = jax.make_mesh((2, 2), ("data", "model"))
         assert dict(mesh.shape) == {"data": 2, "model": 2}

@@ -34,40 +34,34 @@ HDR = ("| arch | shape | opts | compute ms | memory ms | collective ms | "
        "|---|---|---|---|---|---|---|---|---|---|")
 
 
-def _scheme_cfg(kind, var):
-    """Tiny EmbeddingConfig for capability probing one scheme."""
-    from repro.core.types import EmbeddingConfig
-    kw = dict(vocab_size=32, dim=8, kind=kind, num_subspaces=4,
-              num_centroids=4)
-    if kind == "mgqe":
-        kw.update(mgqe_variant=var, tier_boundaries=(8,))
-        if var in ("shared_k", "private_k"):
-            kw["tier_num_centroids"] = (4, 2)
-        else:
-            kw["tier_num_subspaces"] = (4, 2)
-    return EmbeddingConfig(**kw)
-
-
 def support_matrix():
     """Markdown matrix: table scheme x decode backend x placement.
 
-    Every cell is PROBED, not hardcoded: backend columns come from the
-    kernel dispatch registry, the single-device cell from an actual
-    init -> export -> serve round trip, and the sharded cell from the
-    sharding layer's own capability check plus its artifact placement
-    specs — so the README table cannot drift from the code (CI gates
-    on the output matching).
+    Every cell is PROBED, not hardcoded: rows are enumerated from the
+    scheme plugin registry (every registered quantized scheme and its
+    variants — a new plugin shows up with zero edits here), backend
+    columns come from the kernel dispatch registry, the single-device
+    cell from an actual init -> export -> serve round trip, and the
+    sharded cell from the sharding layer's own capability check plus
+    its artifact placement specs — so the README table cannot drift
+    from the code (CI gates on the output matching).
     """
     import jax
     from repro.core.api import Embedding
-    from repro.core.types import MGQE_VARIANTS
+    from repro.core.schemes import registered_kinds, scheme_class
     from repro.kernels import dispatch
     from repro.sharding.quantized import supports_sharding
     from repro.sharding.rules import quantized_artifact_specs
 
     backends = sorted(dispatch.registered_ops()["mgqe_decode"])
-    schemes = ([("`dpq`", "dpq", "-")]
-               + [(f"`mgqe` ({v})", "mgqe", v) for v in MGQE_VARIANTS])
+    schemes = []
+    for kind in registered_kinds():
+        cls = scheme_class(kind)
+        if not cls.supports_sharded_codes:
+            continue  # the matrix covers quantized-table schemes
+        for var in cls.variants():
+            label = f"`{kind}`" + (f" ({var})" if var != "-" else "")
+            schemes.append((label, kind, var))
 
     def probe(fn):
         try:
@@ -82,7 +76,7 @@ def support_matrix():
         + " | single-device | sharded codes |",
         "|---" * (len(backends) + 3) + "|"]
     for label, kind, var in schemes:
-        cfg = _scheme_cfg(kind, var)
+        cfg = scheme_class(kind).probe_config(var)
         emb = Embedding(cfg)
         art = emb.export(emb.init(jax.random.PRNGKey(0)))
         ids = jax.numpy.arange(8)
