@@ -24,6 +24,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import Embedding, EmbeddingConfig
 from repro.core.partition import frequency_boundaries
@@ -277,6 +278,94 @@ def bench_adc(results: dict, d: int, D: int, K: int, n_cand: int):
     }
 
 
+def bench_retrieval_topk(results: dict, d: int, D: int, n_cand: int,
+                         k: int = 100, batch: int = 16):
+    """Batched fused top-k retrieval (DESIGN.md §8): the dispatched
+    ``pq_topk`` path (one LUT batch, one pass over the code stream,
+    block-wise top-k accumulation) vs the per-query unfused loop
+    (B separate full scans + top_k), plus the ivf_pq index probing
+    nprobe/nlist of the corpus.  Runs on the PQ-structured synthetic
+    corpus so recall@k vs the exact dense scan isolates the retrieval
+    approximation, not quantizer noise.  Score parity between the
+    fused and unfused flat paths is recorded as ``parity_ok`` and
+    flips the exit code (after the json is written).
+    """
+    from repro.data.synthetic import pq_clustered_corpus
+    from repro.kernels.pq_score import score_candidates
+    from repro.retrieval import IndexConfig, get_index
+
+    vecs_np, q_np = pq_clustered_corpus(n=n_cand, d=d, num_subspaces=D,
+                                        n_queries=batch)
+    vecs, q = jnp.asarray(vecs_np), jnp.asarray(q_np)
+    ex_ids = np.argsort(-(q_np @ vecs_np.T), axis=1)[:, :k]
+
+    def recall(ids):
+        ids = np.asarray(ids)
+        return float(np.mean([len(set(ids[b].tolist())
+                                  & set(ex_ids[b].tolist())) / k
+                              for b in range(batch)]))
+
+    backend = dispatch.resolve_backend()
+    flat = get_index(IndexConfig(kind="flat_pq", num_subspaces=D,
+                                 num_centroids=128, iters=15))
+    art = flat.build(jax.random.PRNGKey(0), vecs)
+    fused_fn = jax.jit(lambda a, qq: flat.search(a, qq, k))
+    t_fused = _time(fused_fn, art, q, iters=5)
+    s_fused, i_fused = fused_fn(art, q)
+
+    # unfused: per-query full scan + top_k — B kernel launches, B (N,)
+    # score vectors materialized in HBM
+    one = jax.jit(lambda a, qq: jax.lax.top_k(
+        score_candidates(qq, a["centroids"], a["codes"]), k))
+
+    def unfused(a, qq):
+        outs = [one(a, qq[b]) for b in range(batch)]
+        return (jnp.stack([s for s, _ in outs]),
+                jnp.stack([i for _, i in outs]))
+    t_unfused = _time(unfused, art, q, iters=5)
+    s_unfused, _ = unfused(art, q)
+
+    err = float(jnp.max(jnp.abs(s_fused - s_unfused)))
+    parity_ok = err < 1e-5
+    if not parity_ok:
+        print(f"WARNING: retrieval topk parity FAILED (max err {err:.2e})")
+
+    nlist, nprobe = 64, 8                    # nprobe = nlist/8
+    ivf = get_index(IndexConfig(kind="ivf_pq", num_subspaces=D,
+                                num_centroids=128, iters=15,
+                                nlist=nlist, nprobe=nprobe,
+                                coarse_iters=15))
+    art_ivf = ivf.build(jax.random.PRNGKey(0), vecs)
+    ivf_fn = jax.jit(lambda a, qq: ivf.search(a, qq, k))
+    t_ivf = _time(ivf_fn, art_ivf, q, iters=5)
+    _, i_ivf = ivf_fn(art_ivf, q)
+
+    r_flat, r_ivf = recall(i_fused), recall(i_ivf)
+    print(f"retrieval top-{k} B={batch} x {n_cand/1e3:.0f}k cands: "
+          f"unfused loop {t_unfused*1e3:.1f} ms | fused[{backend}] "
+          f"{t_fused*1e3:.1f} ms ({t_unfused/t_fused:.1f}x, parity err "
+          f"{err:.1e}) | ivf_pq nprobe {nprobe}/{nlist} "
+          f"{t_ivf*1e3:.1f} ms")
+    print(f"  recall@{k} vs exact dense scan: flat {r_flat:.3f}, "
+          f"ivf {r_ivf:.3f}")
+    results["retrieval_topk"] = {
+        "n_candidates": n_cand, "dim": d, "num_subspaces": D,
+        "batch": batch, "k": k,
+        "fused_backend": backend,
+        "unfused_loop_ms": t_unfused * 1e3,
+        "fused_topk_ms": t_fused * 1e3,
+        "fused_vs_unfused_speedup": t_unfused / t_fused,
+        "ivf_topk_ms": t_ivf * 1e3,
+        "nlist": nlist, "nprobe": nprobe,
+        "recall_at_k_flat": r_flat,
+        "recall_at_k_ivf": r_ivf,
+        "parity_max_err": err,
+        "parity_ok": parity_ok,
+        "codes_mbytes": n_cand * D / 1e6,
+        "dense_mbytes": n_cand * d * 4 / 1e6,
+    }
+
+
 def bench_dpq_assign(results: dict, d: int, D: int, K: int, b: int):
     k = jax.random.PRNGKey(0)
     cent = jax.random.normal(k, (D, K, d // D))
@@ -304,6 +393,7 @@ def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
     bench_engine(results, n, d, D, K,
                  n_requests=50 if quick else 200, req_batch=64)
     bench_adc(results, d, D, K, n_cand=n)
+    bench_retrieval_topk(results, d, D, n_cand=100_000)
     bench_dpq_assign(results, d, D, K, b=8192 if quick else 65_536)
     if out_json:
         with open(out_json, "w") as f:
@@ -312,7 +402,8 @@ def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
     # parity failures flip the exit code AFTER the json is written, so
     # CI still uploads the full results for diagnosis
     return 0 if all(results.get(k, {}).get("parity_ok", True)
-                    for k in ("sharded_decode", "rq_decode")) else 1
+                    for k in ("sharded_decode", "rq_decode",
+                              "retrieval_topk")) else 1
 
 
 if __name__ == "__main__":

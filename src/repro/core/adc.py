@@ -1,101 +1,15 @@
-"""ADC retrieval over a PQ-coded corpus (beyond-paper serving path).
+"""Compatibility shim — ADC moved to the retrieval subsystem.
 
-The paper stops at compressing the *embedding table*.  For the
-retrieval-scoring cell (1 query x 1M candidates) the same PQ machinery
-compresses the *candidate tower outputs*: fit per-subspace k-means over
-the corpus vectors once offline, store only codes, and score queries by
-LUT summation — ``score(i) = sum_d <q_d, c_codes[i,d]^(d)>`` — which is
-exact for the dot product up to quantization error and never
-reconstructs a candidate vector.  (Jegou et al.'s classic PQ-ADC,
-applied to the paper's quantized-embedding serving story.)
-
-The hot loop is the ``pq_score`` Pallas kernel; this module owns the
-offline corpus-coding step (Lloyd's k-means per subspace, pure JAX).
+The single-query ADC helpers that used to live here grew into the
+``repro.retrieval`` package (DESIGN.md §8): an index registry with
+``flat_pq`` (the exact scan this module implemented) and ``ivf_pq``,
+batched fused top-k kernels, and sharded search.  This module
+re-exports the original surface so existing imports keep working;
+new code should use ``repro.retrieval`` directly.
 """
-from __future__ import annotations
+from repro.retrieval.flat_pq import (adc_scores, build_corpus_artifact,
+                                     encode_corpus, fit_pq,
+                                     reconstruction_mse)
 
-from typing import Dict, Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.dpq_assign import assign as dpq_assign_op
-from repro.kernels.pq_score import score_candidates
-
-
-def fit_pq(key: jax.Array, vectors: jax.Array, num_subspaces: int,
-           num_centroids: int, iters: int = 10) -> jax.Array:
-    """Per-subspace k-means over corpus vectors.
-
-    vectors (N, d) -> centroids (D, K, S), S = d / D.
-    """
-    n, d = vectors.shape
-    assert d % num_subspaces == 0, (d, num_subspaces)
-    s = d // num_subspaces
-    x = vectors.reshape(n, num_subspaces, s).transpose(1, 0, 2)  # (D, N, S)
-
-    # init: distinct random rows per subspace — sampling WITHOUT
-    # replacement; duplicate seeds collapse into dead centroids that
-    # Lloyd's update can never split, which measurably hurts recall.
-    # (Tiny corpora with n < K must sample with replacement.)
-    keys = jax.random.split(key, num_subspaces)
-    idx = jnp.stack([jax.random.choice(kk, n, (num_centroids,),
-                                       replace=n < num_centroids)
-                     for kk in keys])
-    cent = jnp.take_along_axis(x, idx[..., None], axis=1)        # (D, K, S)
-
-    def step(cent, _):
-        # assign: nearest centroid per subspace
-        dots = jnp.einsum("dns,dks->dnk", x, cent)
-        c_sq = jnp.sum(jnp.square(cent), axis=-1)                # (D, K)
-        codes = jnp.argmin(c_sq[:, None, :] - 2 * dots, axis=-1)  # (D, N)
-        onehot = jax.nn.one_hot(codes, cent.shape[1], dtype=x.dtype)
-        counts = jnp.sum(onehot, axis=1)                         # (D, K)
-        sums = jnp.einsum("dnk,dns->dks", onehot, x)
-        new = jnp.where(counts[..., None] > 0,
-                        sums / jnp.maximum(counts[..., None], 1.0), cent)
-        return new, None
-
-    cent, _ = jax.lax.scan(step, cent, None, length=iters)
-    return cent
-
-
-def encode_corpus(vectors: jax.Array, centroids: jax.Array,
-                  backend: Optional[str] = None) -> jax.Array:
-    """vectors (N, d) -> codes (N, D) int32 (dispatched dpq_assign)."""
-    n, d = vectors.shape
-    n_sub, _, s = centroids.shape
-    e_sub = vectors.reshape(n, n_sub, s)
-    return dpq_assign_op(e_sub, centroids, backend=backend)
-
-
-def build_corpus_artifact(key: jax.Array, vectors: jax.Array,
-                          num_subspaces: int = 8, num_centroids: int = 256,
-                          iters: int = 10,
-                          backend: Optional[str] = None) -> Dict:
-    """Offline step: corpus vectors -> {codes, centroids} artifact."""
-    cent = fit_pq(key, vectors, num_subspaces, num_centroids, iters)
-    codes = encode_corpus(vectors, cent, backend=backend)
-    dtype = jnp.uint8 if num_centroids <= 256 else jnp.int32
-    return {"codes": codes.astype(dtype), "centroids": cent}
-
-
-def adc_scores(artifact: Dict, query: jax.Array,
-               backend: Optional[str] = None,
-               block_n: int = 1024) -> jax.Array:
-    """query (d,) -> scores (N,) over the coded corpus.
-
-    Scoring runs through the dispatched ``pq_score`` kernel — the LUT
-    stays in VMEM on TPU; the XLA reference is the CPU fallback.
-    """
-    return score_candidates(query, artifact["centroids"],
-                            artifact["codes"].astype(jnp.int32),
-                            block_n=block_n, backend=backend)
-
-
-def reconstruction_mse(artifact: Dict, vectors: jax.Array) -> jax.Array:
-    """Mean squared quantization error of the coded corpus."""
-    from repro.kernels.mgqe_decode.ref import mgqe_decode_ref
-    rec = mgqe_decode_ref(artifact["codes"].astype(jnp.int32),
-                          artifact["centroids"])
-    return jnp.mean(jnp.square(rec - vectors))
+__all__ = ["adc_scores", "build_corpus_artifact", "encode_corpus",
+           "fit_pq", "reconstruction_mse"]

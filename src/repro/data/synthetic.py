@@ -200,3 +200,55 @@ class BehaviorSeqStream:
         p = 1.0 / (1.0 + np.exp(-logit))
         label = (self.rng.random(b) < p).astype(np.float32)
         return {"hist_ids": hist, "target_id": target, "label": label}
+
+
+# ----------------------------------------------------------------------
+# PQ-structured retrieval corpus (recall benchmarks, DESIGN.md §8)
+# ----------------------------------------------------------------------
+
+def pq_clustered_corpus(n: int = 100_000, d: int = 64,
+                        num_subspaces: int = 8, n_words: int = 16,
+                        n_clusters: int = 64, p_mut: float = 0.25,
+                        n_queries: int = 16, query_noise: float = 0.05,
+                        seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Synthetic corpus for measuring retrieval recall vs the exact
+    dense scan: (items (n, d) f32, queries (n_queries, d) f32).
+
+    Items live exactly on a product code — per subspace each item takes
+    one of ``n_words`` codeword sub-vectors — so a PQ codec with
+    K >= ~4x n_words recovers the corpus losslessly and measured recall
+    isolates the RETRIEVAL approximation (IVF probing), not quantizer
+    noise.  Cluster structure for IVF comes from ``n_clusters``
+    prototype tuples that items copy with per-subspace mutation prob
+    ``p_mut``; code tuples are deduplicated (duplicates resampled
+    uniformly) so top-k boundaries are not degenerate tie groups.
+    Queries point along cluster prototypes plus noise — the
+    concentrated-top-k regime IVF exists for.
+    """
+    assert d % num_subspaces == 0, (d, num_subspaces)
+    s = d // num_subspaces
+    rng = np.random.default_rng(seed)
+    books = rng.normal(size=(num_subspaces, n_words, s)).astype(np.float32)
+    proto = rng.integers(0, n_words, (n_clusters, num_subspaces))
+    g = rng.integers(0, n_clusters, n)
+    mut = rng.random((n, num_subspaces)) < p_mut
+    code = np.where(mut, rng.integers(0, n_words, (n, num_subspaces)),
+                    proto[g])
+    # resample duplicates until every tuple is unique (a single pass
+    # can re-collide; one residual duplicate at n=100k puts two
+    # bit-identical scores on a top-k boundary and reads as recall loss)
+    while True:
+        _, first = np.unique(code, axis=0, return_index=True)
+        if first.size == n:
+            break
+        dup = np.ones(n, bool)
+        dup[first] = False
+        code[dup] = rng.integers(0, n_words,
+                                 (int(dup.sum()), num_subspaces))
+    items = books[np.arange(num_subspaces)[None], code].reshape(n, d)
+    qc = rng.integers(0, n_clusters, n_queries)
+    qvec = books[np.arange(num_subspaces)[None], proto[qc]].reshape(
+        n_queries, d)
+    q = qvec / np.linalg.norm(qvec, axis=1, keepdims=True)
+    q = q + query_noise * rng.normal(size=(n_queries, d))
+    return items.astype(np.float32), q.astype(np.float32)

@@ -1,14 +1,34 @@
-"""Public wrapper: ADC retrieval scoring against a PQ-coded corpus."""
+"""Public wrappers: ADC retrieval scoring against a PQ-coded corpus.
+
+Three dispatched ops (pallas | xla | interpret, DESIGN.md §5):
+
+  ``pq_score``          one LUT (D, K) -> scores (N,)
+  ``pq_score_batched``  B LUTs (B, D, K) -> scores (B, N); one pass
+                        over the code stream for the whole query batch
+  ``pq_topk``           fused batched score + block-wise top-k: the
+                        (B, N) score matrix never materializes
+
+All three accept the corpus codes at their STORED dtype (uint8 when
+K <= 256), so call sites no longer make an eager int32 copy of the
+O(vocab) code table per request.  Where the widening lands is
+backend-dependent: the pallas/interpret kernels cast per VMEM block;
+the XLA references widen inside the jitted gather (gather indices are
+integer, so a transient N·D int32 index buffer still exists there —
+fused where XLA can, but not block-bounded like the kernels).
+"""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
-from repro.kernels.pq_score.pq_score import pq_score
-from repro.kernels.pq_score.ref import build_lut_ref, pq_score_ref
+from repro.kernels.pq_score.pq_score import (INVALID_ID, pq_score,
+                                             pq_score_batched, pq_topk)
+from repro.kernels.pq_score.ref import (build_lut_batch_ref, build_lut_ref,
+                                        pq_score_batched_ref, pq_score_ref,
+                                        pq_topk_ref)
 
 dispatch.register_op(
     "pq_score",
@@ -19,10 +39,33 @@ dispatch.register_op(
         lut, codes, block_n=block_n, interpret=True),
 )
 
+dispatch.register_op(
+    "pq_score_batched",
+    pallas=lambda luts, codes, block_n=1024: pq_score_batched(
+        luts, codes, block_n=block_n),
+    xla=lambda luts, codes, block_n=1024: pq_score_batched_ref(luts, codes),
+    interpret=lambda luts, codes, block_n=1024: pq_score_batched(
+        luts, codes, block_n=block_n, interpret=True),
+)
+
+dispatch.register_op(
+    "pq_topk",
+    pallas=lambda luts, codes, k, block_n=1024: pq_topk(
+        luts, codes, k, block_n=block_n),
+    xla=lambda luts, codes, k, block_n=1024: pq_topk_ref(luts, codes, k),
+    interpret=lambda luts, codes, k, block_n=1024: pq_topk(
+        luts, codes, k, block_n=block_n, interpret=True),
+)
+
 
 def build_lut(query: jax.Array, centroids: jax.Array) -> jax.Array:
     """Per-query LUT (D, K).  Tiny — stays pure jnp (one einsum)."""
     return build_lut_ref(query, centroids)
+
+
+def build_lut_batch(queries: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Per-query LUTs (B, D, K) — one einsum for the whole batch."""
+    return build_lut_batch_ref(queries, centroids)
 
 
 def score_candidates(query: jax.Array, centroids: jax.Array,
@@ -34,5 +77,28 @@ def score_candidates(query: jax.Array, centroids: jax.Array,
                              backend=backend)
 
 
-__all__ = ["build_lut", "score_candidates", "pq_score",
-           "pq_score_ref", "build_lut_ref"]
+def score_candidates_batched(queries: jax.Array, centroids: jax.Array,
+                             codes: jax.Array, block_n: int = 1024,
+                             backend: Optional[str] = None) -> jax.Array:
+    """Batched ADC: queries (B, d) + codes (N, D) -> scores (B, N)."""
+    luts = build_lut_batch(queries, centroids).astype(jnp.float32)
+    return dispatch.dispatch("pq_score_batched", luts, codes,
+                             block_n=block_n, backend=backend)
+
+
+def topk_candidates(queries: jax.Array, centroids: jax.Array,
+                    codes: jax.Array, k: int, block_n: int = 1024,
+                    backend: Optional[str] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Fused batched ADC top-k: queries (B, d) + codes (N, D) ->
+    (scores (B, k), ids (B, k)); ordering (score desc, id asc)."""
+    luts = build_lut_batch(queries, centroids).astype(jnp.float32)
+    return dispatch.dispatch("pq_topk", luts, codes, k, block_n=block_n,
+                             backend=backend)
+
+
+__all__ = ["INVALID_ID", "build_lut", "build_lut_batch", "pq_score",
+           "pq_score_batched", "pq_score_batched_ref", "pq_score_ref",
+           "pq_topk", "pq_topk_ref", "build_lut_ref", "build_lut_batch_ref",
+           "score_candidates", "score_candidates_batched",
+           "topk_candidates"]

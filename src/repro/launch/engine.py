@@ -1,22 +1,30 @@
-"""Batched embedding serving engine (paper Fig. 1 serving path).
+"""Batched serving engines (paper Fig. 1 serving path + DESIGN.md §8).
 
-Production serving traffic is many small lookup requests, not one big
-batch.  The engine owns the exported artifact (codes + centroids) as
-*device-resident* buffers — placed once with ``jax.device_put`` and
-reused across every request, never re-uploaded — and micro-batches
-queued requests into a single fused-decode call:
+Production serving traffic is many small requests, not one big batch.
+The engines here own device-resident artifacts — placed once with
+``jax.device_put`` and reused across every request, never re-uploaded —
+and micro-batch queued requests into a single fused call:
 
-  * ``submit(ids)`` enqueues a request and returns a handle;
-  * ``flush()`` concatenates the queue, pads the flat id batch up to
-    the decode kernel's ``block_b`` granularity (so every launch hits
-    the kernel's full-block fast path and JIT retraces are bounded by
-    queue-size/block_b, not by request shape), runs ONE serve call,
-    and splits results back per request;
-  * ``lookup(ids)`` is submit + flush for the synchronous case.
+  * ``submit(x)`` enqueues a request and returns a handle;
+  * ``flush()`` concatenates the queue, pads the flat batch up to the
+    kernel's block granularity (so every launch hits the full-block
+    fast path and JIT retraces are bounded by queue-size/block, not by
+    request shape), runs ONE jitted call, and splits results back per
+    request;
+  * the synchronous helpers (``lookup`` / ``search``) are
+    submit + flush.
 
-Stats accumulate across flushes; ``stats()`` reports lookups/sec — the
-number `benchmarks/kernel_bench.py` and `launch/serve.py --engine`
-print for fused-vs-unfused comparisons.
+Two engines share that plumbing (``_MicroBatchEngine``):
+
+  ``ServingEngine``    id lookups -> embedding rows over one exported
+                       quantized table (fused decode kernel);
+  ``RetrievalEngine``  query vectors -> (top-k scores, candidate ids)
+                       over a built retrieval index (fused batched ADC
+                       top-k, flat or IVF — retrieval/).
+
+Stats accumulate across flushes; ``stats()`` reports requests/second —
+the numbers `benchmarks/kernel_bench.py` and `launch/serve.py` print
+for fused-vs-unfused comparisons.
 """
 from __future__ import annotations
 
@@ -34,13 +42,15 @@ from repro.core.api import Embedding
 @dataclasses.dataclass
 class EngineStats:
     requests: int = 0
-    lookups: int = 0           # ids actually requested (pre-padding)
-    padded_lookups: int = 0    # ids decoded incl. block_b padding
+    lookups: int = 0           # items actually requested (pre-padding)
+    padded_lookups: int = 0    # items processed incl. block padding
     flushes: int = 0
     seconds: float = 0.0
 
     @property
     def lookups_per_s(self) -> float:
+        # zero guard: empty or instantaneous streams (all-cached
+        # flushes, zero requests) report 0.0 instead of dividing by 0
         return self.lookups / self.seconds if self.seconds > 0 else 0.0
 
     def as_dict(self) -> Dict:
@@ -48,7 +58,100 @@ class EngineStats:
                 "lookups_per_s": self.lookups_per_s}
 
 
-class ServingEngine:
+class _MicroBatchEngine:
+    """Queue/pad/flush/split plumbing shared by the serving engines.
+
+    Subclasses define ``_coerce`` (request -> array with a leading
+    batch dim) and ``_run`` (padded flat batch -> pytree of arrays
+    with the same leading dim); everything else — queueing, padding to
+    ``pad_multiple``, stats, splitting results back per request — is
+    identical between id-lookup and retrieval traffic.
+    """
+
+    def __init__(self, pad_multiple: int, max_queue: int,
+                 mesh=None):
+        self.pad_multiple = pad_multiple
+        self.max_queue = max_queue
+        self.mesh = mesh
+        self._queue: List[jax.Array] = []
+        self._queued = 0
+        self.stats_ = EngineStats()
+
+    # --------------------------------------------------------- hooks
+    def _coerce(self, request) -> jax.Array:
+        raise NotImplementedError
+
+    def _run(self, flat: jax.Array):
+        """One fused call over the padded flat batch; returns an array
+        or pytree of arrays with flat.shape[0] leading rows."""
+        raise NotImplementedError
+
+    # --------------------------------------------------------- queue
+    def submit(self, request) -> int:
+        """Enqueue one request; returns its handle (index into the
+        list the next flush() returns)."""
+        arr = self._coerce(request)
+        self._queue.append(arr)
+        self._queued += arr.shape[0]
+        return len(self._queue) - 1
+
+    @property
+    def pending(self) -> int:
+        return self._queued
+
+    def should_flush(self) -> bool:
+        return self._queued >= self.max_queue
+
+    # --------------------------------------------------------- serve
+    def flush(self) -> List:
+        """Process every queued request in one padded micro-batch."""
+        if not self._queue:
+            return []
+        reqs, self._queue = self._queue, []
+        n_req, n_rows = len(reqs), self._queued
+        self._queued = 0
+        flat = jnp.concatenate(reqs) if n_req > 1 else reqs[0]
+        pad = (-flat.shape[0]) % self.pad_multiple
+        if pad:
+            widths = [(0, pad)] + [(0, 0)] * (flat.ndim - 1)
+            flat = jnp.pad(flat, widths)   # zero rows are always valid
+        t0 = time.perf_counter()
+        if self.mesh is not None:
+            # ambient mesh at trace time -> shard_map fused path
+            with self.mesh:
+                out = self._run(flat)
+        else:
+            out = self._run(flat)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        self.stats_.requests += n_req
+        self.stats_.lookups += n_rows
+        self.stats_.padded_lookups += int(flat.shape[0])
+        self.stats_.flushes += 1
+        self.stats_.seconds += dt
+        sizes = [r.shape[0] for r in reqs]
+        splits = np.cumsum(sizes)[:-1].tolist()
+        leaves, treedef = jax.tree.flatten(out)
+        pieces = [jnp.split(leaf[:n_rows], splits) if splits
+                  else [leaf[:n_rows]] for leaf in leaves]
+        return [treedef.unflatten([p[i] for p in pieces])
+                for i in range(n_req)]
+
+    def serve_stream(self, requests: Sequence[np.ndarray]) -> EngineStats:
+        """Drive a request stream through the micro-batcher; flush
+        whenever the queue reaches max_queue, once more at the end."""
+        for r in requests:
+            self.submit(r)
+            if self.should_flush():
+                self.flush()
+        self.flush()
+        return self.stats_
+
+    def stats(self) -> EngineStats:
+        return self.stats_
+
+
+class ServingEngine(_MicroBatchEngine):
     """Micro-batching lookup engine over one exported embedding table.
 
     Single-device by default.  Pass ``mesh`` to serve a *sharded*
@@ -73,7 +176,6 @@ class ServingEngine:
             # otherwise a custom block_b would pad flushes to sizes the
             # decode kernel re-pads anyway, multiplying retraces
             overrides["decode_block_b"] = block_b
-        self.mesh = mesh
         self.model_axis = model_axis
         data_shards = 1
         if mesh is not None:
@@ -101,10 +203,10 @@ class ServingEngine:
             emb = Embedding(dataclasses.replace(emb.cfg, **overrides))
         self.emb = emb
         self.block_b = emb.cfg.decode_block_b
-        # flushes pad to this granularity: block_b per data shard
-        self.pad_multiple = self.block_b * data_shards
         self.data_shards = data_shards
-        self.max_queue = max_queue
+        # flushes pad to this granularity: block_b per data shard
+        super().__init__(pad_multiple=self.block_b * data_shards,
+                         max_queue=max_queue, mesh=mesh)
         # device-resident once; requests only ship (B,) int32 ids
         if mesh is not None:
             from repro.sharding.rules import shard_quantized_artifact
@@ -113,55 +215,12 @@ class ServingEngine:
         else:
             self.artifact = jax.device_put(artifact)
         self._serve = jax.jit(lambda art, ids: emb.serve(art, ids))
-        self._queue: List[jax.Array] = []
-        self._queued = 0
-        self.stats_ = EngineStats()
 
-    # ------------------------------------------------------------ queue
-    def submit(self, ids) -> int:
-        """Enqueue one request of flat ids; returns its handle (index
-        into the list the next flush() returns)."""
-        ids = jnp.asarray(ids, jnp.int32).reshape(-1)
-        self._queue.append(ids)
-        self._queued += ids.shape[0]
-        return len(self._queue) - 1
+    def _coerce(self, ids) -> jax.Array:
+        return jnp.asarray(ids, jnp.int32).reshape(-1)
 
-    @property
-    def pending(self) -> int:
-        return self._queued
-
-    def should_flush(self) -> bool:
-        return self._queued >= self.max_queue
-
-    # ------------------------------------------------------------ serve
-    def flush(self) -> List[jax.Array]:
-        """Decode every queued request in one padded micro-batch."""
-        if not self._queue:
-            return []
-        reqs, self._queue = self._queue, []
-        n_req, n_ids = len(reqs), self._queued
-        self._queued = 0
-        flat = jnp.concatenate(reqs) if n_req > 1 else reqs[0]
-        pad = (-flat.shape[0]) % self.pad_multiple
-        if pad:
-            flat = jnp.pad(flat, (0, pad))  # id 0 is always valid
-        t0 = time.perf_counter()
-        if self.mesh is not None:
-            # ambient mesh at trace time -> shard_map quantized gather
-            with self.mesh:
-                out = self._serve(self.artifact, flat)
-        else:
-            out = self._serve(self.artifact, flat)
-        jax.block_until_ready(out)
-        dt = time.perf_counter() - t0
-        self.stats_.requests += n_req
-        self.stats_.lookups += n_ids
-        self.stats_.padded_lookups += int(flat.shape[0])
-        self.stats_.flushes += 1
-        self.stats_.seconds += dt
-        splits = np.cumsum([r.shape[0] for r in reqs])[:-1].tolist()
-        return [s for s in jnp.split(out[:n_ids], splits)] if splits \
-            else [out[:n_ids]]
+    def _run(self, flat: jax.Array) -> jax.Array:
+        return self._serve(self.artifact, flat)
 
     def lookup(self, ids) -> jax.Array:
         """Synchronous single-request path (submit + flush).  Flushes
@@ -169,18 +228,80 @@ class ServingEngine:
         handle = self.submit(ids)
         return self.flush()[handle]
 
-    def serve_stream(self, requests: Sequence[np.ndarray]) -> EngineStats:
-        """Drive a request stream through the micro-batcher; flush
-        whenever the queue reaches max_queue, once more at the end."""
-        for r in requests:
-            self.submit(r)
-            if self.should_flush():
-                self.flush()
-        self.flush()
-        return self.stats_
 
-    def stats(self) -> EngineStats:
-        return self.stats_
+class RetrievalEngine(_MicroBatchEngine):
+    """Micro-batching top-k retrieval over one built index.
+
+    Requests are query-vector batches (B_i, d); every flush pads the
+    concatenated queries to ``block_q x data_shards`` and runs ONE
+    fused batched search (``Index.search``) returning per request
+    ``(scores (B_i, k), candidate ids (B_i, k))`` — candidate ids +
+    scores instead of embedding rows, same plumbing.
+
+    Pass ``mesh`` to search a *distributed* corpus (DESIGN.md §8):
+    the O(corpus) artifact rows are placed row-sharded over
+    ``model_axis`` (``sharding/rules.shard_retrieval_artifact``) and
+    every flush fans one shard_map per-shard-top-k + merge across the
+    whole mesh — wire bytes O(B·k), corpus-independent.
+    """
+
+    def __init__(self, index, artifact: dict, k: int,
+                 block_q: int = 64, max_queue: int = 4096,
+                 backend: Optional[str] = None,
+                 mesh=None, model_axis: str = "model"):
+        from repro.retrieval import get_index, sharded_topk
+        if backend is not None:
+            index = get_index(dataclasses.replace(
+                index.cfg, kernel_backend=backend))
+        self.index, self.k = index, k
+        self.block_q = block_q
+        self.model_axis = model_axis
+        data_shards = 1
+        if mesh is not None:
+            if not index.supports_sharded:
+                raise ValueError(
+                    f"index kind {index.cfg.kind!r} cannot be "
+                    f"distributed")
+            if model_axis not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh {dict(mesh.shape)} has no {model_axis!r} axis "
+                    f"to shard corpus rows over")
+            model_n = dict(mesh.shape)[model_axis]
+            bad = {name: artifact[name].shape[0]
+                   for name in index.rows_leaves
+                   if artifact[name].shape[0] % model_n}
+            if model_n > 1 and bad:
+                raise ValueError(
+                    f"corpus rows {bad} do not divide over "
+                    f"{model_axis}={model_n}")
+            data_shards = int(np.prod(
+                [n for a, n in mesh.shape.items() if a != model_axis])) or 1
+        self.data_shards = data_shards
+        super().__init__(pad_multiple=block_q * data_shards,
+                         max_queue=max_queue, mesh=mesh)
+        if mesh is not None:
+            from repro.sharding.rules import shard_retrieval_artifact
+            self.artifact = shard_retrieval_artifact(
+                artifact, index, mesh, model_axis=model_axis)
+            self._search = jax.jit(lambda art, q: sharded_topk(
+                index, art, q, k, model_axis=model_axis, mesh=mesh))
+        else:
+            self.artifact = jax.device_put(artifact)
+            self._search = jax.jit(lambda art, q: index.search(art, q, k))
+
+    def _coerce(self, queries) -> jax.Array:
+        q = jnp.asarray(queries, jnp.float32)
+        return q[None] if q.ndim == 1 else q
+
+    def _run(self, flat: jax.Array):
+        return self._search(self.artifact, flat)
+
+    def search(self, queries):
+        """Synchronous single-request path (submit + flush): queries
+        (B, d) or (d,) -> (scores, ids).  Flushes whatever else is
+        queued too and returns THIS request's results."""
+        handle = self.submit(queries)
+        return self.flush()[handle]
 
 
 def drive_random_stream(engine: ServingEngine, vocab_size: int,
@@ -201,6 +322,21 @@ def drive_random_stream(engine: ServingEngine, vocab_size: int,
     return engine.serve_stream(reqs)
 
 
+def drive_random_query_stream(engine: RetrievalEngine, dim: int,
+                              n_requests: int, req_batch: int,
+                              seed: int = 0) -> EngineStats:
+    """Retrieval twin of :func:`drive_random_stream`: random-size
+    query-vector requests, warm pass first, zero compile time in the
+    returned stats."""
+    rng = np.random.default_rng(seed)
+    reqs = [rng.normal(size=(int(rng.integers(1, req_batch + 1)), dim)
+                       ).astype(np.float32)
+            for _ in range(n_requests)]
+    engine.serve_stream(reqs)          # warm pass: pays all jit traces
+    engine.stats_ = EngineStats()
+    return engine.serve_stream(reqs)
+
+
 def embedding_config_of_arch(family: str, cfg):
     """Pick the arch's main large-vocab EmbeddingConfig (engine demo)."""
     from repro.models.recsys.fields import field_embedding_config
@@ -213,4 +349,6 @@ def embedding_config_of_arch(family: str, cfg):
     return field_embedding_config(cfg, max(cfg.field_vocab_sizes))
 
 
-__all__ = ["EngineStats", "ServingEngine", "embedding_config_of_arch"]
+__all__ = ["EngineStats", "RetrievalEngine", "ServingEngine",
+           "drive_random_query_stream", "drive_random_stream",
+           "embedding_config_of_arch"]

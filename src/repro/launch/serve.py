@@ -5,7 +5,7 @@ discarded).
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --smoke \
         --prompt-len 32 --decode-steps 16 --batch 4
     PYTHONPATH=src python -m repro.launch.serve --arch two-tower-retrieval \
-        --smoke --candidates 10000
+        --smoke --candidates 10000 --retrieval ivf_pq --nprobe 8 --topk 100
 
 ``--engine`` drives a request stream through the micro-batching
 :class:`repro.launch.engine.ServingEngine` instead (device-resident
@@ -89,38 +89,62 @@ def serve_lm(cfg, batch: int, prompt_len: int, decode_steps: int):
           f"{np.asarray(jnp.stack(out, 1))[0][:8]}")
 
 
-def serve_retrieval(cfg, n_candidates: int):
+def serve_retrieval(cfg, n_candidates: int, index_kind: str = "flat_pq",
+                    nprobe: int = 8, topk: int = 100,
+                    n_requests: int = 50, req_batch: int = 16,
+                    backend=None):
+    """Top-k candidate retrieval through the index registry + the
+    micro-batching RetrievalEngine (DESIGN.md §8)."""
+    from repro.launch.engine import RetrievalEngine
     from repro.models.recsys.two_tower import TwoTower
+    from repro.retrieval import IndexConfig
     model = TwoTower(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    item_ids = jnp.arange(min(n_candidates, cfg.n_items), dtype=jnp.int32)
+    n = min(n_candidates, cfg.n_items)
+    item_ids = jnp.arange(n, dtype=jnp.int32)
+    nlist = max(nprobe, min(64, max(1, n // 64)))
+    icfg = IndexConfig(kind=index_kind, num_subspaces=8, num_centroids=64,
+                       nlist=nlist, nprobe=min(nprobe, nlist),
+                       kernel_backend=backend)
 
-    # offline: PQ-code the candidate tower outputs
+    # offline: build the index over the PQ-coded candidate tower outputs
     t0 = time.time()
-    corpus = model.build_adc_corpus(jax.random.PRNGKey(1), params, item_ids,
-                                    num_subspaces=8, num_centroids=64)
-    print(f"corpus coded in {time.time()-t0:.1f}s: "
-          f"codes {corpus['codes'].shape} "
-          f"({corpus['codes'].size/1e6:.1f} MB as uint8 vs "
-          f"{item_ids.size*cfg.tower_mlp[-1]*4/1e6:.1f} MB dense)")
+    index, artifact = model.build_index(jax.random.PRNGKey(1), params,
+                                        item_ids, icfg)
+    code_mb = sum(np.asarray(artifact[name]).nbytes
+                  for name in index.rows_leaves) / 1e6
+    print(f"{index_kind} index built in {time.time()-t0:.1f}s: "
+          f"{code_mb:.1f} MB corpus rows vs "
+          f"{n*cfg.tower_mlp[-1]*4/1e6:.1f} MB dense"
+          + (f" (nlist={icfg.nlist}, nprobe={icfg.nprobe})"
+             if index_kind == "ivf_pq" else ""))
 
-    user = jnp.zeros((1,), jnp.int32)
-    t0 = time.time()
-    scores_adc = model.retrieval_scores_adc(params, corpus, user)
-    jax.block_until_ready(scores_adc)
-    t_adc = time.time() - t0
+    # online: stream user batches through the engine; top-k ids + scores
+    engine = RetrievalEngine(index, artifact, k=topk, block_q=16)
+    rng = np.random.default_rng(0)
+    users = [rng.integers(0, cfg.n_users,
+                          int(rng.integers(1, req_batch + 1)))
+             for _ in range(n_requests)]
+    user_vec = jax.jit(lambda p, u: model.user_vec(p, u)[0])
+    reqs = [np.asarray(user_vec(params, jnp.asarray(u, jnp.int32)))
+            for u in users]
+    engine.serve_stream(reqs)                  # warm pass: jit traces
+    engine.stats_ = type(engine.stats_)()
+    st = engine.serve_stream(reqs)
+    print(f"engine: {st.requests} requests / {st.lookups} queries in "
+          f"{st.flushes} flushes, {st.seconds:.3f}s -> "
+          f"{st.lookups_per_s:,.0f} queries/s x top-{topk}")
 
+    # recall vs the exact dense scan, one probe batch
+    scores, ids = model.retrieval_topk(params, index, artifact,
+                                       jnp.arange(8, dtype=jnp.int32),
+                                       topk)
     cand_vecs = model.encode_items(params, item_ids)
-    t0 = time.time()
-    scores_exact = model.retrieval_scores(params, user, cand_vecs)
-    jax.block_until_ready(scores_exact)
-    t_dense = time.time() - t0
-
-    k = 100
-    top_adc = set(np.argsort(-np.asarray(scores_adc))[:k].tolist())
-    top_ex = set(np.argsort(-np.asarray(scores_exact))[:k].tolist())
-    print(f"ADC {t_adc:.3f}s vs dense {t_dense:.3f}s; "
-          f"recall@{k} vs exact: {len(top_adc & top_ex)/k:.2f}")
+    u8, _ = model.user_vec(params, jnp.arange(8, dtype=jnp.int32))
+    ex = np.argsort(-np.asarray(u8 @ cand_vecs.T), axis=1)[:, :topk]
+    rec = np.mean([len(set(np.asarray(ids)[b].tolist())
+                       & set(ex[b].tolist())) / topk for b in range(8)])
+    print(f"recall@{topk} vs exact dense scan: {rec:.3f}")
 
 
 def serve_ctr(cfg, batch: int):
@@ -213,6 +237,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=16)
     ap.add_argument("--candidates", type=int, default=10000)
+    ap.add_argument("--retrieval", default="flat_pq",
+                    help="retrieval index kind for two-tower serving "
+                         "(registered kinds: flat_pq, ivf_pq, ...)")
+    ap.add_argument("--nprobe", type=int, default=8,
+                    help="ivf_pq: coarse lists probed per query")
+    ap.add_argument("--topk", type=int, default=100,
+                    help="candidates returned per retrieval query")
     ap.add_argument("--engine", action="store_true",
                     help="drive the micro-batching ServingEngine")
     ap.add_argument("--requests", type=int, default=200)
@@ -239,7 +270,9 @@ def main():
     elif family == "lm":
         serve_lm(cfg, args.batch, args.prompt_len, args.decode_steps)
     elif cfg.model == "two_tower":
-        serve_retrieval(cfg, args.candidates)
+        serve_retrieval(cfg, args.candidates, index_kind=args.retrieval,
+                        nprobe=args.nprobe, topk=args.topk,
+                        backend=args.kernel_backend)
     elif family == "recsys":
         serve_ctr(cfg, args.batch)
     else:

@@ -2,8 +2,10 @@
 dot product; trained with in-batch sampled softmax + logQ correction.
 
 This is where MGQE's serving story peaks: the item corpus (10M rows)
-is stored as codes, and ``retrieval_scores_adc`` scores 1M candidates
-without ever materializing their embeddings (ADC — DESIGN.md §3).
+is stored as codes, and ``retrieval_topk`` scores a BATCH of users
+against 1M candidates without ever materializing their embeddings
+(ADC through the retrieval index registry — flat or IVF-probed,
+DESIGN.md §3/§8).
 """
 from __future__ import annotations
 
@@ -75,25 +77,52 @@ class TwoTower:
         v, _ = self.item_vec(params, item_ids)
         return v
 
+    def build_index(self, key, params: Dict, item_ids: jax.Array,
+                    index_cfg=None) -> Tuple:
+        """Offline: run the item tower over the corpus and build a
+        retrieval index over the *tower outputs* through the index
+        registry (DESIGN.md §8) — ``flat_pq`` (exact ADC) or
+        ``ivf_pq`` (nprobe-probed).  Returns ``(index, artifact)``."""
+        from repro.retrieval import IndexConfig, get_index
+        index = get_index(index_cfg or IndexConfig())
+        vecs = self.encode_items(params, item_ids)
+        return index, index.build(key, vecs)
+
+    def retrieval_topk(self, params: Dict, index, artifact: Dict,
+                       user_ids: jax.Array, k: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+        """Batched top-k retrieval: user_ids (B,) ->
+        (scores (B, k), item ids (B, k)) through the index's fused
+        batched search — one user-tower pass + one pass over the code
+        stream for the whole batch.  Under an ambient mesh with a
+        sharded artifact the per-shard top-k merge kicks in
+        (retrieval/sharded.py) — call sites never branch."""
+        from repro.retrieval import sharded_topk
+        u, _ = self.user_vec(params, user_ids)
+        return sharded_topk(index, artifact, u, k)
+
+    # -------- single-query ADC compat layer (pre-registry callers) ----
     def build_adc_corpus(self, key, params: Dict, item_ids: jax.Array,
                          num_subspaces: int = 8,
                          num_centroids: int = 256) -> Dict:
-        """Offline: run the item tower over the corpus and PQ-code the
-        *tower outputs* (beyond-paper ADC, DESIGN.md §3).  Exact for
-        dot-product retrieval up to quantization error."""
-        from repro.core import adc
-        vecs = self.encode_items(params, item_ids)
-        return adc.build_corpus_artifact(key, vecs, num_subspaces,
-                                         num_centroids)
+        """Offline: PQ-code the corpus tower outputs (exact flat ADC,
+        DESIGN.md §3).  Kept as a thin wrapper over ``build_index``
+        with a ``flat_pq`` config."""
+        from repro.retrieval import IndexConfig
+        _, artifact = self.build_index(
+            key, params, item_ids,
+            IndexConfig(kind="flat_pq", num_subspaces=num_subspaces,
+                        num_centroids=num_centroids))
+        return artifact
 
     def retrieval_scores_adc(self, params: Dict, corpus_artifact: Dict,
                              user_id: jax.Array) -> jax.Array:
         """Score one user against the PQ-coded corpus via the pq_score
         kernel: reads N*D bytes of codes instead of N*dim*4 bytes of
         vectors.  user_id (1,) -> scores (N,)."""
-        from repro.core import adc
+        from repro.retrieval.flat_pq import adc_scores
         u, _ = self.user_vec(params, user_id)
-        return adc.adc_scores(corpus_artifact, u[0])
+        return adc_scores(corpus_artifact, u[0])
 
 
 INV_TEMPERATURE = 20.0  # softmax temperature 0.05

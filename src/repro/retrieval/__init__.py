@@ -1,0 +1,26 @@
+"""Quantized retrieval subsystem (DESIGN.md §8).
+
+Batched top-k candidate retrieval over PQ-coded corpora: an
+:class:`~repro.retrieval.base.Index` protocol with a plugin registry
+(mirroring ``core/schemes/``) and two kinds —
+
+  ``flat_pq``  exact batched ADC scan (fused ``pq_topk`` kernel)
+  ``ivf_pq``   coarse k-means partition + per-list PQ residual codes,
+               ``nprobe``-controlled probing
+
+plus deterministic top-k merging (``topk.py``) and row-sharded
+distributed search (``sharded.py``).  Serve through
+:class:`repro.launch.engine.RetrievalEngine`.
+"""
+from repro.retrieval import flat_pq, ivf_pq  # noqa: F401  (register kinds)
+from repro.retrieval.base import (Index, IndexConfig, get_index,
+                                  index_class, register_index,
+                                  registered_index_kinds)
+from repro.retrieval.flat_pq import FlatPQ
+from repro.retrieval.ivf_pq import IVFPQ
+from repro.retrieval.sharded import sharded_topk
+from repro.retrieval.topk import INVALID_ID, merge_topk, topk_by_position
+
+__all__ = ["FlatPQ", "IVFPQ", "INVALID_ID", "Index", "IndexConfig",
+           "get_index", "index_class", "merge_topk", "register_index",
+           "registered_index_kinds", "sharded_topk", "topk_by_position"]

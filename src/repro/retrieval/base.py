@@ -1,0 +1,190 @@
+"""Retrieval index protocol + registry (DESIGN.md §8).
+
+An *index* is one way of organizing a PQ-coded corpus for batched
+top-k retrieval: the exact flat scan (``flat_pq.py``), an IVF-style
+coarse partition (``ivf_pq.py``), or whatever the ANN literature
+suggests next.  Each index is ONE class registered under its
+``IndexConfig.kind`` string:
+
+    @register_index("ivf_pq")
+    class IVFPQ(Index):
+        ...
+
+Every integration layer resolves indexes through this registry instead
+of branching on kind strings — :class:`repro.models.recsys.two_tower.
+TwoTower` builds/queries through it, the
+:class:`repro.launch.engine.RetrievalEngine` serves through it, the
+sharded top-k (``retrieval/sharded.py``) and its placement rules
+(``sharding/rules.py``) distribute through it, and the README support
+matrix (``tools/gen_tables.py``) enumerates it — adding an index kind
+is a one-file change, exactly like the scheme registry it mirrors
+(``core/schemes/``, DESIGN.md §7).
+
+The lifecycle is two-phase:
+
+  * ``build(key, vectors)`` — offline: corpus vectors -> artifact dict
+    (codes + codebooks + whatever partition metadata the kind needs);
+  * ``search(artifact, queries, k)`` — online: a BATCH of queries
+    (B, d) -> ``(scores (B, k), ids (B, k))`` in one pass, through the
+    dispatched ``pq_score`` kernel family.
+
+Top-k ordering contract (all kinds, all backends, sharded or not):
+entries sorted by (score desc, id asc); slots with fewer than ``k``
+valid candidates carry ``score = -inf, id = INVALID_ID``
+(``retrieval/topk.py`` owns the merge that enforces it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Type
+
+import jax
+
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Declarative description of one retrieval index.
+
+    ``num_subspaces``/``num_centroids``/``iters`` parameterize the PQ
+    codec (shared by every kind); ``nlist``/``nprobe``/``coarse_iters``
+    only matter to IVF kinds.  ``block_n`` is the candidate-block size
+    of the fused scoring kernels; ``kernel_backend`` pins the dispatch
+    backend (None/auto = resolve per DESIGN.md §5).
+    """
+
+    kind: str = "flat_pq"
+    num_subspaces: int = 8
+    num_centroids: int = 256
+    iters: int = 10
+    nlist: int = 64
+    nprobe: int = 8
+    coarse_iters: int = 10
+    # PQ-code residuals against the coarse centroid instead of the raw
+    # vectors.  Off by default: for dot-product (MIPS) retrieval the
+    # residual trick multiplies the per-subspace mode count by nlist
+    # (each cell shifts the subspace marginal differently), which COSTS
+    # recall at fixed K unless the corpus is L2-normalized — the same
+    # reason FAISS inner-product IVFPQ runs by_residual=False.
+    ivf_residual: bool = False
+    block_n: int = 1024
+    kernel_backend: Optional[str] = None
+
+    def __post_init__(self):
+        cls = index_class(self.kind)   # raises on unknown kinds
+        cls.validate(self)
+
+
+class Index:
+    """Protocol every retrieval index implements.
+
+    Required overrides: ``build`` / ``search`` (plus ``validate`` /
+    ``probe_config`` classmethods where the defaults don't fit).
+    ``rows_leaves`` names the artifact keys whose leading dim is
+    O(corpus) — those are row-sharded over the model mesh axis when
+    the index is distributed; everything else is replicated.
+    ``local_topk`` is the per-shard hook the sharded driver
+    (``retrieval/sharded.py``) fans out, mirroring
+    ``QuantizedScheme.decode`` on the scheme side.
+    """
+
+    kind: str = "?"                    # set by @register_index
+    # artifact dict keys sharded on dim 0 when distributed; () means
+    # the kind cannot be distributed.
+    rows_leaves: Tuple[str, ...] = ()
+
+    def __init__(self, cfg: IndexConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------- class hooks
+    @classmethod
+    def validate(cls, cfg: IndexConfig) -> None:
+        """Kind-specific config validation (IndexConfig.__post_init__
+        calls this through the registry)."""
+
+    @classmethod
+    def probe_config(cls) -> IndexConfig:
+        """A tiny IndexConfig for capability probing / conformance
+        (build -> search must run in milliseconds)."""
+        return IndexConfig(kind=cls.kind, num_subspaces=4,
+                           num_centroids=8, iters=2, nlist=4, nprobe=2,
+                           coarse_iters=2, block_n=64)
+
+    # --------------------------------------------------------- required
+    def build(self, key: jax.Array, vectors: jax.Array) -> Dict:
+        """Offline: corpus vectors (N, d) -> serving artifact dict."""
+        raise NotImplementedError
+
+    def search(self, artifact: Dict, queries: jax.Array,
+               k: int) -> Tuple[jax.Array, jax.Array]:
+        """Batched top-k: queries (B, d) -> (scores (B, k), ids (B, k))."""
+        raise NotImplementedError
+
+    # ---------------------------------------------------------- derived
+    @property
+    def supports_sharded(self) -> bool:
+        return bool(self.rows_leaves)
+
+    def artifact_shard_specs(self, artifact: Dict,
+                             model_axis: str = "model") -> Dict:
+        """PartitionSpec pytree: ``rows_leaves`` row-sharded over
+        ``model_axis``, everything else replicated (DESIGN.md §8)."""
+        if not self.supports_sharded:
+            raise ValueError(
+                f"index kind {self.kind!r} cannot be distributed")
+        return {
+            name: P(model_axis, *((None,) * (jax.numpy.ndim(leaf) - 1)))
+            if name in self.rows_leaves else P()
+            for name, leaf in artifact.items()}
+
+    def local_topk(self, artifact: Dict, queries: jax.Array, k: int, *,
+                   shard: jax.Array, num_shards: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Per-shard top-k over the LOCAL artifact rows ->
+        ``(scores, tiebreak, ids)``, each (B, k).  Ids must be GLOBAL
+        corpus ids; ``tiebreak`` is the kind's shard-invariant
+        equal-score ordering key (corpus id for flat scans, global
+        candidate position for IVF — retrieval/topk.py) so the
+        driver's merge reproduces the single-device order bit-for-bit.
+        Runs inside the sharded driver's shard_map body — ``shard`` is
+        this device's index along the model axis."""
+        raise NotImplementedError
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Index]] = {}
+
+
+def register_index(kind: str):
+    """Class decorator: register an Index under its kind string."""
+    def deco(cls: Type[Index]) -> Type[Index]:
+        prev = _REGISTRY.get(kind)
+        if prev is not None and prev is not cls:
+            raise ValueError(
+                f"index kind {kind!r} already registered to {prev}")
+        cls.kind = kind
+        _REGISTRY[kind] = cls
+        return cls
+    return deco
+
+
+def registered_index_kinds() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def index_class(kind: str) -> Type[Index]:
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        raise KeyError(
+            f"unknown index kind {kind!r}; registered indexes: "
+            f"{', '.join(registered_index_kinds()) or '(none)'}") from None
+
+
+def get_index(cfg: IndexConfig) -> Index:
+    """Resolve a config to its index instance."""
+    return index_class(cfg.kind)(cfg)

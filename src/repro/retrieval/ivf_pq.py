@@ -1,0 +1,168 @@
+"""IVF-PQ — coarse k-means partition + per-list PQ codes.
+
+The classic large-catalogue trade (Jegou et al.; RecJPQ and the
+embedding-compression survey both frame it as the endgame for
+quantized recsys corpora): cluster the corpus into ``nlist`` coarse
+cells and at query time score only the ``nprobe`` most promising
+cells, reading ~``nprobe/nlist`` of the code bytes the flat scan
+reads.  Probed candidates score by the usual LUT summation; with
+``ivf_residual=True`` the codes quantize residuals against the cell
+centroid and the coarse dot product is added back —
+
+    score(i) = <q, c_coarse[list(i)]>  +  sum_d lut[d, codes[i, d]]
+
+exact for the dot product up to PQ error either way.  One LUT build
+per query (the codebook is global, so the LUT is shared across probed
+lists); ``nprobe`` controls the recall/bytes dial.  Residual coding
+defaults OFF for this dot-product workload — see ``IndexConfig``.
+
+Storage layout: lists are padded to the longest list so probing is a
+static-shape gather — ``list_codes (nlist, L, D)`` uint8 and
+``list_ids (nlist, L)`` int32 carrying GLOBAL corpus ids
+(``INVALID_ID`` in the padding).  Building runs on the host (numpy
+bucketing) — it is the offline step; searching is pure JAX.
+
+Distribution: lists are row-sharded over the model mesh axis
+(``rows_leaves``); the tiny coarse table is replicated, so every shard
+agrees on which lists each query probes and scores only the probed
+lists it owns (``local_topk``) — the sharded driver merges the
+per-shard (B, k) partials (retrieval/sharded.py, DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.pq_score import (INVALID_ID, build_lut_batch,
+                                    pq_score_batched_ref)
+from repro.retrieval import flat_pq
+from repro.retrieval.base import Index, IndexConfig, register_index
+from repro.retrieval.topk import topk_by_position
+
+
+def coarse_kmeans(key: jax.Array, vectors: jax.Array, nlist: int,
+                  iters: int = 10) -> jax.Array:
+    """Euclidean Lloyd's over full-width vectors -> (nlist, d) centers.
+
+    Reuses the per-subspace k-means with ONE subspace of width d."""
+    return flat_pq.fit_pq(key, vectors, num_subspaces=1,
+                          num_centroids=nlist, iters=iters)[0]
+
+
+def coarse_assign(vectors: jax.Array, coarse: jax.Array) -> jax.Array:
+    """Nearest coarse centroid per vector (euclidean), (N,) int32."""
+    dots = vectors @ coarse.T                          # (N, nlist)
+    c_sq = jnp.sum(jnp.square(coarse), axis=-1)        # (nlist,)
+    return jnp.argmin(c_sq[None, :] - 2 * dots, axis=-1).astype(jnp.int32)
+
+
+@register_index("ivf_pq")
+class IVFPQ(Index):
+    """nprobe-controlled probing over a coarse partition of PQ codes."""
+
+    rows_leaves = ("list_codes", "list_ids")
+
+    @classmethod
+    def validate(cls, cfg: IndexConfig) -> None:
+        if cfg.nlist < 1:
+            raise ValueError(f"ivf_pq needs nlist >= 1, got {cfg.nlist}")
+        if not 1 <= cfg.nprobe <= cfg.nlist:
+            raise ValueError(
+                f"ivf_pq needs 1 <= nprobe <= nlist, got "
+                f"nprobe={cfg.nprobe} nlist={cfg.nlist}")
+
+    # ------------------------------------------------------------ build
+    def build(self, key: jax.Array, vectors: jax.Array) -> Dict:
+        cfg = self.cfg
+        n, d = vectors.shape
+        if n < cfg.nlist:
+            raise ValueError(
+                f"corpus of {n} vectors cannot fill nlist={cfg.nlist} "
+                f"coarse cells")
+        k_coarse, k_pq = jax.random.split(key)
+        coarse = coarse_kmeans(k_coarse, vectors, cfg.nlist,
+                               iters=cfg.coarse_iters)
+        assign = coarse_assign(vectors, coarse)
+        to_code = vectors - jnp.take(coarse, assign, axis=0) \
+            if cfg.ivf_residual else vectors
+        cent = flat_pq.fit_pq(k_pq, to_code, cfg.num_subspaces,
+                              cfg.num_centroids, cfg.iters)
+        codes = flat_pq.encode_corpus(to_code, cent,
+                                      backend=cfg.kernel_backend)
+        code_dtype = np.uint8 if cfg.num_centroids <= 256 else np.int32
+
+        # host-side bucketing into padded per-list tables (offline step)
+        assign_np = np.asarray(assign)
+        codes_np = np.asarray(codes).astype(code_dtype)
+        counts = np.bincount(assign_np, minlength=cfg.nlist)
+        cap = max(int(counts.max()), 1)
+        order = np.argsort(assign_np, kind="stable")   # ids ascend per list
+        starts = np.zeros(cfg.nlist, np.int64)
+        starts[1:] = np.cumsum(counts)[:-1]
+        slot = np.arange(n) - starts[assign_np[order]]
+        list_codes = np.zeros((cfg.nlist, cap, cfg.num_subspaces),
+                              code_dtype)
+        list_ids = np.full((cfg.nlist, cap), INVALID_ID, np.int32)
+        list_codes[assign_np[order], slot] = codes_np[order]
+        list_ids[assign_np[order], slot] = order
+        return {"coarse": coarse,
+                "centroids": cent,
+                "list_codes": jnp.asarray(list_codes),
+                "list_ids": jnp.asarray(list_ids)}
+
+    # ----------------------------------------------------------- search
+    def _probe(self, artifact: Dict, queries: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+        """Top-nprobe coarse cells per query: (scores, list ids),
+        both (B, nprobe).  The coarse table is replicated, so every
+        shard computes the identical probe set."""
+        coarse_scores = queries @ artifact["coarse"].T      # (B, nlist)
+        return jax.lax.top_k(coarse_scores, self.cfg.nprobe)
+
+    def _score_probed(self, artifact: Dict, queries: jax.Array,
+                      probe_s: jax.Array, lists: jax.Array,
+                      hit: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Score the (B, nprobe) probed lists -> flat (B, nprobe*L)
+        candidate (scores, global ids); ``hit`` masks probes this
+        caller does not own (sharded path) to (-inf, INVALID_ID)."""
+        luts = build_lut_batch(queries, artifact["centroids"]
+                               ).astype(jnp.float32)        # (B, D, K)
+        codes = jnp.take(artifact["list_codes"], lists, axis=0)
+        ids = jnp.take(artifact["list_ids"], lists, axis=0)  # (B, P, L)
+        b, p, cap, n_sub = codes.shape
+        # per-query LUT gather over its own probed rows — a (B, P·L, D)
+        # gather, not the shared-code-stream kernel (each query reads
+        # different rows); vmapped jnp stays fused under jit
+        cand_scores = jax.vmap(pq_score_batched_ref)(
+            luts[:, None], codes.reshape(b, p * cap, n_sub)
+        ).reshape(b, p, cap)
+        if self.cfg.ivf_residual:
+            cand_scores = cand_scores + probe_s[:, :, None]  # coarse term
+        valid = (ids != INVALID_ID) & hit[:, :, None]
+        cand_scores = jnp.where(valid, cand_scores, -jnp.inf)
+        ids = jnp.where(valid, ids, INVALID_ID)
+        return cand_scores.reshape(b, p * cap), ids.reshape(b, p * cap)
+
+    def search(self, artifact: Dict, queries: jax.Array,
+               k: int) -> Tuple[jax.Array, jax.Array]:
+        probe_s, lists = self._probe(artifact, queries)
+        hit = jnp.ones(lists.shape, bool)
+        s, i = self._score_probed(artifact, queries, probe_s, lists, hit)
+        # position tiebreak: candidate layout (probe slot x list slot)
+        # is identical on every shard, so this order is shard-invariant
+        top_s, _, top_i = topk_by_position(s, i, k)
+        return top_s, top_i
+
+    def local_topk(self, artifact: Dict, queries: jax.Array, k: int, *,
+                   shard: jax.Array, num_shards: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        lists_local = artifact["list_codes"].shape[0]
+        probe_s, lists = self._probe(artifact, queries)  # GLOBAL list ids
+        local = lists - shard * lists_local
+        hit = (local >= 0) & (local < lists_local)
+        local = jnp.clip(local, 0, lists_local - 1)
+        s, i = self._score_probed(artifact, queries, probe_s, local, hit)
+        return topk_by_position(s, i, k)

@@ -318,6 +318,35 @@ def shard_quantized_artifact(artifact, cfg, mesh, model_axis: str = "model"):
 
 
 # ----------------------------------------------------------------------
+# retrieval index artifacts (DESIGN.md §8)
+# ----------------------------------------------------------------------
+
+def retrieval_artifact_specs(index, artifact, model_axis: str = "model"):
+    """PartitionSpec pytree for a retrieval index artifact.
+
+    Same placement policy as the quantized tables above — the
+    O(corpus) leaves (``Index.rows_leaves``: flat corpus codes, IVF
+    list tables) are row-sharded over ``model_axis``; codebooks and
+    the coarse table are KBs and replicated.  DERIVED from the index
+    plugin's own spec (``Index.artifact_shard_specs``,
+    retrieval/base.py) so any registered kind is covered with no
+    edits here.
+    """
+    return index.artifact_shard_specs(artifact, model_axis=model_axis)
+
+
+def shard_retrieval_artifact(artifact, index, mesh,
+                             model_axis: str = "model"):
+    """Place a built index onto ``mesh``: corpus rows sharded,
+    codebooks replicated.  Returns the device-resident pytree."""
+    specs = retrieval_artifact_specs(index, artifact,
+                                     model_axis=model_axis)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(artifact, shardings)
+
+
+# ----------------------------------------------------------------------
 # generic helpers
 # ----------------------------------------------------------------------
 

@@ -209,6 +209,79 @@ def test_sharded_engine_matches_single_device():
     """)
 
 
+def test_sharded_retrieval_topk_bit_identical_all_kinds():
+    """Row-sharded corpus top-k on Mesh(data=2, model=2) must equal the
+    single-device batched search EXACTLY (bit-identical scores AND
+    ids, not a tolerance) for every registered index kind — the
+    deterministic (score, tiebreak) merge contract of DESIGN.md §8 —
+    including through the RetrievalEngine and the k > candidates
+    padding edge."""
+    _run("""
+        import warnings; warnings.filterwarnings('ignore')
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.engine import RetrievalEngine
+        from repro.retrieval import (IndexConfig, get_index,
+                                     index_class, registered_index_kinds,
+                                     sharded_topk)
+        from repro.sharding.rules import shard_retrieval_artifact
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        vecs = jax.random.normal(jax.random.PRNGKey(0), (2048, 16))
+        q = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+        for kind in registered_index_kinds():
+            index = get_index(index_class(kind).probe_config())
+            art = index.build(jax.random.PRNGKey(2), vecs)
+            ref_s, ref_i = index.search(art, q, 50)
+            art_s = shard_retrieval_artifact(art, index, mesh)
+            with mesh:
+                out_s, out_i = jax.jit(
+                    lambda a, qq: sharded_topk(index, a, qq, 50))(
+                        art_s, q)
+            np.testing.assert_array_equal(np.asarray(out_s),
+                                          np.asarray(ref_s))
+            np.testing.assert_array_equal(np.asarray(out_i),
+                                          np.asarray(ref_i))
+            # no ambient mesh -> single-device fallback, same result
+            fs, fi = sharded_topk(index, art, q, 50)
+            np.testing.assert_array_equal(np.asarray(fs),
+                                          np.asarray(ref_s))
+
+            # through the engine: mesh vs single-device, odd batches
+            eng = RetrievalEngine(index, art, k=13, block_q=4,
+                                  mesh=mesh)
+            ref_eng = RetrievalEngine(index, art, k=13, block_q=4)
+            assert eng.pad_multiple == 4 * 2 and eng.data_shards == 2
+            rng = np.random.default_rng(0)
+            reqs = [rng.normal(size=(n, 16)).astype(np.float32)
+                    for n in (5, 1, 3)]
+            hs = [eng.submit(r) for r in reqs]
+            ref_hs = [ref_eng.submit(r) for r in reqs]
+            outs, ref_outs = eng.flush(), ref_eng.flush()
+            for h, rh in zip(hs, ref_hs):
+                np.testing.assert_array_equal(
+                    np.asarray(outs[h][1]), np.asarray(ref_outs[rh][1]))
+                np.testing.assert_array_equal(
+                    np.asarray(outs[h][0]), np.asarray(ref_outs[rh][0]))
+
+        # k > valid candidates: pads (-inf, INVALID_ID) identically
+        index = get_index(IndexConfig(kind="ivf_pq", num_subspaces=4,
+                                      num_centroids=16, iters=3,
+                                      nlist=8, nprobe=2))
+        art = index.build(jax.random.PRNGKey(2), vecs[:64])
+        ref = index.search(art, q, 40)
+        art_s = shard_retrieval_artifact(art, index, mesh)
+        with mesh:
+            out = jax.jit(lambda a, qq: sharded_topk(
+                index, a, qq, 40))(art_s, q)
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      np.asarray(ref[0]))
+        np.testing.assert_array_equal(np.asarray(out[1]),
+                                      np.asarray(ref[1]))
+        print("OK")
+    """)
+
+
 def test_sharded_rows_train_lookup_private_variants():
     """Training-path row gather (sharded_rows) parity for the private
     MGQE variants — the full table row-sharded over model."""

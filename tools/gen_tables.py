@@ -87,6 +87,32 @@ def support_matrix():
                      and probe(lambda: quantized_artifact_specs(cfg)) == "✓"
                      else "—")
         lines.append(f"| {label} | " + " | ".join(cells) + " |")
+
+    # retrieval index kinds (src/repro/retrieval/, DESIGN.md §8):
+    # rows from the index registry, backend columns from the fused
+    # pq_topk dispatch entry, search/sharded cells probed end-to-end
+    from repro.retrieval import get_index, index_class as idx_class, \
+        registered_index_kinds
+    r_backends = sorted(dispatch.registered_ops()["pq_topk"])
+    lines.append("")
+    lines.append("Retrieval index kinds (`repro.retrieval`, batched "
+                 "top-k through the fused `pq_topk` dispatch):")
+    lines.append("")
+    lines.append("| index | " + " | ".join(
+        f"`{b}` ({notes.get(b, 'any')})" for b in r_backends)
+        + " | batched top-k | sharded rows |")
+    lines.append("|---" * (len(r_backends) + 3) + "|")
+    vecs = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+    for kind in registered_index_kinds():
+        index = get_index(idx_class(kind).probe_config())
+        art = index.build(jax.random.PRNGKey(1), vecs)
+        cells = [probe(lambda b=b: dispatch.get_impl("pq_topk", b))
+                 for b in r_backends]
+        cells.append(probe(lambda: index.search(art, vecs[:4], 5)))
+        cells.append("✓" if index.supports_sharded
+                     and probe(lambda: index.artifact_shard_specs(art))
+                     == "✓" else "—")
+        lines.append(f"| `{kind}` | " + " | ".join(cells) + " |")
     return "\n".join(lines)
 
 
