@@ -256,6 +256,130 @@ def bench_rq_decode(results: dict, n: int, d: int, M: int, K: int,
     }
 
 
+def bench_hot_cache(results: dict, n: int, d: int, D: int, K: int,
+                    n_requests: int, req_batch: int):
+    """Hot-row decode-ahead cache (DESIGN.md §9) on Zipfian engine
+    traffic: the cached ServingEngine vs the no-cache engine on the
+    SAME power-law request stream, swept over head-heaviness
+    ``zipf_a`` ∈ {1.05, 1.2, 1.5}.
+
+    The table is the paper's own mgqe (private_k, a three-tier
+    head/torso/tail split — the no-cache engine pays one fused decode
+    pass per tier for EVERY lookup); the cache holds the hottest n/8
+    ids pre-decoded dense.  The gated sweep runs on the ``interpret``
+    backend — the real Pallas kernel body, i.e. the one-hot-matmul
+    decode that executes on TPU — because that is where the cache
+    removes actual kernel work.  (On the CPU ``xla`` reference path the
+    decode degenerates to the very gather the cache performs, so both
+    sides cost alike and sub-ms wall times are all scheduler noise —
+    that path is parity-checked by the tests, not timed here.)
+
+    Recorded per sweep point: hit rate, lookups/s for both engines, and
+    the rows that actually reached the fused decode.  Two gates flip
+    the exit code (after the json is written): ``parity_ok`` — cached
+    lookups bit-identical to the uncached fused decode — and
+    ``speedup_ok`` — >= 2x engine throughput at zipf_a = 1.2, the
+    acceptance bar for exploiting the power law.  Each measured number
+    is the best of 5 post-warmup passes (best-of damps scheduler noise
+    on shared CPU runners).
+    """
+    from repro.core.partition import frequency_boundaries, tier_of_ids
+    from repro.data.synthetic import zipf_request_stream
+    from repro.launch.engine import EngineStats, ServingEngine
+    bounds = frequency_boundaries(n, (0.05, 0.25))
+    tier_ks = (K, max(2, K // 4), max(2, K // 16))
+    cfg = EmbeddingConfig(vocab_size=n, dim=d, kind="mgqe",
+                          mgqe_variant="private_k",
+                          num_subspaces=D, num_centroids=K,
+                          tier_boundaries=bounds,
+                          tier_num_centroids=tier_ks)
+    emb = Embedding(cfg)
+    # codes must respect the PER-TIER codebook width (tail rows index
+    # the small tier tables; out-of-range codes hit take_along_axis's
+    # NaN fill and poison parity)
+    kmax = np.asarray(tier_ks)[
+        np.asarray(tier_of_ids(np.arange(n), bounds))][:, None]
+    rng_codes = np.random.default_rng(3)
+    artifact = {
+        "codes": jnp.asarray(
+            rng_codes.integers(0, 1 << 30, (n, D)) % kmax, jnp.uint8),
+        "centroids": [
+            jax.random.normal(jax.random.PRNGKey(i), (D, k_i, d // D))
+            for i, k_i in enumerate(tier_ks)],
+    }
+    hot = max(1024, n // 8)
+
+    def best_of(engine, reqs, passes=5):
+        engine.serve_stream(reqs)              # warm: pays jit traces
+        best = None
+        for _ in range(passes):
+            engine.stats_ = EngineStats()
+            st = engine.serve_stream(reqs)
+            if best is None or st.lookups_per_s > best.lookups_per_s:
+                best = st
+        return best
+
+    rng = np.random.default_rng(0)
+    probe = np.r_[np.arange(64), rng.integers(0, n, 192)]
+    # one engine pair reused across the sweep: the request-SIZE
+    # sequence is zipf_a-independent (same seed), so flush shapes are
+    # shared and only the hot/cold split shapes recompile per a
+    base = ServingEngine(emb, artifact, max_queue=8192,
+                         backend="interpret")
+    eng = ServingEngine(emb, artifact, max_queue=8192,
+                        backend="interpret", hot_rows=hot)
+    # bit-parity of cached lookups vs the uncached fused decode — the
+    # engines (and so the probe's answer) are fixed across the sweep
+    parity_ok = bool(np.array_equal(np.asarray(eng.lookup(probe)),
+                                    np.asarray(base.lookup(probe))))
+    sweep = {}
+    for a in (1.05, 1.2, 1.5):
+        reqs = zipf_request_stream(n, n_requests, req_batch, zipf_a=a,
+                                   seed=17)
+        st0, st1 = best_of(base, reqs), best_of(eng, reqs)
+        speed = st1.lookups_per_s / max(st0.lookups_per_s, 1e-9)
+        sweep[str(a)] = {
+            "hit_rate": st1.hit_rate,
+            "no_cache_lookups_per_s": st0.lookups_per_s,
+            "hot_cache_lookups_per_s": st1.lookups_per_s,
+            "speedup": speed,
+            "decoded_lookups": st1.decoded_lookups,
+            "decoded_lookups_no_cache": st0.decoded_lookups,
+        }
+        print(f"hot cache zipf_a={a} [interpret]: hit {st1.hit_rate:.3f}"
+              f" | no-cache {st0.lookups_per_s:,.0f}/s | cached "
+              f"{st1.lookups_per_s:,.0f}/s ({speed:.2f}x) | decode rows "
+              f"{st1.decoded_lookups} vs {st0.decoded_lookups}")
+    # the CPU xla reference path is parity-only: cached lookups must
+    # still be bit-identical to its decode (timing it here would be
+    # gather-vs-gather scheduler noise, see docstring)
+    base_x = ServingEngine(emb, artifact, max_queue=8192, backend="xla")
+    eng_x = ServingEngine(emb, artifact, max_queue=8192, backend="xla",
+                          hot_rows=hot)
+    parity_ok &= bool(np.array_equal(np.asarray(eng_x.lookup(probe)),
+                                     np.asarray(base_x.lookup(probe))))
+
+    speed12 = sweep["1.2"]["speedup"]
+    speedup_ok = speed12 >= 2.0
+    if not parity_ok:
+        print("WARNING: hot cache parity FAILED (cached rows not "
+              "bit-identical to the fused decode)")
+    if not speedup_ok:
+        print(f"WARNING: hot cache speedup at zipf_a=1.2 below 2x "
+              f"({speed12:.2f}x)")
+    results["hot_cache_lookup"] = {
+        "vocab": n, "dim": d, "num_subspaces": D, "num_centroids": K,
+        "kind": "mgqe", "mgqe_variant": "private_k",
+        "tier_num_centroids": list(tier_ks),
+        "hot_rows": hot, "fused_backend": "interpret",
+        "hot_block_mbytes": hot * d * 4 / 1e6,
+        "sweep": sweep,
+        "speedup_at_zipf_1_2": speed12,
+        "speedup_ok": speedup_ok,
+        "parity_ok": parity_ok,
+    }
+
+
 def bench_adc(results: dict, d: int, D: int, K: int, n_cand: int):
     k = jax.random.PRNGKey(0)
     cent = jax.random.normal(k, (D, K, d // D))
@@ -392,6 +516,8 @@ def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
     bench_rq_decode(results, n, d, M=4, K=K, batch=4096)
     bench_engine(results, n, d, D, K,
                  n_requests=50 if quick else 200, req_batch=64)
+    bench_hot_cache(results, n, d, D, K,
+                    n_requests=60 if quick else 120, req_batch=512)
     bench_adc(results, d, D, K, n_cand=n)
     bench_retrieval_topk(results, d, D, n_cand=100_000)
     bench_dpq_assign(results, d, D, K, b=8192 if quick else 65_536)
@@ -399,11 +525,14 @@ def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
         with open(out_json, "w") as f:
             json.dump(results, f, indent=1)
         print(f"wrote {out_json}")
-    # parity failures flip the exit code AFTER the json is written, so
-    # CI still uploads the full results for diagnosis
-    return 0 if all(results.get(k, {}).get("parity_ok", True)
-                    for k in ("sharded_decode", "rq_decode",
-                              "retrieval_topk")) else 1
+    # parity (and the hot-cache >=2x speedup bar) flip the exit code
+    # AFTER the json is written, so CI still uploads the full results
+    # for diagnosis
+    ok = all(results.get(k, {}).get("parity_ok", True)
+             for k in ("sharded_decode", "rq_decode", "retrieval_topk",
+                       "hot_cache_lookup"))
+    ok &= results.get("hot_cache_lookup", {}).get("speedup_ok", True)
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

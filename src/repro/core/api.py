@@ -46,7 +46,10 @@ class Embedding:
 
     # ------------------------------------------------------------ serve
     def export(self, params: dict) -> dict:
-        return self.scheme.export(params)
+        """Serving artifact; when ``cfg.hot_rows`` > 0 the scheme's
+        hot-row hook pre-decodes the power-law head into a dense
+        ``hot`` block attached alongside the cold codes (DESIGN.md §9)."""
+        return self.scheme.attach_hot_rows(self.scheme.export(params))
 
     def serve(self, artifact: dict, ids: jax.Array) -> jax.Array:
         return self.scheme.serve(artifact, ids)

@@ -32,15 +32,38 @@ def frequency_boundaries(vocab_size: int,
 
     ``head_fractions=(0.1,)`` reproduces the paper's default two-tier
     split: V1 = top 10% of items, V2 = the rest.  Returned boundaries
-    are strictly ascending and clipped to [1, vocab-1].
+    are strictly ascending and lie in [1, vocab-1].
+
+    Degenerate requests raise: every fraction must lie strictly inside
+    (0, 1) — a 0% or 100% head tier is an empty tier, not a rounding
+    artifact — and the cumulative fractions must be strictly
+    increasing.  The only silent adjustment kept is the rounding nudge:
+    two valid fractions that round to the SAME id (tiny vocabularies)
+    are separated by one id so every tier stays non-empty.
     """
+    fracs = tuple(float(f) for f in head_fractions)
+    for f in fracs:
+        # `not (0 < f < 1)` also catches NaN (all comparisons False)
+        if not 0.0 < f < 1.0:
+            raise ValueError(
+                f"head fraction {f} outside (0, 1): a 0%/100% tier is "
+                f"empty, not a rounding artifact")
+    for lo, hi in zip(fracs, fracs[1:]):
+        if hi <= lo:
+            raise ValueError(
+                f"head_fractions must be strictly increasing "
+                f"(cumulative), got {fracs}")
     bounds = []
     prev = 0
-    for frac in head_fractions:
+    for frac in fracs:
         b = int(round(vocab_size * frac))
+        # legitimate rounding collision only: nudge into [prev+1, v-1]
         b = max(prev + 1, min(b, vocab_size - 1))
         bounds.append(b)
         prev = b
+    # tiny vocab + many fractions can exhaust the id range even after
+    # nudging; fail like any other impossible partition
+    validate_partition(vocab_size, bounds)
     return tuple(bounds)
 
 
@@ -62,12 +85,15 @@ def validate_partition(vocab_size: int, boundaries: Sequence[int]) -> None:
 def tier_of_ids(ids, boundaries: Sequence[int]):
     """Vectorized tier index: number of boundaries <= id.
 
-    Works on numpy or jax arrays (uses the array's own namespace).
+    Works on numpy or jax arrays (uses the array's own namespace);
+    plain Python lists and scalars are coerced to numpy first —
+    ``ids * 0`` on a list is ``[]``, not a zero array, so duck-typing
+    them through the array path silently returns garbage.
     Pure arithmetic — no table lookup — because ids are frequency-sorted.
     """
-    if not boundaries:
-        return ids * 0
+    if not hasattr(ids, "dtype"):
+        ids = np.asarray(ids)
     total = ids * 0
     for b in boundaries:
-        total = total + (ids >= b).astype(total.dtype if hasattr(total, "dtype") else int)
+        total = total + (ids >= b).astype(total.dtype)
     return total

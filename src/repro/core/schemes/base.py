@@ -82,11 +82,15 @@ class Scheme:
     """Protocol every embedding scheme implements.
 
     Required overrides: ``init`` / ``apply`` / ``export`` / ``serve`` /
-    ``artifact_spec`` / ``training_param_count`` (plus ``validate`` /
-    ``variants`` / ``probe_config`` classmethods where the defaults
-    don't fit).  ``serving_artifact_struct`` / ``artifact_shard_specs``
-    / ``serving_size_bits`` are derived from ``artifact_spec`` — do not
-    override them.
+    ``cold_artifact_spec`` / ``training_param_count`` (plus
+    ``validate`` / ``variants`` / ``probe_config`` classmethods where
+    the defaults don't fit).  ``artifact_spec`` (cold spec + the
+    optional hot-row cache leaf), ``serving_artifact_struct``,
+    ``artifact_shard_specs``, ``serving_size_bits``, and
+    ``precompute_hot_rows`` / ``attach_hot_rows`` are derived — do not
+    override them (``precompute_hot_rows`` derives from ``serve``; only
+    override it to pin a different decode path, as QuantizedScheme
+    does).
     """
 
     kind: str = "?"                    # set by @register_scheme
@@ -129,16 +133,60 @@ class Scheme:
     def serve(self, artifact: dict, ids: jax.Array) -> jax.Array:
         raise NotImplementedError
 
-    def artifact_spec(self):
-        """Pytree of :class:`ArtifactLeaf` matching ``export()``
-        leaf-for-leaf — the single source of truth for artifact shape,
-        dtype, placement, and size accounting."""
+    def cold_artifact_spec(self):
+        """Pytree of :class:`ArtifactLeaf` matching the scheme's own
+        ``export()`` leaf-for-leaf — the single source of truth for
+        artifact shape, dtype, placement, and size accounting.  "Cold"
+        because the optional hot-row cache leaf is composed on top by
+        :meth:`artifact_spec`."""
         raise NotImplementedError
 
     def training_param_count(self) -> int:
         raise NotImplementedError
 
+    # ------------------------------------------------- hot-row cache
+    @property
+    def hot_dtype(self):
+        """dtype of ``serve()``'s output rows — the hot block stores
+        serve output verbatim (bit-identical to the cold decode), so
+        the leaf dtype must match it.  Defaults to ``param_dtype``;
+        schemes that dequantize to a fixed width (sq) override."""
+        return self.cfg.param_dtype
+
+    def precompute_hot_rows(self, artifact: dict) -> jax.Array:
+        """Decode-ahead block for the power-law head (DESIGN.md §9):
+        the ``cfg.hot_rows`` hottest ids — ids ``< hot_rows``, valid
+        because the framework convention is frequency-sorted ids —
+        pre-decoded into a dense ``(hot_rows, dim)`` block.  Derived
+        generically from ``serve``, so any registered scheme supports
+        the cache with zero edits.  Jitted: the block must be
+        bit-identical to the (always jitted) serving path, and eager
+        XLA fuses float elementwise chains differently (no FMA)."""
+        ids = jnp.arange(self.cfg.hot_rows, dtype=jnp.int32)
+        return jax.jit(self.serve)(artifact, ids)
+
+    def attach_hot_rows(self, artifact: dict) -> dict:
+        """Return the artifact with the ``hot`` leaf attached when the
+        config asks for one (``Embedding.export`` calls this; the spec
+        machinery below accounts for the leaf automatically)."""
+        if not self.cfg.hot_rows:
+            return artifact
+        return dict(artifact, hot=self.precompute_hot_rows(artifact))
+
     # ---------------------------------------------------------- derived
+    def artifact_spec(self):
+        """Full artifact spec: the scheme's cold spec plus, when
+        ``cfg.hot_rows`` > 0, a dense replicated ``hot`` leaf —
+        ``rows=False`` so the existing placement rules replicate the
+        cache block on every device while the O(vocab) cold codes stay
+        row-sharded, and the size accounting charges the cache's
+        memory honestly."""
+        spec = self.cold_artifact_spec()
+        if self.cfg.hot_rows:
+            spec = dict(spec, hot=ArtifactLeaf(
+                (self.cfg.hot_rows, self.cfg.dim), self.hot_dtype))
+        return spec
+
     @property
     def variant_label(self) -> str:
         """Active variant for reporting ("" when the scheme has none)."""
@@ -193,6 +241,16 @@ class QuantizedScheme(Scheme):
             from repro.sharding.quantized import quantized_gather
             return quantized_gather(artifact, ids, self.cfg)
         return self.decode(artifact, ids)
+
+    def precompute_hot_rows(self, artifact: dict) -> jax.Array:
+        """Pin the export-time pre-decode to the single-device fused
+        ``decode`` path: ``serve`` may route through the sharded gather
+        when a mesh is ambient, but export happens before placement —
+        the hot block must exist to BE placed (replicated, per
+        ``artifact_spec``).  Jitted for bit-parity with the serving
+        path (see the base hook)."""
+        ids = jnp.arange(self.cfg.hot_rows, dtype=jnp.int32)
+        return jax.jit(self.decode)(artifact, ids)
 
     def decode(self, artifact: dict, ids: jax.Array,
                tier_ids: Optional[jax.Array] = None) -> jax.Array:

@@ -28,7 +28,7 @@ class FullEmbedding(Scheme):
     def serve(self, artifact, ids):
         return jnp.take(artifact["emb"], ids, axis=0)
 
-    def artifact_spec(self):
+    def cold_artifact_spec(self):
         cfg = self.cfg
         return {"emb": ArtifactLeaf((cfg.vocab_size, cfg.dim),
                                     cfg.param_dtype)}
@@ -63,7 +63,7 @@ class LowRankFactorization(Scheme):
     def serve(self, artifact, ids):
         return baselines.lrf_lookup(artifact, ids, self.cfg)[0]
 
-    def artifact_spec(self):
+    def cold_artifact_spec(self):
         cfg = self.cfg
         return {"u": ArtifactLeaf((cfg.vocab_size, cfg.rank),
                                   cfg.param_dtype),
@@ -101,7 +101,13 @@ class ScalarQuantization(Scheme):
     def serve(self, artifact, ids):
         return baselines.sq_serving_lookup(artifact, ids, self.cfg)
 
-    def artifact_spec(self):
+    @property
+    def hot_dtype(self):
+        # serve dequantizes against fp32 lo/scale (sq_export), so the
+        # hot block is fp32 regardless of param_dtype
+        return jnp.float32
+
+    def cold_artifact_spec(self):
         cfg = self.cfg
         qd = jnp.uint8 if cfg.sq_bits <= 8 else jnp.int32
         # q is stored at uint8/int32 granularity but accounted at
@@ -145,7 +151,7 @@ class HashingTrick(Scheme):
     def serve(self, artifact, ids):
         return baselines.hash_lookup(artifact, ids, self.cfg)[0]
 
-    def artifact_spec(self):
+    def cold_artifact_spec(self):
         cfg = self.cfg
         return {"emb": ArtifactLeaf((cfg.hash_buckets, cfg.dim),
                                     cfg.param_dtype)}

@@ -38,7 +38,7 @@ class DifferentiableProductQuantization(QuantizedScheme):
                                   ids, backend=cfg.kernel_backend,
                                   block_b=cfg.decode_block_b)
 
-    def artifact_spec(self):
+    def cold_artifact_spec(self):
         cfg = self.cfg
         return {
             "codes": ArtifactLeaf(

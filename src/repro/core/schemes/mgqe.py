@@ -99,7 +99,7 @@ class MultiGranularQuantizedEmbedding(QuantizedScheme):
         return out
 
     # -------------------------------------------------------- structure
-    def artifact_spec(self):
+    def cold_artifact_spec(self):
         cfg = self.cfg
         n, d, D = cfg.vocab_size, cfg.dim, cfg.num_subspaces
         sizes = cfg.tier_sizes()

@@ -142,7 +142,7 @@ class ResidualQuantization(QuantizedScheme):
                    for i in range(m))
 
     # -------------------------------------------------------- structure
-    def artifact_spec(self):
+    def cold_artifact_spec(self):
         cfg = self.cfg
         return {
             "codebooks": ArtifactLeaf(

@@ -78,6 +78,14 @@ class EmbeddingConfig:
     # flag is safe to leave on in single-device tests/tools.
     sharded_codes: bool = False
 
+    # hot-row decode-ahead cache (DESIGN.md §9): pre-decode the hottest
+    # ``hot_rows`` ids (ids < hot_rows under the frequency-sorted id
+    # convention) into a dense (hot_rows, dim) float block at export
+    # time — the artifact gains a replicated ``hot`` leaf and the
+    # ServingEngine serves those ids with a plain gather instead of the
+    # fused decode.  0 disables the cache.
+    hot_rows: int = 0
+
     # kernel backend for the serving decode hot path (DESIGN.md §5):
     # "auto" defers to the REPRO_KERNEL_BACKEND env var when set, else
     # picks pallas on TPU and the XLA reference elsewhere; "interpret"
@@ -101,6 +109,10 @@ class EmbeddingConfig:
             raise ValueError(
                 f"unknown kernel backend {self.kernel_backend!r}; "
                 f"expected one of {KERNEL_BACKENDS}")
+        if not 0 <= self.hot_rows <= self.vocab_size:
+            raise ValueError(
+                f"hot_rows must lie in [0, vocab_size], got "
+                f"{self.hot_rows} for vocab_size={self.vocab_size}")
         scheme.validate(self)
 
     # ------------------------------------------------------------------

@@ -18,11 +18,35 @@ import numpy as np
 
 def zipf_ids(rng: np.random.Generator, n: int, vocab: int,
              zipf_a: float) -> np.ndarray:
-    """Truncated-power-law ids via inverse CDF, overflow-safe."""
+    """Truncated-power-law ids via inverse CDF, overflow-safe.
+
+    ``zipf_a`` must be > 1.0: the inverse-CDF exponent is
+    ``-1 / (zipf_a - 1)``, which diverges at 1.0 — there is no silent
+    rescue to "some nearby distribution" (`not (a > 1)` also rejects
+    NaN).
+    """
+    if not zipf_a > 1.0:
+        raise ValueError(
+            f"zipf_ids needs zipf_a > 1.0 (the truncated power law's "
+            f"inverse CDF diverges at a <= 1.0), got {zipf_a}")
     u = rng.random(n)
-    x = (1.0 - u) ** (-1.0 / max(zipf_a - 1.0, 1e-3)) - 1.0
+    x = (1.0 - u) ** (-1.0 / (zipf_a - 1.0)) - 1.0
     x = np.minimum(x, float(vocab - 1))     # clip in float space (inf-safe)
     return x.astype(np.int64)
+
+
+def zipf_request_stream(vocab: int, n_requests: int, req_batch: int,
+                        zipf_a: float = 1.2, seed: int = 0
+                        ) -> List[np.ndarray]:
+    """Power-law serving traffic: ``n_requests`` id batches of random
+    size 1..``req_batch``, ids Zipf(``zipf_a``)-distributed over the
+    frequency-sorted vocabulary (id 0 = hottest).  This is the request
+    mix the ServingEngine's hot-row cache exists for — the head tier
+    absorbs most lookups (``launch/engine.py::drive_zipf_stream``)."""
+    rng = np.random.default_rng(seed)
+    return [zipf_ids(rng, int(rng.integers(1, req_batch + 1)), vocab,
+                     zipf_a)
+            for _ in range(n_requests)]
 
 
 # ----------------------------------------------------------------------

@@ -46,6 +46,14 @@ class EngineStats:
     padded_lookups: int = 0    # items processed incl. block padding
     flushes: int = 0
     seconds: float = 0.0
+    # hot-row cache accounting (ServingEngine, DESIGN.md §9): hits are
+    # counted over REAL lookups only (flush padding rows never count),
+    # decoded_lookups are the rows that actually reached the fused
+    # decode kernel including the cold side's own block padding — a
+    # fully cache-served flush adds zero here.
+    hot_hits: int = 0
+    decoded_lookups: int = 0
+    hot_refreshes: int = 0
 
     @property
     def lookups_per_s(self) -> float:
@@ -53,9 +61,15 @@ class EngineStats:
         # flushes, zero requests) report 0.0 instead of dividing by 0
         return self.lookups / self.seconds if self.seconds > 0 else 0.0
 
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of real lookups served from the hot-row cache."""
+        return self.hot_hits / self.lookups if self.lookups else 0.0
+
     def as_dict(self) -> Dict:
         return {**dataclasses.asdict(self),
-                "lookups_per_s": self.lookups_per_s}
+                "lookups_per_s": self.lookups_per_s,
+                "hit_rate": self.hit_rate}
 
 
 class _MicroBatchEngine:
@@ -75,6 +89,7 @@ class _MicroBatchEngine:
         self.mesh = mesh
         self._queue: List[jax.Array] = []
         self._queued = 0
+        self._n_valid = 0          # real rows of the flush in flight
         self.stats_ = EngineStats()
 
     # --------------------------------------------------------- hooks
@@ -115,6 +130,7 @@ class _MicroBatchEngine:
         if pad:
             widths = [(0, pad)] + [(0, 0)] * (flat.ndim - 1)
             flat = jnp.pad(flat, widths)   # zero rows are always valid
+        self._n_valid = n_rows         # lets _run tell rows from padding
         t0 = time.perf_counter()
         if self.mesh is not None:
             # ambient mesh at trace time -> shard_map fused path
@@ -161,13 +177,31 @@ class ServingEngine(_MicroBatchEngine):
     decode across the whole mesh through the shard_map quantized
     gather, padded to ``block_b x data_shards`` so each data shard's
     local batch still hits the decode kernel's full-block fast path.
+
+    **Hot-row cache** (DESIGN.md §9): recsys traffic is power-law — the
+    head tier absorbs most lookups — so when ``hot_rows`` > 0 (or the
+    config/artifact carry a pre-decoded ``hot`` block from export) the
+    engine keeps a dense ``(C, d)`` block of the hottest rows and
+    splits every flush: cached ids are a plain gather from the block,
+    only the cold remainder (padded to ``block_b``) reaches the fused
+    decode, and a gather-merge reassembles the flush.  Cached rows are
+    bit-identical to the cold path — the block is either the artifact's
+    export-time pre-decode or re-decoded through THIS engine's own
+    serve function.  ``refresh_hot_rows()`` re-points the cache at the
+    observed-hottest ids (EMA frequency counters accumulated per
+    flush), so the cached set tracks live traffic rather than static
+    tiering; ``hot_refresh_every`` automates that every N flushes.
     """
 
     def __init__(self, emb: Embedding, artifact: dict,
                  block_b: Optional[int] = None,
                  max_queue: int = 65536,
                  backend: Optional[str] = None,
-                 mesh=None, model_axis: str = "model"):
+                 mesh=None, model_axis: str = "model",
+                 hot_rows: Optional[int] = None,
+                 hot_ema_decay: float = 0.99,
+                 hot_refresh_every: int = 0,
+                 hot_track_freq: Optional[bool] = None):
         overrides = {}
         if backend is not None:
             overrides["kernel_backend"] = backend
@@ -216,11 +250,175 @@ class ServingEngine(_MicroBatchEngine):
             self.artifact = jax.device_put(artifact)
         self._serve = jax.jit(lambda art, ids: emb.serve(art, ids))
 
+        # ------------------------------------------------ hot-row cache
+        self.hot_rows = (emb.cfg.hot_rows if hot_rows is None
+                         else int(hot_rows))
+        if not 0 <= self.hot_rows <= emb.cfg.vocab_size:
+            raise ValueError(
+                f"hot_rows={self.hot_rows} must lie in [0, vocab_size="
+                f"{emb.cfg.vocab_size}]")
+        self.hot_ema_decay = float(hot_ema_decay)
+        self.hot_refresh_every = int(hot_refresh_every)
+        # the EMA counters cost O(vocab) host work per flush; track
+        # them only when the adaptive cache is actually in play
+        self.hot_track_freq = (hot_refresh_every > 0
+                               if hot_track_freq is None
+                               else bool(hot_track_freq))
+        self._hot_block = None     # (C, d) device block, None = disabled
+        self._hot_slot = None      # host (vocab,) int32 id->slot, -1 cold
+        self._hot_ids = None       # (C,) host int64, the cached id set
+        self._freq = None          # (vocab,) float32 EMA traffic counters
+        if self.hot_rows:
+            # Seed with the head ids (frequency-sorted convention).
+            # The artifact's export-time pre-decode is reused verbatim
+            # only when this engine decodes through the exact same path
+            # (no backend/block rebuild, no mesh); otherwise the block
+            # is re-decoded through self._serve so cached rows stay
+            # bit-identical to this engine's cold decode.
+            block = None
+            if ("hot" in artifact and not overrides and mesh is None
+                    and artifact["hot"].shape[0] == self.hot_rows):
+                block = self.artifact["hot"]
+            self._set_hot_rows(np.arange(self.hot_rows), block=block)
+
+        def gather_select(hot_block, cold_out, slots, cold_rank):
+            # two O(B)-row gathers + a select, NO scatter (XLA scatters
+            # crawl on CPU) and NO concatenate (an O(C) buffer copy per
+            # flush — the cache block can be tens of MB): position i
+            # takes its cache row when slot >= 0, else its decoded row
+            # via the host-computed rank into the cold batch.
+            hot = jnp.take(hot_block,
+                           jnp.clip(slots, 0, hot_block.shape[0] - 1),
+                           axis=0)
+            cold = jnp.take(cold_out, cold_rank, axis=0)
+            return jnp.where((slots >= 0)[:, None], hot, cold)
+
+        def cold_merge(art, hot_block, slots, cold_ids, cold_rank):
+            # single device: decode + merge in ONE dispatch
+            return gather_select(hot_block, emb.serve(art, cold_ids),
+                                 slots, cold_rank)
+
+        self._cold_merge = jax.jit(cold_merge)
+        # mesh path: the shard_map decode must run as its OWN jit — a
+        # shard_map output consumed by further ops inside one jit
+        # miscounts under GSPMD (P() x P('data') concat doubles the
+        # sharded operand) — then the same gather-select merges its
+        # materialized output, tolerating mixed shardings
+        self._mesh_merge = jax.jit(gather_select)
+        self._hot_only = jax.jit(
+            lambda blk, slots: jnp.take(
+                blk, jnp.clip(slots, 0, blk.shape[0] - 1), axis=0))
+
+    # ----------------------------------------------------- hot-row cache
+    def _decode_ids(self, ids_np: np.ndarray) -> jax.Array:
+        """Decode arbitrary ids through the engine's own jitted serve
+        path (padded to the flush granularity) — by construction
+        bit-identical to what the cold path of a flush would produce."""
+        n = len(ids_np)
+        pad = (-n) % self.pad_multiple
+        padded = np.concatenate([ids_np, np.zeros(pad, np.int64)]) \
+            if pad else ids_np
+        ids = jnp.asarray(padded, jnp.int32)
+        if self.mesh is not None:
+            with self.mesh:
+                out = self._serve(self.artifact, ids)
+        else:
+            out = self._serve(self.artifact, ids)
+        return out[:n]
+
+    def _set_hot_rows(self, ids_np: np.ndarray, block=None) -> None:
+        ids_np = np.asarray(ids_np, np.int64)
+        if block is None:
+            block = self._decode_ids(ids_np)
+        if self.mesh is not None:
+            # the serve output is data-sharded; the cache block is read
+            # by every flush on every device — replicate it
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            block = jax.device_put(np.asarray(block),
+                                   NamedSharding(self.mesh, P()))
+        else:
+            block = jax.device_put(jnp.asarray(block))
+        self._hot_block = block
+        slot = np.full(self.emb.cfg.vocab_size, -1, np.int32)
+        slot[ids_np] = np.arange(len(ids_np), dtype=np.int32)
+        self._hot_slot = slot
+        self._hot_ids = ids_np
+
+    def refresh_hot_rows(self, hot_ids=None) -> np.ndarray:
+        """Re-point the cache at the observed-hottest ids and re-decode
+        the block through the engine's own serve path.
+
+        ``hot_ids`` defaults to the top ``hot_rows`` ids by the EMA
+        frequency counters (ties broken by id, deterministically); an
+        explicit id set overrides.  Before any traffic is observed the
+        current set is kept.  Returns the active hot id set."""
+        if not self.hot_rows:
+            raise ValueError("hot-row cache disabled (hot_rows=0)")
+        if hot_ids is None:
+            if self._freq is None:
+                return self._hot_ids       # no traffic observed yet
+            order = np.lexsort((np.arange(len(self._freq)), -self._freq))
+            hot_ids = np.sort(order[:self.hot_rows])
+        hot_ids = np.asarray(hot_ids, np.int64)
+        self.stats_.hot_refreshes += 1
+        if np.array_equal(hot_ids, self._hot_ids):
+            # steady state: the selected set is unchanged — skip the
+            # O(C) re-decode, the block upload, and the slot rebuild
+            return self._hot_ids
+        self._set_hot_rows(hot_ids)
+        return self._hot_ids
+
+    # --------------------------------------------------------- serve
     def _coerce(self, ids) -> jax.Array:
         return jnp.asarray(ids, jnp.int32).reshape(-1)
 
     def _run(self, flat: jax.Array) -> jax.Array:
-        return self._serve(self.artifact, flat)
+        if self._hot_block is None:
+            self.stats_.decoded_lookups += int(flat.shape[0])
+            return self._serve(self.artifact, flat)
+        # host-side split; clip mirrors jnp.take's OOB-clamp semantics
+        flat_np = np.clip(np.asarray(flat), 0, self.emb.cfg.vocab_size - 1)
+        if self.hot_track_freq:
+            # EMA traffic counters feed refresh_hot_rows (real rows only)
+            if self._freq is None:
+                self._freq = np.zeros(self.emb.cfg.vocab_size, np.float32)
+            self._freq *= self.hot_ema_decay
+            self._freq += np.bincount(flat_np[:self._n_valid],
+                                      minlength=len(self._freq)
+                                      ).astype(np.float32)
+        slots = self._hot_slot[flat_np]            # (B,), -1 = cold
+        self.stats_.hot_hits += int((slots[:self._n_valid] >= 0).sum())
+        # flush-padding rows are dropped after the flush — point them
+        # at cache row 0 so they never force fused-decode work
+        slots[self._n_valid:] = 0
+        cold_mask = slots < 0
+        n_cold = int(cold_mask.sum())
+        if n_cold == 0:
+            # fully cache-served: zero fused-decode (kernel) work
+            return self._hot_only(self._hot_block, jnp.asarray(slots))
+        cold_rank = np.maximum(np.cumsum(cold_mask) - 1, 0)
+        cold_ids = flat_np[cold_mask]
+        pad = (-n_cold) % self.pad_multiple
+        if pad:
+            cold_ids = np.concatenate(
+                [cold_ids, np.zeros(pad, cold_ids.dtype)])
+        self.stats_.decoded_lookups += cold_ids.size
+        slots_dev = jnp.asarray(slots)
+        rank_dev = jnp.asarray(cold_rank.astype(np.int32))
+        cold_dev = jnp.asarray(cold_ids, jnp.int32)
+        if self.mesh is not None:
+            cold_out = self._serve(self.artifact, cold_dev)
+            return self._mesh_merge(self._hot_block, cold_out,
+                                    slots_dev, rank_dev)
+        return self._cold_merge(self.artifact, self._hot_block,
+                                slots_dev, cold_dev, rank_dev)
+
+    def flush(self) -> List:
+        out = super().flush()
+        if (out and self._hot_block is not None and self.hot_refresh_every
+                and self.stats_.flushes % self.hot_refresh_every == 0):
+            self.refresh_hot_rows()
+        return out
 
     def lookup(self, ids) -> jax.Array:
         """Synchronous single-request path (submit + flush).  Flushes
@@ -322,6 +520,30 @@ def drive_random_stream(engine: ServingEngine, vocab_size: int,
     return engine.serve_stream(reqs)
 
 
+def drive_zipf_stream(engine: ServingEngine, vocab_size: int,
+                      n_requests: int, req_batch: int,
+                      zipf_a: float = 1.2, seed: int = 0) -> EngineStats:
+    """Power-law twin of :func:`drive_random_stream`: Zipf(``zipf_a``)
+    ids over the frequency-sorted vocabulary — the head-heavy traffic
+    the hot-row cache exists for (DESIGN.md §9).
+
+    The identical stream is driven twice: with a static hot set the
+    hot/cold split is a pure function of the request ids, so the warm
+    pass compiles every (flush, cold-batch) shape the measured pass
+    hits — zero XLA compile time in the returned stats.  (Auto-refresh
+    between passes can shift the cached set and re-trace a handful of
+    shapes; the EMA counters and stats are reset so the measured pass
+    starts clean either way.)"""
+    from repro.data.synthetic import zipf_request_stream
+    reqs = zipf_request_stream(vocab_size, n_requests, req_batch,
+                               zipf_a=zipf_a, seed=seed)
+    engine.serve_stream(reqs)          # warm pass: pays all jit traces
+    engine.stats_ = EngineStats()
+    if engine._freq is not None:
+        engine._freq[:] = 0.0
+    return engine.serve_stream(reqs)
+
+
 def drive_random_query_stream(engine: RetrievalEngine, dim: int,
                               n_requests: int, req_batch: int,
                               seed: int = 0) -> EngineStats:
@@ -351,4 +573,4 @@ def embedding_config_of_arch(family: str, cfg):
 
 __all__ = ["EngineStats", "RetrievalEngine", "ServingEngine",
            "drive_random_query_stream", "drive_random_stream",
-           "embedding_config_of_arch"]
+           "drive_zipf_stream", "embedding_config_of_arch"]

@@ -174,11 +174,19 @@ def serve_ctr(cfg, batch: int):
 
 
 def serve_engine(family, cfg, n_requests: int, req_batch: int,
-                 backend=None, max_queue: int = 4096, mesh_spec=None):
+                 backend=None, max_queue: int = 4096, mesh_spec=None,
+                 hot_rows: int = 0, hot_refresh: int = 0,
+                 zipf_a: float = 0.0):
     """Request-stream demo of the micro-batching engine: N requests of
-    random size <= req_batch against the arch's main embedding table."""
+    random size <= req_batch against the arch's main embedding table.
+
+    ``hot_rows`` enables the hot-row decode-ahead cache (DESIGN.md §9),
+    ``hot_refresh`` re-points it at observed traffic every N flushes,
+    and ``zipf_a`` > 1 switches the stream from uniform to power-law
+    ids — the traffic mix the cache exists for."""
     from repro.core import Embedding
     from repro.launch.engine import (ServingEngine, drive_random_stream,
+                                     drive_zipf_stream,
                                      embedding_config_of_arch)
     ecfg = embedding_config_of_arch(family, cfg)
     emb = Embedding(ecfg)
@@ -217,14 +225,36 @@ def serve_engine(family, cfg, n_requests: int, req_batch: int,
                   f"per device")
 
     engine = ServingEngine(emb, artifact, backend=backend,
-                           max_queue=max_queue, mesh=mesh)
-    st = drive_random_stream(engine, ecfg.vocab_size, n_requests, req_batch)
+                           max_queue=max_queue, mesh=mesh,
+                           hot_rows=hot_rows or None,
+                           hot_refresh_every=hot_refresh)
+    if engine.hot_rows:
+        # true block width comes off the scheme's spec (param_dtype
+        # aware — bf16 tables cache bf16 rows)
+        width = jnp.dtype(engine.emb.scheme.hot_dtype).itemsize
+        hot_mb = engine.hot_rows * ecfg.dim * width / 1e6
+        print(f"hot-row cache: {engine.hot_rows} rows pre-decoded "
+              f"({hot_mb:.2f} MB dense, replicated)"
+              + (f", refresh every {hot_refresh} flushes"
+                 if hot_refresh else ""))
+    if zipf_a:
+        st = drive_zipf_stream(engine, ecfg.vocab_size, n_requests,
+                               req_batch, zipf_a=zipf_a)
+    else:
+        st = drive_random_stream(engine, ecfg.vocab_size, n_requests,
+                                 req_batch)
     print(f"engine: {st.requests} requests / {st.lookups} lookups in "
           f"{st.flushes} flushes, {st.seconds:.3f}s -> "
           f"{st.lookups_per_s:,.0f} lookups/s "
           f"(block_b={engine.block_b} x {engine.data_shards} data "
           f"shard(s), pad overhead "
           f"{100*(st.padded_lookups/st.lookups-1) if st.lookups else 0.0:.1f}%)")
+    if engine.hot_rows:
+        print(f"hot cache: hit rate {st.hit_rate:.1%} "
+              f"({st.hot_hits}/{st.lookups} lookups cache-served; "
+              f"{st.decoded_lookups} rows through the fused decode vs "
+              f"{st.padded_lookups} without the cache; "
+              f"{st.hot_refreshes} refresh(es))")
     return st
 
 
@@ -248,6 +278,15 @@ def main():
                     help="drive the micro-batching ServingEngine")
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--req-batch", type=int, default=64)
+    ap.add_argument("--hot-rows", type=int, default=0,
+                    help="pre-decode this many head rows into the "
+                         "engine's hot-row cache (0 = off; DESIGN.md §9)")
+    ap.add_argument("--hot-refresh", type=int, default=0,
+                    help="re-point the hot cache at observed traffic "
+                         "every N flushes (0 = static head-id set)")
+    ap.add_argument("--zipf-a", type=float, default=0.0,
+                    help="drive the engine with Zipf(a) power-law ids "
+                         "instead of uniform (needs a > 1.0)")
     ap.add_argument("--kernel-backend", default=None,
                     choices=KERNEL_BACKENDS)
     ap.add_argument("--mesh", default=None, metavar="data=2,model=2",
@@ -264,9 +303,20 @@ def main():
         force_host_device_count(int(np.prod(shape)))
 
     family, cfg = get_arch(args.arch, smoke=args.smoke)
+    if (args.hot_rows or args.hot_refresh or args.zipf_a) \
+            and not args.engine:
+        ap.error("--hot-rows/--hot-refresh/--zipf-a require --engine")
+    if args.hot_refresh and not args.hot_rows:
+        ap.error("--hot-refresh needs a cache to refresh; pass "
+                 "--hot-rows N")
+    if args.zipf_a and args.zipf_a <= 1.0:
+        ap.error(f"--zipf-a must be > 1.0 (the truncated power law "
+                 f"diverges at a <= 1), got {args.zipf_a}")
     if args.engine:
         serve_engine(family, cfg, args.requests, args.req_batch,
-                     backend=args.kernel_backend, mesh_spec=args.mesh)
+                     backend=args.kernel_backend, mesh_spec=args.mesh,
+                     hot_rows=args.hot_rows, hot_refresh=args.hot_refresh,
+                     zipf_a=args.zipf_a)
     elif family == "lm":
         serve_lm(cfg, args.batch, args.prompt_len, args.decode_steps)
     elif cfg.model == "two_tower":

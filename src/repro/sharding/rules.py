@@ -295,8 +295,11 @@ def quantized_artifact_specs(cfg, model_axis: str = "model"):
 
     Placement policy (sharding/quantized.py): code tables — the only
     O(vocab) leaves — are row-sharded over ``model_axis``; codebooks
-    are KBs and replicated everywhere.  The tree is DERIVED from the
-    scheme's own artifact spec (``Scheme.artifact_shard_specs``,
+    are KBs and replicated everywhere.  The hot-row decode-ahead block
+    (``hot`` leaf, DESIGN.md §9) is replicated too: it is O(hot_rows),
+    not O(vocab), and every data shard's flush gathers from it — the
+    cold codes stay row-sharded underneath.  The tree is DERIVED from
+    the scheme's own artifact spec (``Scheme.artifact_shard_specs``,
     core/schemes/base.py), so it matches
     ``Embedding.serving_artifact_struct()`` leaf-for-leaf and can be
     zipped against a real artifact for ``jax.device_put`` or passed

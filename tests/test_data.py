@@ -1,9 +1,11 @@
 """Synthetic data generators: statistical properties the paper's
 technique depends on (power law, frequency-sorted ids)."""
 import numpy as np
+import pytest
 
 from repro.data.synthetic import (CTRStream, aar_like, criteo_field_vocabs,
-                                  movielens_like, zipf_ids)
+                                  movielens_like, zipf_ids,
+                                  zipf_request_stream)
 
 
 def test_zipf_ids_power_law():
@@ -15,6 +17,29 @@ def test_zipf_ids_power_law():
     assert counts[:100].sum() > 0.5 * counts.sum()
     # coarse rank-monotonicity: head decile >> middle >> tail decile
     assert counts[:100].sum() > counts[450:550].sum() > 0
+
+
+@pytest.mark.parametrize("bad_a", [1.0, 0.5, 0.0, -2.0, float("nan")])
+def test_zipf_ids_rejects_a_at_or_below_one(bad_a):
+    """Regression: ``zipf_a <= 1`` used to be silently rescued via
+    ``max(zipf_a - 1, 1e-3)`` — quietly sampling a (much) flatter
+    distribution than requested."""
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="zipf_a"):
+        zipf_ids(rng, 100, 1000, zipf_a=bad_a)
+
+
+def test_zipf_request_stream_shapes_and_range():
+    reqs = zipf_request_stream(500, n_requests=20, req_batch=8,
+                               zipf_a=1.2, seed=3)
+    assert len(reqs) == 20
+    assert all(1 <= len(r) <= 8 for r in reqs)
+    flat = np.concatenate(reqs)
+    assert flat.min() >= 0 and flat.max() < 500
+    # deterministic per seed
+    again = zipf_request_stream(500, n_requests=20, req_batch=8,
+                                zipf_a=1.2, seed=3)
+    np.testing.assert_array_equal(flat, np.concatenate(again))
 
 
 def test_movielens_like_structure():

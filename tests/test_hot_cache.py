@@ -1,0 +1,218 @@
+"""Hot-row decode-ahead cache in the ServingEngine (DESIGN.md §9).
+
+The scheme-level hook (export attaches the `hot` leaf, spec/placement/
+size all derived) is covered registry-wide in test_schemes.py; this
+file covers the ENGINE: hot/cold flush splitting, bit-parity of cached
+lookups against the uncached fused decode, EngineStats accounting
+across mixed / fully-cached / single-request flushes, and the
+adaptive refresh loop.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Embedding, EmbeddingConfig
+from repro.core.schemes import registered_kinds, scheme_class
+from repro.launch.engine import ServingEngine, drive_zipf_stream
+
+
+def _dpq_cfg(**kw):
+    return EmbeddingConfig(vocab_size=500, dim=16, kind="dpq",
+                           num_subspaces=4, num_centroids=8,
+                           decode_block_b=32, **kw)
+
+
+def _engine_pair(cfg, hot_rows, **hot_kw):
+    """(cached engine, uncached engine) over one exported artifact."""
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    return (ServingEngine(emb, art, hot_rows=hot_rows, **hot_kw),
+            ServingEngine(emb, art, hot_rows=0), emb, art)
+
+
+# -------------------------------------------------------------- parity
+
+def _registry_params():
+    return [pytest.param(kind, var,
+                         id=kind if var == "-" else f"{kind}-{var}")
+            for kind in registered_kinds()
+            for var in scheme_class(kind).variants()]
+
+
+@pytest.mark.parametrize("kind,var", _registry_params())
+def test_cached_lookups_bit_identical_every_scheme(kind, var):
+    """Cached rows must be BIT-identical to the uncached fused decode
+    for every registered scheme — mixed hot/cold probe batch."""
+    cfg = dataclasses.replace(scheme_class(kind).probe_config(var),
+                              hot_rows=8)
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    hot_eng = ServingEngine(emb, art)              # hot_rows from cfg
+    cold_eng = ServingEngine(emb, art, hot_rows=0)
+    ids = np.asarray([0, 7, 3, 8, cfg.vocab_size - 1, 0, 20 %
+                      cfg.vocab_size])
+    out = hot_eng.lookup(ids)
+    ref = cold_eng.lookup(ids)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert hot_eng.stats().hot_hits > 0
+
+
+def test_cached_lookup_bit_identical_with_backend_override():
+    """A backend override rebuilds the config — the engine must then
+    re-decode the hot block through its OWN serve path so parity holds
+    on that backend too."""
+    cfg = _dpq_cfg(hot_rows=64)
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    eng = ServingEngine(emb, art, backend="interpret")
+    base = ServingEngine(emb, art, backend="interpret", hot_rows=0)
+    ids = np.asarray([0, 63, 64, 499, 5])
+    np.testing.assert_array_equal(np.asarray(eng.lookup(ids)),
+                                  np.asarray(base.lookup(ids)))
+
+
+# ---------------------------------------------------------- EngineStats
+
+def test_stats_mixed_hot_cold_flush():
+    eng, base, emb, art = _engine_pair(_dpq_cfg(), hot_rows=100)
+    ids = np.asarray([0, 5, 99, 100, 499, 3, 200])      # 4 hot, 3 cold
+    eng.lookup(ids)
+    st = eng.stats()
+    assert st.lookups == 7 and st.requests == 1 and st.flushes == 1
+    assert st.hot_hits == 4
+    assert st.hit_rate == pytest.approx(4 / 7)
+    # flush padded to block_b; only the cold remainder hit the decode
+    assert st.padded_lookups == 32
+    assert st.decoded_lookups == 32      # 3 cold ids padded to block_b
+    assert st.lookups_per_s >= 0.0
+
+
+def test_stats_fully_cached_flush_zero_kernel_work():
+    """A flush whose real ids are all cached must do ZERO fused-decode
+    work, and the stats must stay consistent (hit_rate 1.0, finite
+    throughput, padded_lookups still accounted)."""
+    eng, base, emb, art = _engine_pair(_dpq_cfg(), hot_rows=100)
+    ids = np.arange(40)                                 # all hot
+    out = eng.lookup(ids)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(base.lookup(ids)))
+    st = eng.stats()
+    assert st.decoded_lookups == 0
+    assert st.hot_hits == 40 and st.lookups == 40
+    assert st.hit_rate == 1.0
+    assert st.padded_lookups == 64      # ceil(40 / 32) * 32
+    assert st.seconds > 0 and np.isfinite(st.lookups_per_s)
+    d = st.as_dict()
+    assert d["hit_rate"] == 1.0 and d["decoded_lookups"] == 0
+
+
+def test_stats_single_request_no_concatenate_path():
+    """n_req == 1 skips the concatenate in flush(); the hot split and
+    stats must behave identically on that path."""
+    eng, base, emb, art = _engine_pair(_dpq_cfg(), hot_rows=100)
+    h = eng.submit(np.asarray([1, 2, 450]))
+    outs = eng.flush()                                  # single request
+    np.testing.assert_array_equal(
+        np.asarray(outs[h]), np.asarray(base.lookup([1, 2, 450])))
+    st = eng.stats()
+    assert st.requests == 1 and st.lookups == 3
+    assert st.hot_hits == 2 and st.hit_rate == pytest.approx(2 / 3)
+    assert st.decoded_lookups == 32
+
+
+def test_stats_accumulate_across_mixed_flushes():
+    eng, base, emb, art = _engine_pair(_dpq_cfg(), hot_rows=100)
+    eng.lookup(np.arange(10))            # fully cached
+    eng.lookup(np.asarray([400, 450]))   # fully cold
+    eng.lookup(np.asarray([0, 400]))     # mixed
+    st = eng.stats()
+    assert st.flushes == 3 and st.lookups == 14
+    assert st.hot_hits == 10 + 0 + 1
+    assert st.decoded_lookups == 0 + 32 + 32
+    assert st.hit_rate == pytest.approx(11 / 14)
+
+
+# ------------------------------------------------------------- refresh
+
+def test_refresh_hot_rows_tracks_observed_traffic():
+    """With frequency tracking on, refresh re-points the cache at the
+    observed-hottest ids — and parity still holds afterwards."""
+    eng, base, emb, art = _engine_pair(_dpq_cfg(), hot_rows=16,
+                                       hot_track_freq=True)
+    hot_segment = np.arange(300, 316)    # tail ids, hammered
+    for _ in range(3):
+        eng.lookup(np.concatenate([hot_segment, hot_segment]))
+    new_ids = eng.refresh_hot_rows()
+    np.testing.assert_array_equal(new_ids, hot_segment)
+    assert eng.stats().hot_refreshes == 1
+    # the refreshed cache now serves that segment without decoding
+    before = eng.stats().decoded_lookups
+    out = eng.lookup(hot_segment)
+    assert eng.stats().decoded_lookups == before
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(base.lookup(hot_segment)))
+
+
+def test_refresh_with_explicit_ids_keeps_parity():
+    eng, base, emb, art = _engine_pair(_dpq_cfg(), hot_rows=32)
+    eng.refresh_hot_rows(np.arange(200, 232))
+    ids = np.asarray([0, 201, 231, 499])
+    np.testing.assert_array_equal(np.asarray(eng.lookup(ids)),
+                                  np.asarray(base.lookup(ids)))
+    assert eng.stats().hot_hits == 2     # 201, 231
+
+
+def test_refresh_before_traffic_keeps_head_set():
+    eng, *_ = _engine_pair(_dpq_cfg(), hot_rows=16, hot_track_freq=True)
+    np.testing.assert_array_equal(eng.refresh_hot_rows(), np.arange(16))
+
+
+def test_refresh_disabled_raises():
+    eng, *_ = _engine_pair(_dpq_cfg(), hot_rows=0)
+    with pytest.raises(ValueError, match="hot"):
+        eng.refresh_hot_rows()
+
+
+def test_auto_refresh_every_n_flushes():
+    eng, *_ = _engine_pair(_dpq_cfg(), hot_rows=16, hot_refresh_every=2)
+    for i in range(4):
+        eng.lookup(np.asarray([300, 301, 302]))
+    assert eng.stats().hot_refreshes == 2
+    # EMA counters ranked the hammered tail ids into the cache
+    assert set([300, 301, 302]) <= set(eng._hot_ids.tolist())
+
+
+def test_engine_hot_rows_cap():
+    cfg = _dpq_cfg()
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="hot_rows"):
+        ServingEngine(emb, art, hot_rows=cfg.vocab_size + 1)
+
+
+# ---------------------------------------------------------- zipf driver
+
+def test_drive_zipf_stream_hits_head():
+    cfg = _dpq_cfg(hot_rows=64)
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    eng = ServingEngine(emb, art, max_queue=256)
+    st = drive_zipf_stream(eng, cfg.vocab_size, n_requests=30,
+                           req_batch=16, zipf_a=1.2, seed=5)
+    assert st.lookups > 0 and st.flushes >= 1
+    # power-law traffic against the head cache: most lookups hit
+    assert st.hit_rate > 0.4
+    assert st.decoded_lookups < st.padded_lookups
+
+
+def test_exported_hot_block_is_used_when_config_matches():
+    """No backend/mesh override: the engine must reuse the artifact's
+    export-time pre-decoded block verbatim (the deployment story)."""
+    cfg = _dpq_cfg(hot_rows=64)
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    eng = ServingEngine(emb, art)
+    np.testing.assert_array_equal(np.asarray(eng._hot_block),
+                                  np.asarray(art["hot"]))

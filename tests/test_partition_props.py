@@ -86,6 +86,66 @@ def test_frequency_boundaries_always_validate(vocab, frac):
     assert 1 <= bounds[0] <= vocab - 1
 
 
+def test_tier_of_ids_accepts_plain_lists():
+    """Regression: ``ids * 0`` on a list is ``[]``, so the pre-fix code
+    returned garbage (an empty array) for plain Python lists."""
+    out = tier_of_ids([0, 5, 10, 99], (10,))
+    np.testing.assert_array_equal(out, [0, 0, 1, 1])
+    # empty-boundaries path must also survive list input
+    np.testing.assert_array_equal(tier_of_ids([3, 4], ()), [0, 0])
+
+
+def test_tier_of_ids_accepts_python_scalars():
+    assert int(tier_of_ids(50, (10, 40))) == 2
+    assert int(tier_of_ids(0, (10,))) == 0
+
+
+def test_tier_of_ids_list_matches_array_path():
+    ids = [0, 1, 9, 10, 11, 499, 500, 999]
+    bounds = (10, 500)
+    np.testing.assert_array_equal(tier_of_ids(ids, bounds),
+                                  tier_of_ids(np.asarray(ids), bounds))
+
+
+# ----------------------------------------------------------------------
+# frequency_boundaries degenerate inputs (plain pytest — always run)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("fracs", [
+    (0.0,),            # empty head tier
+    (1.0,),            # head tier == whole vocab
+    (1.5,),            # > 1
+    (-0.1,),           # negative
+    (float("nan"),),   # NaN slips through naive comparisons
+    (0.5, 0.5),        # non-increasing (duplicate)
+    (0.5, 0.3),        # non-increasing (descending)
+    (0.2, 1.0),        # later fraction out of range
+])
+def test_frequency_boundaries_rejects_degenerate_fractions(fracs):
+    """Regression: these used to be silently clamped into forced 1-id
+    tiers instead of failing."""
+    with pytest.raises(ValueError):
+        frequency_boundaries(1000, fracs)
+
+
+def test_frequency_boundaries_keeps_rounding_nudge():
+    """The legitimate clamp survives: valid fractions that round to a
+    colliding/0 id are nudged apart, and the result still validates."""
+    # 0.0004 * 1000 rounds to 0 -> nudged to 1
+    assert frequency_boundaries(1000, (0.0004,)) == (1,)
+    # two close valid fractions rounding to the same id get separated
+    bounds = frequency_boundaries(1000, (0.3001, 0.3004))
+    assert bounds == (300, 301)
+    validate_partition(1000, bounds)
+
+
+def test_frequency_boundaries_impossible_tiny_vocab_raises():
+    """Nudging cannot conjure ids that don't exist: many fractions over
+    a tiny vocab must fail like any other impossible partition."""
+    with pytest.raises(ValueError):
+        frequency_boundaries(3, (0.2, 0.5, 0.9))
+
+
 # ----------------------------------------------------------------------
 # validate_partition error paths (plain pytest — always run)
 # ----------------------------------------------------------------------

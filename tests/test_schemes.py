@@ -159,6 +159,59 @@ def test_scheme_size_accounting_tracks_param_dtype(kind, var, dtype):
         assert tuple(a.shape) == tuple(s.shape)
 
 
+# --------------------------------------------- hot-row cache (DESIGN §9)
+
+@pytest.mark.parametrize("kind,var", _registry_params())
+def test_scheme_hot_rows_export_matches_spec_and_serve(kind, var):
+    """Every registered scheme supports the hot-row decode-ahead hook:
+    export under hot_rows attaches a ``hot`` leaf that (a) matches the
+    composed artifact spec leaf-for-leaf and (b) is BIT-identical to
+    serving those head ids through the scheme — the cache contract."""
+    cfg = dataclasses.replace(_cfg(kind, var), hot_rows=8)
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    assert "hot" in art
+    leaf = get_scheme(cfg).artifact_spec()["hot"]
+    assert tuple(art["hot"].shape) == leaf.shape == (8, cfg.dim)
+    assert jnp.asarray(art["hot"]).dtype == jnp.dtype(leaf.dtype)
+    # jitted, like every real serving path — eager XLA skips the FMA
+    # fusion the compiled path uses and drifts in the last ulp
+    served = jax.jit(emb.serve)(art, jnp.arange(8))
+    np.testing.assert_array_equal(np.asarray(served),
+                                  np.asarray(art["hot"]))
+    # the derived accounting charges the cache's memory
+    extra = cfg.serving_size_bits() - _cfg(kind, var).serving_size_bits()
+    assert extra == 8 * cfg.dim * jnp.dtype(leaf.dtype).itemsize * 8
+
+
+@pytest.mark.parametrize("kind,var", _registry_params())
+def test_scheme_hot_leaf_placement_replicated(kind, var):
+    """The hot block is O(hot_rows), read by every data shard — it must
+    replicate (P()) while the cold code tables stay row-sharded."""
+    from jax.sharding import PartitionSpec as P
+    cfg = dataclasses.replace(_cfg(kind, var), hot_rows=8)
+    scheme = get_scheme(cfg)
+    if not scheme.supports_sharded_codes:
+        return
+    specs = scheme.artifact_shard_specs()
+    assert tuple(specs["hot"]) == ()
+    assert any(tuple(s)[:1] == ("model",)
+               for s in jax.tree.leaves(specs,
+                                        is_leaf=lambda x: isinstance(x, P)))
+
+
+def test_hot_rows_config_validation():
+    with pytest.raises(ValueError, match="hot_rows"):
+        EmbeddingConfig(vocab_size=8, dim=4, hot_rows=9)
+    with pytest.raises(ValueError, match="hot_rows"):
+        EmbeddingConfig(vocab_size=8, dim=4, hot_rows=-1)
+    # the whole vocab is a legal (if extreme) cache
+    cfg = EmbeddingConfig(vocab_size=8, dim=4, hot_rows=8)
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    assert art["hot"].shape == (8, 4)
+
+
 # ------------------------------------------------------------- registry
 
 def test_unknown_kind_error_lists_registered_schemes():

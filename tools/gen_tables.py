@@ -70,11 +70,21 @@ def support_matrix():
         except Exception:
             return "—"
 
+    def probe_hot_rows(cfg):
+        """End-to-end check of the hot-row decode-ahead hook
+        (Scheme.precompute_hot_rows, DESIGN.md §9): export with
+        hot_rows must attach a spec-shaped dense block."""
+        import dataclasses
+        hcfg = dataclasses.replace(cfg, hot_rows=8)
+        e = Embedding(hcfg)
+        hot = e.export(e.init(jax.random.PRNGKey(0)))["hot"]
+        assert tuple(hot.shape) == (8, hcfg.dim), hot.shape
+
     notes = {"pallas": "TPU hw", "xla": "any", "interpret": "any, slow"}
     lines = ["| scheme | " + " | ".join(
         f"`{b}` ({notes.get(b, 'any')})" for b in backends)
-        + " | single-device | sharded codes |",
-        "|---" * (len(backends) + 3) + "|"]
+        + " | single-device | sharded codes | hot rows |",
+        "|---" * (len(backends) + 4) + "|"]
     for label, kind, var in schemes:
         cfg = scheme_class(kind).probe_config(var)
         emb = Embedding(cfg)
@@ -86,6 +96,7 @@ def support_matrix():
         cells.append("✓" if supports_sharding(kind, var)
                      and probe(lambda: quantized_artifact_specs(cfg)) == "✓"
                      else "—")
+        cells.append(probe(lambda: probe_hot_rows(cfg)))
         lines.append(f"| {label} | " + " | ".join(cells) + " |")
 
     # retrieval index kinds (src/repro/retrieval/, DESIGN.md §8):
