@@ -35,6 +35,66 @@ def zipf_ids(rng: np.random.Generator, n: int, vocab: int,
     return x.astype(np.int64)
 
 
+def open_loop_arrivals(rate_rps: float, duration_s: float = None,
+                       n_requests: int = None, process: str = "poisson",
+                       seed: int = 0) -> np.ndarray:
+    """Arrival timestamps (seconds from stream start) for an OPEN-LOOP
+    load generator: requests arrive on the generator's clock at a
+    target ``rate_rps``, independent of how fast the server answers.
+
+    A closed-loop driver (fire, wait, fire) implicitly slows its
+    offered load whenever the server lags, so its measured latency
+    hides exactly the queueing delay a latency SLO is about
+    (coordinated omission); benchmarking "sustained throughput AT a
+    p99" requires this open-loop shape
+    (``launch/async_engine.drive_open_loop``).
+
+    Exactly one of ``duration_s`` / ``n_requests`` sets the stream
+    length (``duration_s`` implies ``round(rate_rps * duration_s)``
+    requests — rate-driven, not count-driven).  ``process``:
+
+    * ``"poisson"`` — i.i.d. exponential interarrivals (memoryless,
+      the standard model of independent user traffic; bursts happen,
+      which is what stresses a deadline-batched queue);
+    * ``"deterministic"`` — fixed ``1/rate`` spacing (worst-case-free
+      baseline; isolates service time from arrival burstiness).
+    """
+    if not rate_rps > 0:
+        raise ValueError(f"rate_rps must be > 0, got {rate_rps}")
+    if (duration_s is None) == (n_requests is None):
+        raise ValueError("pass exactly one of duration_s / n_requests")
+    if n_requests is None:
+        n_requests = int(round(rate_rps * duration_s))
+    if n_requests < 1:
+        raise ValueError(
+            f"stream is empty: rate {rate_rps}/s over {duration_s}s")
+    if process == "poisson":
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(1.0 / rate_rps, n_requests)
+        return np.cumsum(gaps)
+    if process == "deterministic":
+        return (1.0 + np.arange(n_requests)) / rate_rps
+    raise ValueError(f"unknown arrival process {process!r} "
+                     f"(want 'poisson' or 'deterministic')")
+
+
+def zipf_open_loop_stream(vocab: int, rate_rps: float, duration_s: float,
+                          req_batch: int, zipf_a: float = 1.2,
+                          process: str = "poisson", seed: int = 0
+                          ) -> Tuple[np.ndarray, List[np.ndarray]]:
+    """Arrival-rate-driven power-law serving load: the open-loop
+    arrival schedule of :func:`open_loop_arrivals` paired with
+    Zipf(``zipf_a``) id batches of random size 1..``req_batch`` from
+    :func:`zipf_request_stream`.  Returns ``(arrivals, requests)`` of
+    equal length — the input :func:`launch.async_engine.drive_open_loop`
+    replays against the async engine."""
+    arrivals = open_loop_arrivals(rate_rps, duration_s=duration_s,
+                                  process=process, seed=seed)
+    requests = zipf_request_stream(vocab, len(arrivals), req_batch,
+                                   zipf_a=zipf_a, seed=seed + 1)
+    return arrivals, requests
+
+
 def zipf_request_stream(vocab: int, n_requests: int, req_batch: int,
                         zipf_a: float = 1.2, seed: int = 0
                         ) -> List[np.ndarray]:

@@ -1,0 +1,472 @@
+"""Asynchronous latency-SLO serving front-end (DESIGN.md §10).
+
+The synchronous engines (`launch/engine.py`) answer "how many lookups
+per second can one fused call sustain"; production serving must answer
+"what latency does a REQUEST see while traffic arrives on its own
+clock".  This module adds the missing layer, shaped like the
+worker/actor split of long-lived serving systems (a dedicated worker
+owns the device-resident state and a submission thread never touches
+device work):
+
+  * :class:`AsyncServingEngine` wraps any micro-batch engine
+    (``ServingEngine`` or ``RetrievalEngine``).  ``submit()`` appends
+    to a host-side queue and returns a ``Future`` immediately; a
+    dedicated flush thread runs the fused device call and resolves the
+    futures.  Submitters NEVER block on device work.
+  * **Deadline-based adaptive batching** — a flush fires when the
+    queue reaches a block's worth of rows ("full") OR when the oldest
+    queued request has waited ``max_wait_us`` ("deadline"), whichever
+    comes first.  The trigger logic is a pure state machine
+    (:class:`FlushPolicy`) so tests drive it with a fake clock.
+  * **Per-request latency** — submit→result, recorded into a
+    fixed log-bucket :class:`~repro.launch.latency.LatencyHistogram`
+    (O(1)/request, mergeable) on :class:`AsyncEngineStats`, which
+    extends ``EngineStats`` with p50/p99/p999 readouts.
+  * **Background hot-row refresh** — EMA re-ranking and the O(C) block
+    re-decode run on a refresher thread; the rebuilt cache state is
+    swapped in atomically between flushes
+    (``ServingEngine.prepare_hot_rows`` / ``install_hot_rows``), so a
+    refresh never stalls the flush path.
+  * :func:`drive_open_loop` replays an arrival schedule open-loop
+    (submission times come from the generator's clock, not from
+    completions), which is what makes a measured p99 honest — a
+    closed-loop driver would slow its offered load whenever the engine
+    lags and hide exactly the queueing delay an SLO is about
+    (coordinated omission).
+
+The synchronous API is untouched: the wrapper only calls the inner
+engine's public ``submit``/``flush`` from its single flush thread.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.launch.engine import EngineStats, ServingEngine
+from repro.launch.latency import LatencyHistogram
+
+__all__ = ["AsyncEngineStats", "AsyncServingEngine", "FlushPolicy",
+           "drive_open_loop"]
+
+
+class FlushPolicy:
+    """Deadline-based adaptive-batching trigger, as a pure state
+    machine over ``(pending rows, oldest submit time, now)``.
+
+    The flush thread owns one instance; tests drive it directly with a
+    fake clock.  Transitions:
+
+      * ``on_submit(n_rows, now)`` — rows join the queue; the deadline
+        clock starts when the queue goes non-empty.
+      * ``decision(now, forced=False)`` — ``"full"`` when pending rows
+        reach ``block_rows`` (a whole kernel block is ready: waiting
+        longer adds latency but no batching efficiency), else
+        ``"deadline"`` once the OLDEST request has waited
+        ``max_wait_s`` (its latency budget is being spent on idling),
+        else ``"drain"`` when a flush is being forced (drain/close),
+        else ``None`` (keep waiting).  Full wins over deadline: both
+        true means the queue filled during the wait, and the flush is
+        the same either way — the label records why it fired.
+      * ``timeout(now)`` — how long the flush thread may sleep before
+        the deadline can possibly fire (None while the queue is empty).
+      * ``on_flush(now)`` — the queue was taken; reset.
+    """
+
+    def __init__(self, block_rows: int, max_wait_s: float):
+        if block_rows < 1:
+            raise ValueError(f"block_rows must be >= 1, got {block_rows}")
+        if not max_wait_s >= 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        self.block_rows = int(block_rows)
+        self.max_wait_s = float(max_wait_s)
+        self.rows = 0
+        self.oldest: Optional[float] = None
+
+    def on_submit(self, n_rows: int, now: float) -> None:
+        if self.rows == 0:
+            self.oldest = now
+        self.rows += int(n_rows)
+
+    def decision(self, now: float, forced: bool = False) -> Optional[str]:
+        if self.rows <= 0:
+            return None
+        if self.rows >= self.block_rows:
+            return "full"
+        if now - self.oldest >= self.max_wait_s:
+            return "deadline"
+        if forced:
+            return "drain"
+        return None
+
+    def timeout(self, now: float) -> Optional[float]:
+        if self.rows <= 0:
+            return None
+        return max(0.0, self.oldest + self.max_wait_s - now)
+
+    def on_flush(self, now: float) -> None:
+        self.rows = 0
+        self.oldest = None
+
+
+@dataclasses.dataclass
+class AsyncEngineStats(EngineStats):
+    """``EngineStats`` plus the async front-end's request-level view.
+
+    The wrapper installs ONE instance as the inner engine's ``stats_``,
+    so the inherited counters (lookups, flushes, device ``seconds``,
+    hot-cache hits) accumulate exactly as in synchronous serving, and
+    the async fields ride along:
+
+      * ``latency`` — submit→result histogram (one sample per request);
+        ``p50_ms``/``p99_ms``/``p999_ms`` read it (NaN when empty);
+      * ``flushes_full`` / ``flushes_deadline`` / ``flushes_drain`` —
+        which trigger fired each flush (their sum == ``flushes``);
+      * ``wall_seconds`` — open-loop stream wall time (set by
+        :func:`drive_open_loop`; device ``seconds`` only counts time
+        inside fused calls), feeding ``sustained_lookups_per_s``.
+
+    Every derived readout is a property, so ``as_dict()`` exports it
+    through the base class's property registry with no re-listing.
+    """
+    submitted: int = 0
+    flushes_full: int = 0
+    flushes_deadline: int = 0
+    flushes_drain: int = 0
+    wall_seconds: float = 0.0
+    latency: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)
+
+    @property
+    def p50_ms(self) -> float:
+        return self.latency.p50_ms
+
+    @property
+    def p99_ms(self) -> float:
+        return self.latency.p99_ms
+
+    @property
+    def p999_ms(self) -> float:
+        return self.latency.p999_ms
+
+    @property
+    def sustained_lookups_per_s(self) -> float:
+        """Completed lookups over stream WALL time (queueing included)
+        — the open-loop throughput a latency SLO is stated against."""
+        return (self.lookups / self.wall_seconds
+                if self.wall_seconds > 0 else 0.0)
+
+
+class AsyncServingEngine:
+    """Asynchronous front-end over a micro-batch engine.
+
+    Parameters
+    ----------
+    engine:
+        A ``ServingEngine`` or ``RetrievalEngine`` (anything with the
+        ``_MicroBatchEngine`` submit/flush contract).  The wrapper
+        becomes its only caller; its ``stats_`` is replaced with a
+        shared :class:`AsyncEngineStats`.
+    max_wait_us:
+        Deadline for the oldest queued request before a partial flush
+        fires.  The knob trades tail latency against batching: 0 makes
+        every submit flush-eligible immediately (smallest batches,
+        lowest queueing delay), large values converge on block-full
+        batching (best device efficiency, worst p99 at low rates).
+    max_block_rows:
+        Row threshold for the "full" trigger; defaults to the inner
+        engine's ``pad_multiple`` (one kernel block per data shard) —
+        beyond that a flush pads to the next block anyway, so waiting
+        buys nothing.
+    refresh_every:
+        When > 0 (ServingEngine with a hot-row cache): every N flushes
+        the refresher thread re-ranks the EMA counters, re-decodes the
+        hot block OFF the flush path, and swaps it in between flushes.
+        The inner engine's own in-flush auto-refresh is disabled and
+        EMA tracking enabled.
+    clock:
+        Monotonic time source (injectable for deterministic tests).
+    """
+
+    def __init__(self, engine, max_wait_us: float = 1000.0,
+                 max_block_rows: Optional[int] = None,
+                 refresh_every: int = 0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.engine = engine
+        self.clock = clock
+        self.policy = FlushPolicy(
+            block_rows=(engine.pad_multiple if max_block_rows is None
+                        else max_block_rows),
+            max_wait_s=float(max_wait_us) * 1e-6)
+        self.stats_ = AsyncEngineStats()
+        engine.stats_ = self.stats_      # shared: inner flush accumulates
+        self.refresh_every = int(refresh_every)
+        if self.refresh_every:
+            if not (isinstance(engine, ServingEngine) and engine.hot_rows):
+                raise ValueError(
+                    "refresh_every needs a ServingEngine with a hot-row "
+                    "cache (hot_rows > 0)")
+            # the refresher thread owns the cadence now; in-flush
+            # refresh would put the O(C) re-decode back ON the flush
+            # path, the exact thing this engine exists to avoid
+            engine.hot_refresh_every = 0
+            engine.hot_track_freq = True
+
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)   # flush thread waits
+        self._idle = threading.Condition(self._lock)   # drain/refresh wait
+        self._pending: List[tuple] = []    # (request, Future, t_submit)
+        self._inflight = False
+        self._force = False
+        self._stop = False
+        self._flusher = threading.Thread(
+            target=self._flush_loop, name="async-engine-flush", daemon=True)
+        self._refresh_evt = threading.Event()
+        self._refresher = None
+        if self.refresh_every:
+            self._refresher = threading.Thread(
+                target=self._refresh_loop, name="async-engine-refresh",
+                daemon=True)
+            self._refresher.start()
+        self._flusher.start()
+
+    # ------------------------------------------------------------ submit
+    def submit(self, request) -> Future:
+        """Enqueue one request; returns a Future resolving to the
+        request's result rows — host (numpy) arrays, value-identical to
+        what the synchronous engine's flush returns for the same
+        request.  Never blocks on device work: the submit path is a
+        numpy coerce + a host-side queue append (one device upload
+        happens per FLUSH, for the whole concatenated batch, on the
+        flush thread)."""
+        arr = self.engine._coerce_host(request)
+        fut: Future = Future()
+        now = self.clock()
+        with self._work:
+            if self._stop:
+                raise RuntimeError("AsyncServingEngine is closed")
+            self._pending.append((arr, fut, now))
+            self.policy.on_submit(arr.shape[0], now)
+            self.stats_.submitted += 1
+            self._work.notify()
+        return fut
+
+    def lookup(self, request, timeout: Optional[float] = None):
+        """Synchronous convenience: ``submit(...).result()``."""
+        return self.submit(request).result(timeout=timeout)
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self.policy.rows
+
+    # ------------------------------------------------------- flush thread
+    def _flush_loop(self) -> None:
+        while True:
+            with self._work:
+                reason = None
+                while reason is None:
+                    now = self.clock()
+                    reason = self.policy.decision(
+                        now, forced=self._force or self._stop)
+                    if reason is None:
+                        if self._stop:
+                            return           # closed and drained
+                        self._work.wait(self.policy.timeout(now))
+                # take whole requests until a block's worth of rows is
+                # reached — NOT the entire backlog.  An uncapped take
+                # after any stall produces an arbitrary padded shape,
+                # and every new padded shape is an XLA recompile on the
+                # flush path (hundreds of ms), which grows the backlog
+                # further; bounded takes keep the padded shapes to a
+                # couple of warmable sizes and drain a backlog as a
+                # sequence of steady-state flushes instead.
+                k, rows = 0, 0
+                while k < len(self._pending) and rows < self.policy.block_rows:
+                    rows += self._pending[k][0].shape[0]
+                    k += 1
+                batch, self._pending = self._pending[:k], self._pending[k:]
+                if self._pending:
+                    self.policy.rows -= rows
+                    self.policy.oldest = self._pending[0][2]
+                else:
+                    self.policy.on_flush(self.clock())
+                field = {"full": "flushes_full",
+                         "deadline": "flushes_deadline",
+                         "drain": "flushes_drain"}[reason]
+                setattr(self.stats_, field,
+                        getattr(self.stats_, field) + 1)
+                self._inflight = True
+            # device work OUTSIDE the lock: submitters keep enqueueing.
+            # The whole batch is assembled host-side and goes through
+            # the inner engine as ONE padded call (``run_flat``): one
+            # host->device upload, one fused call, one device->host
+            # transfer — then the result is scattered back to futures
+            # as zero-copy numpy views.  The per-request alternative
+            # (inner submit per request) costs an XLA dispatch per
+            # request on the coerce AND on the result split, which
+            # alone is milliseconds of wall time per flush.
+            err, results = None, []
+            try:
+                sizes = [arr.shape[0] for arr, _, _ in batch]
+                flat = (batch[0][0] if len(batch) == 1 else
+                        np.concatenate([arr for arr, _, _ in batch]))
+                n_valid = int(flat.shape[0])
+                out = self.engine.run_flat(flat, n_valid)
+                # the inner engine saw one request; the front-end served
+                # len(batch) of them — keep the shared counter honest
+                self.stats_.requests += len(batch) - 1
+                leaves, treedef = jax.tree_util.tree_flatten(out)
+                np_leaves = [np.asarray(leaf)[:n_valid] for leaf in leaves]
+                offs = np.cumsum([0] + sizes)
+                results = [
+                    treedef.unflatten(
+                        [leaf[offs[i]:offs[i + 1]] for leaf in np_leaves])
+                    for i in range(len(sizes))]
+            except BaseException as e:         # noqa: BLE001 — forwarded
+                err = e
+            done = self.clock()
+            with self._idle:
+                if err is None:
+                    for _, _, t0 in batch:
+                        self.stats_.latency.record(done - t0)
+                self._inflight = False
+                self._idle.notify_all()
+            # resolve futures outside the lock (callbacks run here)
+            if err is None:
+                for (_, fut, _), res in zip(batch, results):
+                    fut.set_result(res)
+            else:
+                for _, fut, _ in batch:
+                    fut.set_exception(err)
+            if (err is None and self.refresh_every
+                    and self.stats_.flushes % self.refresh_every == 0):
+                self._refresh_evt.set()
+
+    # --------------------------------------------------- refresher thread
+    def _refresh_loop(self) -> None:
+        while True:
+            self._refresh_evt.wait()
+            self._refresh_evt.clear()
+            if self._stop:
+                return
+            self._do_refresh()
+
+    def _do_refresh(self) -> None:
+        """One background refresh: EMA re-rank, re-decode the block off
+        the flush path, swap it in between flushes.  The EMA counters
+        are read without a lock — the flush thread updates them
+        concurrently, and the ranking is a traffic heuristic, not an
+        invariant; the INSTALL is what must be atomic, and it happens
+        under the lock while no flush is in flight."""
+        eng = self.engine
+        ids = eng.select_hot_ids()
+        if ids is None:
+            return                       # no traffic observed yet
+        with self._lock:
+            self.stats_.hot_refreshes += 1
+        if np.array_equal(ids, eng._hot_ids):
+            return                       # steady state: skip the decode
+        state = eng.prepare_hot_rows(ids)     # device work, NOT the lock
+        with self._idle:
+            while self._inflight and not self._stop:
+                self._idle.wait()
+            eng.install_hot_rows(state)
+
+    def refresh_now(self, wait: bool = False) -> None:
+        """Trigger a background refresh immediately (testing/ops hook).
+        With ``wait=True`` the refresh runs on the calling thread
+        instead — deterministic, still off the flush path."""
+        if not self.refresh_every and not (
+                isinstance(self.engine, ServingEngine)
+                and self.engine.hot_rows):
+            raise ValueError("no hot-row cache to refresh")
+        if wait:
+            self._do_refresh()
+        else:
+            self._refresh_evt.set()
+
+    # -------------------------------------------------------------- drain
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Force-flush and block until every submitted request has
+        resolved.  Returns False on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._idle:
+            self._force = True
+            self._work.notify_all()
+            try:
+                while self._pending or self._inflight:
+                    left = (None if deadline is None
+                            else deadline - time.monotonic())
+                    if left is not None and left <= 0:
+                        return False
+                    self._idle.wait(left)
+            finally:
+                self._force = False
+        return True
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> AsyncEngineStats:
+        return self.stats_
+
+    def reset_stats(self) -> None:
+        """Fresh counters/histogram (e.g. after a warmup pass)."""
+        with self._lock:
+            self.stats_ = AsyncEngineStats()
+            self.engine.stats_ = self.stats_
+
+    # ------------------------------------------------------------ closing
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain, then stop both threads.  Idempotent."""
+        self.drain(timeout=timeout)
+        with self._work:
+            self._stop = True
+            self._work.notify_all()
+        self._refresh_evt.set()          # wake the refresher to exit
+        self._flusher.join(timeout)
+        if self._refresher is not None:
+            self._refresher.join(timeout)
+
+    def __enter__(self) -> "AsyncServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def drive_open_loop(engine: AsyncServingEngine,
+                    requests: Sequence[np.ndarray],
+                    arrivals: Sequence[float],
+                    sleep: Callable[[float], None] = time.sleep
+                    ) -> AsyncEngineStats:
+    """Replay an arrival schedule through the async engine, open-loop.
+
+    ``arrivals[i]`` (seconds from stream start,
+    ``data/synthetic.open_loop_arrivals``) is when ``requests[i]`` is
+    submitted — on the GENERATOR's clock, never gated on completions.
+    If the engine falls behind, requests queue up and their measured
+    latency grows; a closed-loop driver would instead slow its offered
+    load and underreport exactly the queueing delay an SLO is about
+    (coordinated omission).  After the last submission the engine is
+    drained; ``wall_seconds`` on the returned stats covers
+    first-submit → drain-complete, so ``sustained_lookups_per_s`` is
+    honest open-loop throughput."""
+    if len(requests) != len(arrivals):
+        raise ValueError(f"{len(requests)} requests vs {len(arrivals)} "
+                         f"arrival times")
+    clock = engine.clock
+    t0 = clock()
+    for req, due in zip(requests, arrivals):
+        delay = due - (clock() - t0)
+        if delay > 0:
+            sleep(delay)
+        engine.submit(req)
+    engine.drain()
+    st = engine.stats()
+    st.wall_seconds += clock() - t0
+    return st

@@ -66,10 +66,28 @@ class EngineStats:
         """Fraction of real lookups served from the hot-row cache."""
         return self.hot_hits / self.lookups if self.lookups else 0.0
 
+    @classmethod
+    def derived_metrics(cls) -> List[str]:
+        """Every derived (computed) metric this stats class exports:
+        the properties defined anywhere on the class — ONE registry, so
+        subclasses adding derived fields (e.g. the async engine's
+        latency percentiles) are exported by ``as_dict`` without
+        re-listing them by hand."""
+        return sorted({name for klass in cls.__mro__
+                       for name, val in vars(klass).items()
+                       if isinstance(val, property)})
+
     def as_dict(self) -> Dict:
-        return {**dataclasses.asdict(self),
-                "lookups_per_s": self.lookups_per_s,
-                "hit_rate": self.hit_rate}
+        # counters first (a field with its own as_dict — e.g. the async
+        # stats' latency histogram — exports through it), then every
+        # registered derived metric, including subclass additions
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            out[f.name] = v.as_dict() if hasattr(v, "as_dict") else v
+        for name in self.derived_metrics():
+            out[name] = getattr(self, name)
+        return out
 
 
 class _MicroBatchEngine:
@@ -94,6 +112,14 @@ class _MicroBatchEngine:
 
     # --------------------------------------------------------- hooks
     def _coerce(self, request) -> jax.Array:
+        raise NotImplementedError
+
+    def _coerce_host(self, request) -> np.ndarray:
+        """Host-side (numpy) twin of ``_coerce`` — same shape/dtype
+        rules, NO device upload.  The async front-end
+        (`launch/async_engine.py`) queues requests host-side and ships
+        one concatenated array per flush; per-request device arrays
+        would cost a dispatch each on the submit path."""
         raise NotImplementedError
 
     def _run(self, flat: jax.Array):
@@ -152,6 +178,42 @@ class _MicroBatchEngine:
                   else [leaf[:n_rows]] for leaf in leaves]
         return [treedef.unflatten([p[i] for p in pieces])
                 for i in range(n_req)]
+
+    def run_flat(self, flat: np.ndarray, n_valid: Optional[int] = None):
+        """One fused call over a HOST-assembled flat batch — the async
+        front-end's flush path (`launch/async_engine.py`); the queueing
+        ``submit``/``flush`` pair above is unchanged.
+
+        Padding happens in numpy BEFORE the single upload: the
+        device-side padding in ``flush`` re-dispatches (and on a fresh
+        length, recompiles) for every distinct unpadded batch size,
+        which on a latency-SLO path turns each odd-sized micro-batch
+        into tens of milliseconds of XLA work.  Host padding is a
+        memcpy, and the padded lengths collapse to a couple of stable,
+        warmable shapes.  Returns the RAW result pytree (padded rows
+        included) — callers slice ``[:n_valid]`` host-side, where it is
+        free.  Stats accumulate as one request of ``n_valid`` lookups.
+        """
+        n_valid = int(flat.shape[0] if n_valid is None else n_valid)
+        pad = (-n_valid) % self.pad_multiple
+        if pad:
+            widths = [(0, pad)] + [(0, 0)] * (flat.ndim - 1)
+            flat = np.pad(flat, widths)    # zero rows are always valid
+        dev = jnp.asarray(flat)
+        self._n_valid = n_valid        # lets _run tell rows from padding
+        t0 = time.perf_counter()
+        if self.mesh is not None:
+            with self.mesh:
+                out = self._run(dev)
+        else:
+            out = self._run(dev)
+        jax.block_until_ready(out)
+        self.stats_.seconds += time.perf_counter() - t0
+        self.stats_.requests += 1
+        self.stats_.lookups += n_valid
+        self.stats_.padded_lookups += int(dev.shape[0])
+        self.stats_.flushes += 1
+        return out
 
     def serve_stream(self, requests: Sequence[np.ndarray]) -> EngineStats:
         """Drive a request stream through the micro-batcher; flush
@@ -326,7 +388,14 @@ class ServingEngine(_MicroBatchEngine):
             out = self._serve(self.artifact, ids)
         return out[:n]
 
-    def _set_hot_rows(self, ids_np: np.ndarray, block=None) -> None:
+    def prepare_hot_rows(self, ids_np: np.ndarray, block=None) -> tuple:
+        """Build (but do not install) the cache state for an id set:
+        decode the block through the engine's own serve path, place it
+        device-resident (replicated under a mesh), and compute the
+        id->slot map.  Pure with respect to the engine's live cache
+        fields, so a background thread can run it concurrently with
+        flushes and hand the result to :meth:`install_hot_rows` for an
+        atomic swap (the async engine's refresh path, DESIGN.md §10)."""
         ids_np = np.asarray(ids_np, np.int64)
         if block is None:
             block = self._decode_ids(ids_np)
@@ -338,27 +407,42 @@ class ServingEngine(_MicroBatchEngine):
                                    NamedSharding(self.mesh, P()))
         else:
             block = jax.device_put(jnp.asarray(block))
-        self._hot_block = block
         slot = np.full(self.emb.cfg.vocab_size, -1, np.int32)
         slot[ids_np] = np.arange(len(ids_np), dtype=np.int32)
-        self._hot_slot = slot
-        self._hot_ids = ids_np
+        return block, slot, ids_np
+
+    def install_hot_rows(self, state: tuple) -> None:
+        """Swap a prepared cache state in.  Three reference assignments
+        — effectively atomic under the GIL, and the flush path reads
+        each field once — so a refresh never blocks or tears a flush."""
+        self._hot_block, self._hot_slot, self._hot_ids = state
+
+    def _set_hot_rows(self, ids_np: np.ndarray, block=None) -> None:
+        self.install_hot_rows(self.prepare_hot_rows(ids_np, block=block))
+
+    def select_hot_ids(self):
+        """The top ``hot_rows`` ids by the EMA frequency counters (ties
+        broken by id, deterministically), or None before any traffic is
+        observed."""
+        if self._freq is None:
+            return None
+        order = np.lexsort((np.arange(len(self._freq)), -self._freq))
+        return np.sort(order[:self.hot_rows])
 
     def refresh_hot_rows(self, hot_ids=None) -> np.ndarray:
         """Re-point the cache at the observed-hottest ids and re-decode
         the block through the engine's own serve path.
 
         ``hot_ids`` defaults to the top ``hot_rows`` ids by the EMA
-        frequency counters (ties broken by id, deterministically); an
-        explicit id set overrides.  Before any traffic is observed the
-        current set is kept.  Returns the active hot id set."""
+        frequency counters (:meth:`select_hot_ids`); an explicit id set
+        overrides.  Before any traffic is observed the current set is
+        kept.  Returns the active hot id set."""
         if not self.hot_rows:
             raise ValueError("hot-row cache disabled (hot_rows=0)")
         if hot_ids is None:
-            if self._freq is None:
+            hot_ids = self.select_hot_ids()
+            if hot_ids is None:
                 return self._hot_ids       # no traffic observed yet
-            order = np.lexsort((np.arange(len(self._freq)), -self._freq))
-            hot_ids = np.sort(order[:self.hot_rows])
         hot_ids = np.asarray(hot_ids, np.int64)
         self.stats_.hot_refreshes += 1
         if np.array_equal(hot_ids, self._hot_ids):
@@ -371,6 +455,9 @@ class ServingEngine(_MicroBatchEngine):
     # --------------------------------------------------------- serve
     def _coerce(self, ids) -> jax.Array:
         return jnp.asarray(ids, jnp.int32).reshape(-1)
+
+    def _coerce_host(self, ids) -> np.ndarray:
+        return np.asarray(ids, np.int32).reshape(-1)
 
     def _run(self, flat: jax.Array) -> jax.Array:
         if self._hot_block is None:
@@ -416,6 +503,15 @@ class ServingEngine(_MicroBatchEngine):
     def flush(self) -> List:
         out = super().flush()
         if (out and self._hot_block is not None and self.hot_refresh_every
+                and self.stats_.flushes % self.hot_refresh_every == 0):
+            self.refresh_hot_rows()
+        return out
+
+    def run_flat(self, flat: np.ndarray, n_valid: Optional[int] = None):
+        out = super().run_flat(flat, n_valid)
+        # same in-flush refresh cadence as flush(); the async front-end
+        # sets hot_refresh_every=0 and refreshes on its own thread
+        if (self._hot_block is not None and self.hot_refresh_every
                 and self.stats_.flushes % self.hot_refresh_every == 0):
             self.refresh_hot_rows()
         return out
@@ -489,6 +585,10 @@ class RetrievalEngine(_MicroBatchEngine):
 
     def _coerce(self, queries) -> jax.Array:
         q = jnp.asarray(queries, jnp.float32)
+        return q[None] if q.ndim == 1 else q
+
+    def _coerce_host(self, queries) -> np.ndarray:
+        q = np.asarray(queries, np.float32)
         return q[None] if q.ndim == 1 else q
 
     def _run(self, flat: jax.Array):

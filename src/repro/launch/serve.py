@@ -15,6 +15,15 @@ reports lookups/second:
     PYTHONPATH=src python -m repro.launch.serve --arch deepfm --smoke \
         --engine --requests 200 --req-batch 64
 
+``--async`` wraps the engine in the latency-SLO front-end
+(:class:`repro.launch.async_engine.AsyncServingEngine`): an open-loop
+Zipf stream offered at ``--arrival-rate`` req/s, deadline-batched
+flushes (``--max-wait-us``), and a p50/p99/p999 latency report judged
+against ``--slo-ms``:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch deepfm --smoke \
+        --engine --async --arrival-rate 500 --max-wait-us 1000 --slo-ms 5
+
 ``--mesh data=2,model=2`` serves the engine's artifact *sharded*
 (DESIGN.md §6): codes row-sharded over the ``model`` axis, codebooks
 replicated, one shard_map decode fanned across the mesh per flush.
@@ -173,10 +182,49 @@ def serve_ctr(cfg, batch: int):
           f"scores mean {float(jnp.mean(scores)):.4f}")
 
 
+def serve_async_engine(engine, vocab_size: int, req_batch: int,
+                       max_wait_us: float, arrival_rate: float,
+                       slo_ms: float, duration_s: float,
+                       zipf_a: float, hot_refresh: int = 0):
+    """Open-loop latency demo of the async front-end (DESIGN.md §10):
+    wrap the engine, replay a Zipf arrival schedule at ``arrival_rate``
+    requests/s, report the latency histogram and the SLO verdict."""
+    from repro.data.synthetic import zipf_open_loop_stream
+    from repro.launch.async_engine import (AsyncServingEngine,
+                                           drive_open_loop)
+    arrivals, reqs = zipf_open_loop_stream(
+        vocab_size, rate_rps=arrival_rate, duration_s=duration_s,
+        req_batch=req_batch, zipf_a=zipf_a)
+    with AsyncServingEngine(engine, max_wait_us=max_wait_us,
+                            refresh_every=hot_refresh) as aeng:
+        # warm pass: pay every padded-shape jit trace before measuring
+        # (an open-loop p99 with a compile in it measures the compiler)
+        drive_open_loop(aeng, reqs, arrivals)
+        aeng.drain()
+        aeng.reset_stats()
+        st = drive_open_loop(aeng, reqs, arrivals)
+    offered = len(reqs) / arrivals[-1]
+    print(f"async engine: {st.requests} requests ({st.lookups} lookups) "
+          f"open-loop at {offered:,.0f} req/s over "
+          f"{st.wall_seconds:.2f}s wall -> "
+          f"{st.sustained_lookups_per_s:,.0f} lookups/s sustained")
+    print(f"  flush triggers: {st.flushes_full} block-full / "
+          f"{st.flushes_deadline} deadline({max_wait_us:.0f}us) / "
+          f"{st.flushes_drain} drain; device time "
+          f"{st.seconds:.3f}s of {st.wall_seconds:.2f}s wall")
+    print(f"  latency p50 {st.p50_ms:.2f} ms | p99 {st.p99_ms:.2f} ms | "
+          f"p999 {st.p999_ms:.2f} ms")
+    ok = st.p99_ms <= slo_ms
+    print(f"  SLO p99 <= {slo_ms:.1f} ms: {'MET' if ok else 'MISSED'}")
+    return st
+
+
 def serve_engine(family, cfg, n_requests: int, req_batch: int,
                  backend=None, max_queue: int = 4096, mesh_spec=None,
                  hot_rows: int = 0, hot_refresh: int = 0,
-                 zipf_a: float = 0.0):
+                 zipf_a: float = 0.0, use_async: bool = False,
+                 max_wait_us: float = 1000.0, arrival_rate: float = 500.0,
+                 slo_ms: float = 5.0, duration_s: float = 2.0):
     """Request-stream demo of the micro-batching engine: N requests of
     random size <= req_batch against the arch's main embedding table.
 
@@ -237,6 +285,14 @@ def serve_engine(family, cfg, n_requests: int, req_batch: int,
               f"({hot_mb:.2f} MB dense, replicated)"
               + (f", refresh every {hot_refresh} flushes"
                  if hot_refresh else ""))
+    if use_async:
+        return serve_async_engine(engine, ecfg.vocab_size, req_batch,
+                                  max_wait_us=max_wait_us,
+                                  arrival_rate=arrival_rate,
+                                  slo_ms=slo_ms, duration_s=duration_s,
+                                  zipf_a=zipf_a or 1.2,
+                                  hot_refresh=(hot_refresh
+                                               if hot_rows else 0))
     if zipf_a:
         st = drive_zipf_stream(engine, ecfg.vocab_size, n_requests,
                                req_batch, zipf_a=zipf_a)
@@ -287,6 +343,22 @@ def main():
     ap.add_argument("--zipf-a", type=float, default=0.0,
                     help="drive the engine with Zipf(a) power-law ids "
                          "instead of uniform (needs a > 1.0)")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="serve through the AsyncServingEngine front-end "
+                         "(DESIGN.md §10): open-loop arrival-rate-driven "
+                         "stream, deadline-batched flushes, p50/p99/p999 "
+                         "latency report against --slo-ms")
+    ap.add_argument("--max-wait-us", type=float, default=1000.0,
+                    help="async: flush deadline — a partial batch fires "
+                         "once its oldest request has waited this long")
+    ap.add_argument("--arrival-rate", type=float, default=500.0,
+                    help="async: open-loop offered load, requests/second "
+                         "(Poisson interarrivals)")
+    ap.add_argument("--slo-ms", type=float, default=5.0,
+                    help="async: p99 latency SLO the report is judged "
+                         "against")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="async: measured stream length in seconds")
     ap.add_argument("--kernel-backend", default=None,
                     choices=KERNEL_BACKENDS)
     ap.add_argument("--mesh", default=None, metavar="data=2,model=2",
@@ -312,11 +384,19 @@ def main():
     if args.zipf_a and args.zipf_a <= 1.0:
         ap.error(f"--zipf-a must be > 1.0 (the truncated power law "
                  f"diverges at a <= 1), got {args.zipf_a}")
+    if args.use_async and not args.engine:
+        ap.error("--async requires --engine")
+    if args.use_async and args.arrival_rate <= 0:
+        ap.error(f"--arrival-rate must be > 0 (open-loop load is "
+                 f"rate-driven), got {args.arrival_rate}")
     if args.engine:
         serve_engine(family, cfg, args.requests, args.req_batch,
                      backend=args.kernel_backend, mesh_spec=args.mesh,
                      hot_rows=args.hot_rows, hot_refresh=args.hot_refresh,
-                     zipf_a=args.zipf_a)
+                     zipf_a=args.zipf_a, use_async=args.use_async,
+                     max_wait_us=args.max_wait_us,
+                     arrival_rate=args.arrival_rate, slo_ms=args.slo_ms,
+                     duration_s=args.duration)
     elif family == "lm":
         serve_lm(cfg, args.batch, args.prompt_len, args.decode_steps)
     elif cfg.model == "two_tower":

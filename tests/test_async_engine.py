@@ -1,0 +1,257 @@
+"""Async serving front-end (launch/async_engine.py, DESIGN.md §10).
+
+Coverage in three layers: the :class:`FlushPolicy` state machine is
+driven with a FAKE clock (deterministic max-wait vs block-full trigger
+ordering — no threads, no sleeps); the full threaded engine is checked
+for bit-parity against the synchronous engine on the same requests
+(ServingEngine and RetrievalEngine); and the shared-stats contract —
+subclass properties exported by ``as_dict``, background hot-row refresh
+equivalence with the synchronous refresh — is pinned end to end.
+"""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Embedding, EmbeddingConfig
+from repro.launch.async_engine import (AsyncEngineStats, AsyncServingEngine,
+                                       FlushPolicy, drive_open_loop)
+from repro.launch.engine import EngineStats, ServingEngine
+
+
+def _dpq_cfg(**kw):
+    return EmbeddingConfig(vocab_size=500, dim=16, kind="dpq",
+                           num_subspaces=4, num_centroids=8,
+                           decode_block_b=32, **kw)
+
+
+def _serving_engine(**kw):
+    cfg = _dpq_cfg(**{k: v for k, v in kw.items() if k in ("hot_rows",)})
+    emb = Embedding(cfg)
+    art = emb.export(emb.init(jax.random.PRNGKey(0)))
+    ekw = {k: v for k, v in kw.items() if k not in ("hot_rows",)}
+    return ServingEngine(emb, art, **ekw), emb, art
+
+
+# ------------------------------------------------- FlushPolicy (fake clock)
+
+def test_policy_deadline_fires_only_after_max_wait():
+    p = FlushPolicy(block_rows=8, max_wait_s=1.0)
+    assert p.decision(now=0.0) is None          # empty queue: never fires
+    assert p.timeout(now=0.0) is None
+    p.on_submit(2, now=10.0)
+    assert p.decision(now=10.5) is None         # young AND not full
+    assert p.timeout(now=10.5) == pytest.approx(0.5)
+    assert p.decision(now=10.999) is None
+    assert p.decision(now=11.0) == "deadline"   # oldest waited max_wait
+    p.on_flush(now=11.0)
+    assert p.decision(now=100.0) is None        # reset: empty again
+
+
+def test_policy_block_full_fires_immediately_and_wins_over_deadline():
+    p = FlushPolicy(block_rows=8, max_wait_s=1.0)
+    p.on_submit(5, now=0.0)
+    assert p.decision(now=0.0) is None
+    p.on_submit(3, now=0.0)                     # rows reach the block
+    assert p.decision(now=0.0) == "full"
+    # both conditions true -> "full" labels the flush
+    assert p.decision(now=5.0) == "full"
+
+
+def test_policy_deadline_clock_starts_when_queue_goes_nonempty():
+    p = FlushPolicy(block_rows=100, max_wait_s=1.0)
+    p.on_submit(1, now=0.0)
+    p.on_submit(1, now=50.0)                    # does NOT restart clock
+    assert p.decision(now=0.5) is None
+    assert p.decision(now=1.0) == "deadline"    # from the OLDEST submit
+    p.on_flush(now=60.0)
+    p.on_submit(1, now=60.0)                    # fresh queue, fresh clock
+    assert p.decision(now=60.5) is None
+    assert p.decision(now=61.0) == "deadline"
+
+
+def test_policy_drain_only_when_forced_and_nonempty():
+    p = FlushPolicy(block_rows=8, max_wait_s=1.0)
+    assert p.decision(now=0.0, forced=True) is None     # nothing queued
+    p.on_submit(1, now=0.0)
+    assert p.decision(now=0.1, forced=True) == "drain"
+    assert p.decision(now=0.1, forced=False) is None
+    # forced never relabels a real trigger
+    assert p.decision(now=1.0, forced=True) == "deadline"
+
+
+def test_policy_zero_wait_makes_every_submit_flush_eligible():
+    p = FlushPolicy(block_rows=8, max_wait_s=0.0)
+    p.on_submit(1, now=5.0)
+    assert p.decision(now=5.0) == "deadline"
+    assert p.timeout(now=5.0) == 0.0
+
+
+def test_policy_validates_arguments():
+    with pytest.raises(ValueError):
+        FlushPolicy(block_rows=0, max_wait_s=1.0)
+    with pytest.raises(ValueError):
+        FlushPolicy(block_rows=8, max_wait_s=-1.0)
+
+
+# ----------------------------------------------------- parity with sync
+
+def test_async_results_bit_identical_to_sync_engine():
+    eng, emb, art = _serving_engine()
+    ref = ServingEngine(emb, art)
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(0, 500, size=rng.integers(1, 9))
+            for _ in range(40)]
+    refs = [np.asarray(ref.lookup(r)) for r in reqs]
+    with AsyncServingEngine(eng, max_wait_us=200.0) as a:
+        futs = [a.submit(r) for r in reqs]
+        outs = [f.result(timeout=30) for f in futs]
+    for got, want in zip(outs, refs):
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_async_retrieval_engine_parity():
+    from repro.launch.engine import RetrievalEngine
+    from repro.retrieval import IndexConfig, get_index
+    rng = np.random.default_rng(0)
+    corpus = rng.standard_normal((256, 16)).astype(np.float32)
+    index = get_index(IndexConfig(kind="flat_pq", num_subspaces=4,
+                                  num_centroids=16, iters=3))
+    art = index.build(jax.random.PRNGKey(0), corpus)
+    qs = [rng.standard_normal((rng.integers(1, 4), 16)).astype(np.float32)
+          for _ in range(10)]
+    ref = RetrievalEngine(index, art, k=5, block_q=8)
+    refs = [jax.tree.map(np.asarray, ref.search(q)) for q in qs]
+    a_eng = RetrievalEngine(index, art, k=5, block_q=8)
+    with AsyncServingEngine(a_eng, max_wait_us=200.0) as a:
+        outs = [a.submit(q).result(timeout=30) for q in qs]
+    for got, want in zip(outs, refs):
+        got_l, want_l = jax.tree.leaves(got), jax.tree.leaves(want)
+        assert len(got_l) == len(want_l)
+        for g, w in zip(got_l, want_l):
+            np.testing.assert_array_equal(np.asarray(g), w)
+
+
+def test_lookup_is_submit_result_and_1d_query_keeps_shape():
+    eng, _, _ = _serving_engine()
+    with AsyncServingEngine(eng, max_wait_us=100.0) as a:
+        out = a.lookup(np.asarray([1, 2, 3]))
+    assert np.asarray(out).shape == (3, 16)
+
+
+# ------------------------------------------------------- stats contract
+
+def test_async_stats_export_includes_subclass_properties():
+    """as_dict() must export derived metrics of SUBCLASSES through the
+    property registry — the bug the registry exists to prevent was
+    base-class-only hardcoded exports."""
+    names = AsyncEngineStats.derived_metrics()
+    assert {"p50_ms", "p99_ms", "p999_ms",
+            "sustained_lookups_per_s"} <= set(names)
+    assert set(EngineStats.derived_metrics()) <= set(names)
+    st = AsyncEngineStats()
+    d = st.as_dict()
+    assert math.isnan(d["p99_ms"])              # empty stream: NaN, no crash
+    assert d["sustained_lookups_per_s"] == 0.0
+    assert d["latency"]["count"] == 0           # nested as_dict recursion
+
+
+def test_async_counters_and_trigger_split_account_for_every_request():
+    eng, _, _ = _serving_engine()
+    rng = np.random.default_rng(1)
+    reqs = [rng.integers(0, 500, size=4) for _ in range(30)]
+    with AsyncServingEngine(eng, max_wait_us=500.0) as a:
+        for f in [a.submit(r) for r in reqs]:
+            f.result(timeout=30)
+        a.drain()
+        st = a.stats()
+    assert st.submitted == 30
+    assert st.requests == 30                    # inner-concat corrected
+    assert st.lookups == 120
+    assert st.latency.count == 30               # one sample per request
+    assert (st.flushes_full + st.flushes_deadline
+            + st.flushes_drain) == st.flushes
+    assert st.p50_ms <= st.p99_ms or math.isnan(st.p99_ms)
+
+
+def test_drive_open_loop_fills_wall_seconds_and_latency():
+    eng, _, _ = _serving_engine()
+    rng = np.random.default_rng(2)
+    reqs = [rng.integers(0, 500, size=3) for _ in range(20)]
+    arrivals = np.arange(20) * 1e-3
+    with AsyncServingEngine(eng, max_wait_us=300.0) as a:
+        st = drive_open_loop(a, reqs, arrivals)
+    assert st.wall_seconds > 0
+    assert st.sustained_lookups_per_s > 0
+    assert st.latency.count == 20
+    with AsyncServingEngine(eng, max_wait_us=300.0) as a:
+        with pytest.raises(ValueError, match="arrival times"):
+            drive_open_loop(a, reqs, arrivals[:-1])
+
+
+def test_submit_after_close_raises():
+    eng, _, _ = _serving_engine()
+    a = AsyncServingEngine(eng, max_wait_us=100.0)
+    a.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        a.submit(np.asarray([1]))
+    a.close()                                   # idempotent
+
+
+# -------------------------------------------------- background refresh
+
+def test_background_refresh_matches_sync_refresh_selection():
+    """The refresher thread must install exactly the cache the
+    synchronous refresh_hot_rows would: same EMA ranking, same block,
+    and cached results stay bit-identical to an uncached engine."""
+    eng, emb, art = _serving_engine(hot_rows=16)
+    base = ServingEngine(emb, art, hot_rows=0)
+    hot_ids = np.arange(100, 108)
+    rng = np.random.default_rng(3)
+    reqs = [np.concatenate([hot_ids, rng.integers(0, 500, size=2)])
+            for _ in range(20)]
+    with AsyncServingEngine(eng, max_wait_us=200.0,
+                            refresh_every=5) as a:
+        for f in [a.submit(r) for r in reqs]:
+            f.result(timeout=30)
+        a.drain()
+        a.refresh_now(wait=True)                # deterministic refresh
+        assert set(hot_ids) <= set(eng._hot_ids.tolist())
+        # post-refresh lookups: hot hits AND bit parity
+        h0 = a.stats().hot_hits
+        out = a.lookup(hot_ids)
+        assert a.stats().hot_hits - h0 == len(hot_ids)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(base.lookup(hot_ids)))
+
+
+def test_refresh_every_requires_hot_cache():
+    eng, _, _ = _serving_engine()                # hot_rows=0
+    with pytest.raises(ValueError, match="hot-row"):
+        AsyncServingEngine(eng, refresh_every=4)
+    with AsyncServingEngine(eng) as a:
+        with pytest.raises(ValueError, match="hot-row"):
+            a.refresh_now()
+
+
+def test_async_disables_inner_inflush_refresh():
+    eng, _, _ = _serving_engine(hot_rows=8, hot_refresh_every=3)
+    with AsyncServingEngine(eng, refresh_every=5) as a:
+        assert eng.hot_refresh_every == 0       # cadence moved off-path
+        assert eng.hot_track_freq is True
+        a.lookup(np.asarray([1, 2]))
+
+
+def test_reset_stats_keeps_shared_instance_wiring():
+    eng, _, _ = _serving_engine()
+    with AsyncServingEngine(eng, max_wait_us=100.0) as a:
+        a.lookup(np.asarray([1, 2, 3]))
+        assert a.stats().lookups == 3
+        a.reset_stats()
+        assert a.stats().lookups == 0
+        assert eng.stats_ is a.stats_           # still ONE shared object
+        a.lookup(np.asarray([4]))
+        assert a.stats().lookups == 1
+        assert a.stats().latency.count == 1

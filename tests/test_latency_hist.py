@@ -1,0 +1,132 @@
+"""Latency histogram invariants (launch/latency.py, DESIGN.md §10).
+
+The histogram is what every p99-SLO claim in the async engine rests
+on, so its contract is pinned three ways: percentile readouts are
+monotone in q, ``merge`` is exactly bucket-count addition (two engines'
+histograms compose losslessly), and every readout upper-bounds the true
+order statistic within one bucket width (the advertised resolution).
+
+Hypothesis cases skip individually on bare installs
+(tests/_hypothesis_compat.py); the plain pytest cases always run.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.launch.latency import LatencyHistogram, percentile_exact
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+
+
+def _samples():
+    """Positive durations spanning the histogram's six decades."""
+    return st.lists(st.floats(min_value=1e-7, max_value=100.0,
+                              allow_nan=False, allow_infinity=False),
+                    min_size=1, max_size=200)
+
+
+def _hist(samples):
+    h = LatencyHistogram()
+    h.record_many(samples)
+    return h
+
+
+# ---------------------------------------------------------- properties
+
+@settings(max_examples=200, deadline=None)
+@given(_samples())
+def test_percentiles_monotone_in_q(samples):
+    """p50 <= p90 <= p99 <= p999 <= p100 for ANY sample stream —
+    readouts walk one cumulative count, so quantile order must hold."""
+    h = _hist(samples)
+    qs = [0.0, 0.5, 0.9, 0.99, 0.999, 1.0]
+    vals = [h.percentile(q) for q in qs]
+    assert all(a <= b for a, b in zip(vals, vals[1:])), \
+        list(zip(qs, vals))
+
+
+@settings(max_examples=200, deadline=None)
+@given(_samples(), _samples())
+def test_merge_equals_histogram_of_concatenated_streams(s1, s2):
+    """merge(h1, h2) has EXACTLY the bucket counts of one histogram
+    fed both streams — the mergeability claim, at full precision."""
+    merged = _hist(s1).merge(_hist(s2))
+    both = _hist(list(s1) + list(s2))
+    np.testing.assert_array_equal(merged.counts, both.counts)
+    assert merged.count == len(s1) + len(s2)
+
+
+@settings(max_examples=200, deadline=None)
+@given(_samples(), st.floats(min_value=0.0, max_value=1.0))
+def test_readout_upper_bounds_exact_within_one_bucket(samples, q):
+    """percentile(q) is a conservative bound on the rank-⌈q·n⌉ sample,
+    and never looser than one bucket width (a factor of ``growth``) —
+    the resolution the module docstring advertises."""
+    h = _hist(samples)
+    got = h.percentile(q)
+    ref = percentile_exact(samples, q)
+    assert ref is not None
+    # never optimistic: the readout is the sample's bucket upper edge
+    assert got >= min(ref, h.bucket_upper(h.n_buckets - 1)) * (1 - 1e-9)
+    # never looser than one bucket, unless the sample was clamped
+    if h.lo < ref < h.bucket_upper(h.n_buckets - 2):
+        assert got <= ref * h.growth * (1 + 1e-9)
+
+
+# ------------------------------------------------------- deterministic
+
+def test_empty_histogram_reads_nan_not_crash():
+    h = LatencyHistogram()
+    assert math.isnan(h.percentile(0.99))
+    assert math.isnan(h.p50_ms) and math.isnan(h.p999_ms)
+    assert h.count == 0
+    assert "empty" in repr(h)
+    d = h.as_dict()
+    assert d["count"] == 0 and math.isnan(d["p99_ms"])
+
+
+def test_out_of_range_quantile_raises():
+    h = LatencyHistogram()
+    h.record(1e-3)
+    with pytest.raises(ValueError):
+        h.percentile(1.5)
+    with pytest.raises(ValueError):
+        h.percentile(-0.1)
+
+
+def test_bucket_edges_and_clamps():
+    h = LatencyHistogram(lo=1e-6, growth=2.0, n_buckets=4)
+    # below lo, NaN and negatives all clamp into bucket 0
+    for bad in (0.0, -1.0, float("nan"), 5e-7):
+        assert h.bucket_of(bad) == 0
+    assert h.bucket_of(3e-6) == 1          # [2e-6, 4e-6)
+    assert h.bucket_of(1.0) == 3           # beyond top edge: clamp
+    h.record_many([0.0, 3e-6, 1.0, float("nan")])
+    assert h.counts.tolist() == [2, 1, 0, 1]
+    # conservative readout: upper edge of the holding bucket
+    assert h.percentile(1.0) == pytest.approx(h.bucket_upper(3))
+
+
+def test_record_many_matches_scalar_record():
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=-6, sigma=2, size=500)
+    h1, h2 = LatencyHistogram(), LatencyHistogram()
+    h1.record_many(samples)
+    for s in samples:
+        h2.record(float(s))
+    np.testing.assert_array_equal(h1.counts, h2.counts)
+
+
+def test_merge_rejects_mismatched_schemes():
+    with pytest.raises(ValueError, match="bucket schemes"):
+        LatencyHistogram(n_buckets=64).merge(LatencyHistogram(n_buckets=128))
+    with pytest.raises(ValueError, match="bucket schemes"):
+        LatencyHistogram(lo=1e-6).merge(LatencyHistogram(lo=1e-3))
+
+
+def test_percentile_exact_reference():
+    assert percentile_exact([], 0.5) is None
+    assert percentile_exact([3.0, 1.0, 2.0], 0.5) == 2.0
+    assert percentile_exact([3.0, 1.0, 2.0], 1.0) == 3.0
+    assert percentile_exact([3.0, 1.0, 2.0], 0.0) == 1.0   # rank floor 1

@@ -1,12 +1,17 @@
-"""Markdown link check: every relative link must resolve to a file.
+"""Markdown link check: every relative link must resolve to a file,
+and every anchored link (``file.md#slug`` or ``#slug``) must resolve
+to a heading in the target file.
 
     python tools/check_links.py [file.md ...]
 
 With no arguments, checks every tracked *.md in the repo.  External
-(http/mailto) links and pure-anchor links are skipped — this is a
-does-the-file-exist check, not a crawler; it catches the common docs
-rot (renamed/deleted files leaving dangling `[x](path)` references).
-Exit code 1 when any link is broken (the CI docs job gate).
+(http/mailto) links are skipped — this is a does-it-resolve check,
+not a crawler; it catches the common docs rot (renamed/deleted files
+or retitled sections leaving dangling ``[x](path#anchor)``
+references).  Anchors are matched against GitHub-style heading slugs
+(lowercase, punctuation stripped, spaces → hyphens, duplicate
+headings deduped with ``-1``/``-2`` suffixes).  Exit code 1 when any
+link is broken (the CI docs job gate).
 """
 from __future__ import annotations
 
@@ -15,24 +20,58 @@ import re
 import subprocess
 import sys
 
-# [text](target) — target up to the first ')' or '#appendix'
-_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
+# [text](target) — target runs to the first whitespace or ')'
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)[^)]*\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.MULTILINE)
 _SKIP_PREFIXES = ("http://", "https://", "mailto:")
 
 
-def check_file(path: str) -> list:
-    text = open(path, encoding="utf-8").read()
-    # fenced code blocks contain example paths, not links — drop them
-    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+def slugify(title: str) -> str:
+    """GitHub's anchor slug: lowercase, drop everything that is not a
+    word char / hyphen / space, then spaces -> hyphens (consecutive
+    spaces keep consecutive hyphens, matching github.com rendering)."""
+    t = title.strip().lower()
+    t = re.sub(r"[^\w\- ]", "", t)
+    return t.replace(" ", "-")
+
+
+def _strip_fences(text: str) -> str:
+    # fenced code blocks contain example paths and '#' comments,
+    # not links or headings — drop them
+    return re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+
+
+def heading_anchors(path: str) -> set:
+    """All anchor slugs a markdown file exposes, duplicates deduped
+    the way GitHub does (second 'Foo' heading becomes foo-1)."""
+    text = _strip_fences(open(path, encoding="utf-8").read())
+    anchors, seen = set(), {}
+    for m in _HEADING.finditer(text):
+        slug = slugify(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def check_file(path: str, anchor_cache: dict) -> list:
+    text = _strip_fences(open(path, encoding="utf-8").read())
     bad = []
     for m in _LINK.finditer(text):
         target = m.group(1)
         if target.startswith(_SKIP_PREFIXES):
             continue
-        full = os.path.normpath(
-            os.path.join(os.path.dirname(path) or ".", target))
+        file_part, _, anchor = target.partition("#")
+        full = path if not file_part else os.path.normpath(
+            os.path.join(os.path.dirname(path) or ".", file_part))
         if not os.path.exists(full):
-            bad.append((path, target))
+            bad.append((path, target, "missing file"))
+            continue
+        if anchor and full.endswith(".md"):
+            if full not in anchor_cache:
+                anchor_cache[full] = heading_anchors(full)
+            if anchor not in anchor_cache[full]:
+                bad.append((path, target, "missing anchor"))
     return bad
 
 
@@ -44,11 +83,11 @@ def tracked_markdown() -> list:
 
 def main(argv: list) -> int:
     files = argv or tracked_markdown()
-    bad = []
+    bad, anchor_cache = [], {}
     for f in files:
-        bad += check_file(f)
-    for path, target in bad:
-        print(f"BROKEN {path}: ({target})")
+        bad += check_file(f, anchor_cache)
+    for path, target, why in bad:
+        print(f"BROKEN {path}: ({target}) [{why}]")
     print(f"checked {len(files)} file(s): "
           f"{'all links resolve' if not bad else f'{len(bad)} broken'}")
     return 1 if bad else 0

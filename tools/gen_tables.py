@@ -80,11 +80,23 @@ def support_matrix():
         hot = e.export(e.init(jax.random.PRNGKey(0)))["hot"]
         assert tuple(hot.shape) == (8, hcfg.dim), hot.shape
 
+    def probe_async(emb, art):
+        """End-to-end check of the async front-end (DESIGN.md §10):
+        wrap the engine, submit through the deadline-batched flush
+        thread, and get host result rows back."""
+        import numpy as np
+        from repro.launch.async_engine import AsyncServingEngine
+        from repro.launch.engine import ServingEngine
+        with AsyncServingEngine(ServingEngine(emb, art),
+                                max_wait_us=100.0) as a:
+            out = a.lookup(np.arange(4), timeout=60)
+        assert out.shape == (4, emb.cfg.dim), out.shape
+
     notes = {"pallas": "TPU hw", "xla": "any", "interpret": "any, slow"}
     lines = ["| scheme | " + " | ".join(
         f"`{b}` ({notes.get(b, 'any')})" for b in backends)
-        + " | single-device | sharded codes | hot rows |",
-        "|---" * (len(backends) + 4) + "|"]
+        + " | single-device | sharded codes | hot rows | async engine |",
+        "|---" * (len(backends) + 5) + "|"]
     for label, kind, var in schemes:
         cfg = scheme_class(kind).probe_config(var)
         emb = Embedding(cfg)
@@ -97,6 +109,7 @@ def support_matrix():
                      and probe(lambda: quantized_artifact_specs(cfg)) == "✓"
                      else "—")
         cells.append(probe(lambda: probe_hot_rows(cfg)))
+        cells.append(probe(lambda: probe_async(emb, art)))
         lines.append(f"| {label} | " + " | ".join(cells) + " |")
 
     # retrieval index kinds (src/repro/retrieval/, DESIGN.md §8):
