@@ -1,0 +1,90 @@
+"""Standalone block-size autotune sweep (DESIGN.md §11).
+
+Tunes every registered op that declares tunables over representative
+serving shapes on the resolved backend and writes the winners as a
+JSON cache file.  A serving process (or the kernel bench) then seeds
+its dispatch layer from that file via ``REPRO_KERNEL_TUNE_CACHE`` —
+tuned block sizes apply to any call that leaves the block kwargs
+unset, with zero call-site changes.
+
+CI runs this in ``--quick`` mode on the ``interpret`` backend (the
+real Pallas kernel bodies on CPU) and uploads the cache file next to
+BENCH_kernels.json.  Off-TPU the absolute timings are not the TPU's,
+but the artifact proves the whole loop — sweep, persist, reload —
+and on a TPU host the same command produces the real table.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+
+
+def sweep_cases(quick: bool):
+    """(op, args) example calls per declared-tunable op.  Shapes track
+    the kernel bench's serving points (smaller under --quick)."""
+    k = jax.random.PRNGKey(0)
+    b = 512 if quick else 4096
+    n = 4096 if quick else 100_000
+    K, D, d, M = 256, 8, 64, 4
+    cases = [
+        ("mgqe_decode",
+         (jax.random.randint(k, (b, D), 0, K).astype(jnp.int32),
+          jax.random.normal(k, (D, K, d // D)))),
+        ("rq_decode_stages",
+         (jax.random.randint(k, (b, M), 0, K).astype(jnp.uint8),
+          jax.random.normal(k, (M, K, d)))),
+        ("pq_score",
+         (jax.random.normal(k, (D, K)),
+          jax.random.randint(k, (n, D), 0, K))),
+        ("pq_score_batched",
+         (jax.random.normal(k, (16, D, K)),
+          jax.random.randint(k, (n, D), 0, K))),
+        ("pq_topk",
+         (jax.random.normal(k, (16, D, K)),
+          jax.random.randint(k, (n, D), 0, K), 64)),
+        ("dpq_assign",
+         (jax.random.normal(k, (b, D, d // D)),
+          jax.random.normal(k, (D, K, d // D)), None)),
+    ]
+    declared = {op for op in dispatch.registered_ops()
+                if dispatch.op_tunables(op)}
+    missing = declared - {op for op, _ in cases}
+    if missing:
+        print(f"NOTE: tunable op(s) with no sweep case: {sorted(missing)}")
+    return cases
+
+
+def main(out_json: str, backend: str, quick: bool, force: bool) -> int:
+    be = dispatch.resolve_backend(backend)
+    print(f"== block-size autotune sweep [{be}]"
+          f"{' (quick)' if quick else ''} ==")
+    for op, args in sweep_cases(quick):
+        spec = dispatch.op_tunables(op)
+        if not spec:
+            continue
+        won = dispatch.tune(op, [args], backend=be,
+                            iters=1 if quick else 3,
+                            force=force, save=False)
+        for bucket, params in won.items():
+            print(f"{op:18s} {bucket:45s} -> {params} "
+                  f"(candidates: "
+                  f"{ {p: len(t.candidates) for p, t in spec.items()} })")
+    path = dispatch.save_tune_cache(out_json)
+    print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="TUNE_kernels.json")
+    ap.add_argument("--backend", default=None,
+                    help="kernel backend (default: resolved auto)")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="re-sweep buckets already in the cache")
+    a = ap.parse_args()
+    raise SystemExit(main(a.json, a.backend, a.quick, a.force))

@@ -13,6 +13,14 @@ representative of TPU).  What IS meaningful on CPU:
     dispatcher resolves to the XLA reference, and the resolved backend
     is recorded alongside the numbers).
 
+Every kernel entry additionally records ``roofline_fraction`` — the
+three-term v5e roofline bound of its compiled HLO over the measured
+time (``repro.roofline.kernel_roofline``, DESIGN.md §11) — and the
+decode benches record the block geometry the autotune cache picked
+(``tuned_block_b``/``tuned_block_d``).  Exit-code gates: every parity
+flag, the hot-cache and rq-decode speedup bars, the async SLO, and
+``roofline_fraction`` ∈ (0, 1] on each kernel entry.
+
 Results are written to a BENCH_*.json (default BENCH_kernels.json) so
 PR-over-PR runs can be diffed.
 """
@@ -33,14 +41,30 @@ from repro.kernels.mgqe_decode.ref import mgqe_decode_ref
 from repro.kernels.pq_score.ref import build_lut_ref, pq_score_ref
 
 
-def _time(fn, *args, iters=20):
+def _time(fn, *args, iters=20, repeats=3):
+    """Best-of-``repeats`` mean over ``iters`` calls (best-of damps
+    scheduler noise on shared CPU runners; compile paid outside)."""
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
+
+
+def _roofline(jfn, *args, measured_s):
+    """``roofline_*`` fields for one jitted callable: the three-term
+    v5e bound of its compiled HLO vs the measured time (DESIGN.md §11).
+    Lower/compile only — adds no executions to the bench."""
+    from repro.roofline import kernel_roofline
+    rf = kernel_roofline(jfn.lower(*args).compile().as_text(), measured_s)
+    return {"roofline_fraction": rf["roofline_fraction"],
+            "roofline_bound_ms": rf["bound_ms"],
+            "roofline_bound_kind": rf["bound_kind"]}
 
 
 def bench_serving_decode(results: dict, n: int, d: int, D: int, K: int,
@@ -65,10 +89,15 @@ def bench_serving_decode(results: dict, n: int, d: int, D: int, K: int,
     t_unfused = _time(jax.jit(lambda c, ce, i: mgqe_decode_ref(
         jnp.take(c, i, axis=0).astype(jnp.int32), ce)), codes, cent, ids)
     # fused: the serving hot path as Embedding.serve runs it — through
-    # the kernel dispatch layer (Pallas one-hot-matmul kernel on TPU)
+    # the kernel dispatch layer (Pallas one-hot-matmul kernel on TPU),
+    # block_b from the autotune cache (tuned here on the benched shape)
     backend = dispatch.resolve_backend(cfg.kernel_backend)
-    t_fused = _time(jax.jit(lambda c, ce, i: dpq.serving_lookup(
-        c, ce, i, backend=backend)), codes, cent, ids)
+    sel = jnp.take(codes, ids, axis=0).astype(jnp.int32)
+    tuned = next(iter(dispatch.tune("mgqe_decode", [(sel, cent)],
+                                    backend=backend).values()))
+    fused_fn = jax.jit(lambda c, ce, i: dpq.serving_lookup(
+        c, ce, i, backend=backend))
+    t_fused = _time(fused_fn, codes, cent, ids)
 
     print(f"lookup B={batch} of n={n/1e6:.1f}M d={d}: "
           f"full {t_full*1e3:.2f} ms ({n*d*4/1e6:.0f} MB table) | "
@@ -86,11 +115,13 @@ def bench_serving_decode(results: dict, n: int, d: int, D: int, K: int,
         "unfused_decode_ms": t_unfused * 1e3,
         "fused_decode_ms": t_fused * 1e3,
         "fused_vs_unfused_speedup": t_unfused / t_fused,
+        "tuned_block_b": tuned.get("block_b"),
         "table_mbytes_full": n * d * 4 / 1e6,
         "table_mbytes_codes": (n * D + K * d * 4) / 1e6,
         "hbm_bytes_cut_x": n * d * 4 / (n * D + K * d * 4),
         "serving_size_pct_of_full":
             100 * cfg.serving_size_bits() / (n * d * 32),
+        **_roofline(fused_fn, codes, cent, ids, measured_s=t_fused),
     }
 
 
@@ -158,6 +189,8 @@ def bench_sharded_decode(results: dict, n: int, d: int, D: int, K: int,
         sharded_fn = jax.jit(emb_sharded.serve)
         t_sharded = _time(sharded_fn, art_sharded, ids)
         out = sharded_fn(art_sharded, ids)
+        roofline = _roofline(sharded_fn, art_sharded, ids,
+                             measured_s=t_sharded)
     err = float(jnp.max(jnp.abs(out - ref)))
     parity_ok = err < 1e-5
     if not parity_ok:
@@ -182,24 +215,29 @@ def bench_sharded_decode(results: dict, n: int, d: int, D: int, K: int,
         "codes_mbytes_total": n * D / 1e6,
         "codes_mbytes_per_shard": n * D / model_n / 1e6,
         "wire_mbytes_per_step": wire_mb,
+        **roofline,
     }
 
 
 def bench_rq_decode(results: dict, n: int, d: int, M: int, K: int,
                     batch: int):
-    """Residual-quantization serving decode: kernel form vs gather.
+    """Residual-quantization serving decode: the single-pass fused op
+    vs per-stage kernel launches.
 
-    Fused = the ``mgqe_decode`` kernel form with "subspace" width
-    S = d (one-hot matmul pins the codebooks in VMEM), stages summed
-    outside the kernel — what the rq scheme serves through on
-    pallas/interpret.  Unfused = per-stage HBM row gathers + sum — the
-    scheme's XLA serving path, because at S = d the one-hot form costs
-    ~2K x the FLOPs of a gather and only pays on the MXU.  Off-TPU
-    expect speedup < 1 (that measured gap is WHY serve picks the
-    gather path there).  Parity between the two forms is recorded as
-    ``parity_ok`` and flips the exit code (after the json is written).
+    Fused = ONE dispatched ``rq_decode_stages`` call (DESIGN.md §11) —
+    what ``rq.decode`` serves through on every backend: on
+    pallas/interpret the M-stage sum accumulates in the kernel's
+    revisited VMEM output block; on xla the per-stage gather chain
+    fuses into a single pass under one jit.  Unfused = the shape the
+    serve path used to have — one decode launch per residual stage
+    (each its own jit dispatch) with the stage outputs summed outside
+    the kernel.  Block geometry for the fused path comes from the
+    autotune cache (``dispatch.tune`` runs on the benched shape first;
+    the winners are recorded).  ``parity_ok`` AND ``speedup_ok``
+    (fused >= 1x unfused) flip the exit code (after the json is
+    written).
     """
-    from repro.kernels.mgqe_decode import decode as kernel_decode
+    from repro.kernels.mgqe_decode import decode_stages
     k = jax.random.PRNGKey(0)
     cfg = EmbeddingConfig(vocab_size=n, dim=d, kind="rq", num_levels=M,
                           num_centroids=K)
@@ -211,48 +249,64 @@ def bench_rq_decode(results: dict, n: int, d: int, M: int, K: int,
 
     backend = dispatch.resolve_backend(cfg.kernel_backend)
 
-    def fused(cbs, codes, i):
-        sel = jnp.take(codes, i, axis=0).astype(jnp.int32)   # (B, M)
-        flat = kernel_decode(sel, cbs, block_b=cfg.decode_block_b,
-                             backend=backend)                # (B, M*d)
-        return jnp.sum(flat.reshape(-1, M, d), axis=1)
-    fused_fn = jax.jit(lambda a, i: fused(a["codebooks"], a["codes"], i))
+    # autotune the fused op's block geometry on the benched shape —
+    # dispatch injects the winners into the unpinned call below
+    sel0 = jnp.take(artifact["codes"], ids, axis=0)       # (B, M) uint8
+    tuned = next(iter(dispatch.tune(
+        "rq_decode_stages", [(sel0, artifact["codebooks"])],
+        backend=backend).values()))
+
+    fused_fn = jax.jit(lambda a, i: decode_stages(
+        jnp.take(a["codes"], i, axis=0), a["codebooks"], backend=backend))
     t_fused = _time(fused_fn, artifact, ids)
 
-    def unfused(cbs, codes, i):
-        sel = jnp.take(codes, i, axis=0).astype(jnp.int32)   # (B, M)
-        return sum(jnp.take(cbs[m], sel[:, m], axis=0)
-                   for m in range(M))
-    unfused_fn = jax.jit(lambda a, i: unfused(a["codebooks"],
-                                              a["codes"], i))
-    t_unfused = _time(unfused_fn, artifact, ids)
+    # unfused: M separate stage launches; the running sum happens
+    # between dispatches, outside any kernel
+    cbs = [artifact["codebooks"][m] for m in range(M)]
+    take_codes = jax.jit(lambda c, i: jnp.take(c, i, axis=0))
+    stage_fn = jax.jit(lambda cb, c: jnp.take(cb, c.astype(jnp.int32),
+                                              axis=0))
+
+    def unfused(a, i):
+        sel = take_codes(a["codes"], i)
+        out = stage_fn(cbs[0], sel[:, 0])
+        for m in range(1, M):
+            out = out + stage_fn(cbs[m], sel[:, m])
+        return out
+    t_unfused = _time(unfused, artifact, ids)
 
     err = float(jnp.max(jnp.abs(fused_fn(artifact, ids)
-                                - unfused_fn(artifact, ids))))
+                                - unfused(artifact, ids))))
     parity_ok = err < 1e-5
+    speedup = t_unfused / t_fused
+    speedup_ok = speedup >= 1.0
     if not parity_ok:
         print(f"WARNING: rq decode parity FAILED (max err {err:.2e})")
-    serve_path = ("kernel" if backend in ("pallas", "interpret")
-                  else "gather")
+    if not speedup_ok:
+        print(f"WARNING: rq fused decode below 1x the per-stage "
+              f"launches ({speedup:.2f}x)")
     print(f"rq decode B={batch} n={n/1e6:.1f}M d={d} M={M}: "
-          f"gather {t_unfused*1e3:.2f} ms | kernel-form[{backend}] "
-          f"{t_fused*1e3:.2f} ms (parity err {err:.1e}; serve uses the "
-          f"{serve_path} path here); "
+          f"per-stage launches {t_unfused*1e3:.2f} ms | "
+          f"fused[{backend}] {t_fused*1e3:.2f} ms ({speedup:.1f}x, "
+          f"parity err {err:.1e}, tuned {tuned}); "
           f"codes {n*M/1e6:.1f} MB + {M*K*d*4/1e3:.0f} KB codebooks vs "
           f"{n*d*4/1e6:.0f} MB full")
     results["rq_decode"] = {
         "vocab": n, "dim": d, "num_levels": M, "num_centroids": K,
         "batch": batch,
         "fused_backend": backend,
-        "serve_path": serve_path,
         "unfused_decode_ms": t_unfused * 1e3,
         "fused_decode_ms": t_fused * 1e3,
-        "fused_vs_unfused_speedup": t_unfused / t_fused,
+        "fused_vs_unfused_speedup": speedup,
+        "speedup_ok": speedup_ok,
+        "tuned_block_b": tuned.get("block_b"),
+        "tuned_block_d": tuned.get("block_d"),
         "parity_max_err": err,
         "parity_ok": parity_ok,
         "table_mbytes_codes": (n * M + M * K * d * 4) / 1e6,
         "serving_size_pct_of_full":
             100 * cfg.serving_size_bits() / (n * d * 32),
+        **_roofline(fused_fn, artifact, ids, measured_s=t_fused),
     }
 
 
@@ -478,8 +532,8 @@ def bench_adc(results: dict, d: int, D: int, K: int, n_cand: int):
     cand_codes = jax.random.randint(k, (n_cand, D), 0, K).astype(jnp.uint8)
     t_dense = _time(jax.jit(lambda v, q: v @ q), cand_vecs, q)
     lut = build_lut_ref(q, cent)
-    t_adc = _time(jax.jit(lambda l, c: pq_score_ref(
-        l, c.astype(jnp.int32))), lut, cand_codes)
+    adc_fn = jax.jit(lambda l, c: pq_score_ref(l, c.astype(jnp.int32)))
+    t_adc = _time(adc_fn, lut, cand_codes)
     print(f"retrieval 1x{n_cand//1000}k cands: dense {t_dense*1e3:.1f} ms "
           f"({n_cand*d*4/1e6:.0f} MB) | ADC {t_adc*1e3:.1f} ms "
           f"({n_cand*D/1e6:.0f} MB codes)")
@@ -489,6 +543,7 @@ def bench_adc(results: dict, d: int, D: int, K: int, n_cand: int):
         "n_candidates": n_cand, "dim": d,
         "dense_ms": t_dense * 1e3, "adc_ms": t_adc * 1e3,
         "stream_cut_x": d * 4 / D,
+        **_roofline(adc_fn, lut, cand_codes, measured_s=t_adc),
     }
 
 
@@ -577,6 +632,7 @@ def bench_retrieval_topk(results: dict, d: int, D: int, n_cand: int,
         "parity_ok": parity_ok,
         "codes_mbytes": n_cand * D / 1e6,
         "dense_mbytes": n_cand * d * 4 / 1e6,
+        **_roofline(fused_fn, art, q, measured_s=t_fused),
     }
 
 
@@ -585,12 +641,14 @@ def bench_dpq_assign(results: dict, d: int, D: int, K: int, b: int):
     cent = jax.random.normal(k, (D, K, d // D))
     e = jax.random.normal(k, (b, D, d // D))
     from repro.kernels.dpq_assign.ref import dpq_assign_ref
-    t_assign = _time(jax.jit(dpq_assign_ref), e, cent)
+    assign_fn = jax.jit(dpq_assign_ref)
+    t_assign = _time(assign_fn, e, cent)
     fl = 2 * b * D * K * (d // D)
     print(f"dpq_assign B={b}: {t_assign*1e3:.1f} ms "
           f"({fl/1e9:.2f} GFLOP -> {fl/t_assign/1e9:.1f} GFLOP/s CPU ref)")
     results["dpq_assign"] = {
         "batch": b, "assign_ms": t_assign * 1e3, "gflop": fl / 1e9,
+        **_roofline(assign_fn, e, cent, measured_s=t_assign),
     }
 
 
@@ -619,14 +677,27 @@ def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
         with open(out_json, "w") as f:
             json.dump(results, f, indent=1)
         print(f"wrote {out_json}")
-    # parity (and the hot-cache >=2x speedup bar) flip the exit code
-    # AFTER the json is written, so CI still uploads the full results
-    # for diagnosis
+    # every gate flips the exit code AFTER the json is written, so CI
+    # still uploads the full results for diagnosis
     ok = all(results.get(k, {}).get("parity_ok", True)
              for k in ("sharded_decode", "rq_decode", "retrieval_topk",
                        "hot_cache_lookup"))
     ok &= results.get("hot_cache_lookup", {}).get("speedup_ok", True)
+    ok &= results.get("rq_decode", {}).get("speedup_ok", True)
     ok &= results.get("async_serving", {}).get("slo_ok", True)
+
+    def roofline_ok(entry):
+        if not entry or "skipped" in entry:
+            return True
+        f = entry.get("roofline_fraction")
+        return f is not None and 0.0 < f <= 1.0
+    bad_rf = [k for k in ("serving_decode", "sharded_decode", "rq_decode",
+                          "adc", "retrieval_topk", "dpq_assign")
+              if not roofline_ok(results.get(k, {}))]
+    if bad_rf:
+        print(f"WARNING: roofline_fraction missing or out of (0, 1] "
+              f"for: {', '.join(bad_rf)}")
+    ok &= not bad_rf
     return 0 if ok else 1
 
 

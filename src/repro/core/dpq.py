@@ -179,14 +179,15 @@ def export_codes(params: dict, k_limit_per_row: Optional[jax.Array] = None,
 
 def serving_lookup(codes_table: jax.Array, centroids: jax.Array,
                    ids: jax.Array, backend: Optional[str] = None,
-                   block_b: int = 256) -> jax.Array:
+                   block_b: Optional[int] = None) -> jax.Array:
     """Serving-path lookup: codes + centroids only (full table gone).
 
     The decode runs through the kernel dispatch layer (DESIGN.md §5):
     the fused Pallas ``mgqe_decode`` kernel on TPU — one-hot matmul in
     VMEM instead of a per-row HBM gather — with the jnp reference as
     the XLA fallback.  ``backend``/``block_b`` usually come from
-    ``EmbeddingConfig.kernel_backend`` / ``decode_block_b``.
+    ``EmbeddingConfig.kernel_backend`` / ``decode_block_b``; left as
+    None, ``block_b`` resolves through the autotune cache.
     """
     from repro.kernels.mgqe_decode import decode
     codes = jnp.take(codes_table, ids, axis=0).astype(jnp.int32)  # (..., D)

@@ -22,17 +22,17 @@ per-stage codebook loss; commitment gradients reach ``e`` through the
 residual chain — exactly the ``dpq.quantize`` recipe, applied
 sequentially instead of per-subspace.
 
-Serving artifact: codes ``(n, M)`` + codebooks ``(M, K, d)``.  On the
-kernel backends (pallas/interpret) the fused decode REUSES the
-existing ``mgqe_decode`` kernel through the dispatch layer: with
-"subspace" width S = d the kernel's one-hot matmul emits the
-per-stage decode ``(B, M·d)``, summed over stages outside the kernel.
-At S = d the one-hot form costs ~2K x the FLOPs of a gather and only
-pays on the MXU, so the XLA path serves per-stage row gathers instead
-(the gap is measured in BENCH_kernels.json ``rq_decode``).  Versus PQ
-at equal code bytes, RQ spends ``M·K·d`` floats of codebook (vs
-``K·d``) to quantize the *joint* space instead of independent
-subspaces.
+Serving artifact: codes ``(n, M)`` + codebooks ``(M, K, d)``.  Serving
+decodes through the single-pass ``rq_decode_stages`` op (DESIGN.md
+§11) on EVERY backend: on pallas/interpret the M-stage sum accumulates
+in the kernel's revisited VMEM output block (one launch, no (B, M·d)
+intermediate in HBM); the XLA reference is the per-stage row-gather
+chain XLA fuses into one pass.  The old shape — one ``mgqe_decode``
+launch with S = d emitting (B, M·d), summed outside — measured 0.27x
+of the gather chain in BENCH_kernels.json ``rq_decode``; the bench now
+gates the fused path at >= 1x.  Versus PQ at equal code bytes, RQ
+spends ``M·K·d`` floats of codebook (vs ``K·d``) to quantize the
+*joint* space instead of independent subspaces.
 """
 from __future__ import annotations
 
@@ -120,26 +120,17 @@ class ResidualQuantization(QuantizedScheme):
 
     def decode(self, artifact, ids, tier_ids=None):
         cfg = self.cfg
-        from repro.kernels import dispatch
-        from repro.kernels.mgqe_decode import decode
-        codes = jnp.take(artifact["codes"], ids, axis=0).astype(jnp.int32)
-        cbs = artifact["codebooks"]
+        from repro.kernels.mgqe_decode import decode_stages
+        # codes keep their stored dtype (uint8) end-to-end; the kernel
+        # widens per block, the XLA ref per gather.
+        codes = jnp.take(artifact["codes"], ids, axis=0)
         m = codes.shape[-1]
-        backend = dispatch.resolve_backend(cfg.kernel_backend)
-        if backend in ("pallas", "interpret"):
-            # fused kernel with S = d: one-hot matmul keeps the
-            # codebooks pinned in VMEM — (B, M) codes -> (B, M*d)
-            # stages, summed outside the kernel.  Only pays on the MXU:
-            # at S = d the one-hot form costs ~2K x the FLOPs of a
-            # gather, so off-TPU the XLA path below wins ~16x
-            # (BENCH_kernels.json rq_decode).
-            flat = decode(codes.reshape(-1, m), cbs,
-                          block_b=cfg.decode_block_b, backend=backend)
-            out = jnp.sum(flat.reshape(-1, m, cfg.dim), axis=1)
-            return out.reshape(ids.shape + (cfg.dim,))
-        # xla reference: per-stage row gather + sum
-        return sum(jnp.take(cbs[i], codes[..., i], axis=0)
-                   for i in range(m))
+        # block_b stays pinned to decode_block_b (the engine pads flush
+        # batches to it); block_d is left for the autotune cache.
+        out = decode_stages(codes.reshape(-1, m), artifact["codebooks"],
+                            block_b=cfg.decode_block_b,
+                            backend=cfg.kernel_backend)
+        return out.reshape(ids.shape + (cfg.dim,))
 
     # -------------------------------------------------------- structure
     def cold_artifact_spec(self):

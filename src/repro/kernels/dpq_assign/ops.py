@@ -6,6 +6,7 @@ from typing import Optional
 import jax
 
 from repro.kernels import dispatch
+from repro.kernels.dispatch import Tunable
 from repro.kernels.dpq_assign.dpq_assign import dpq_assign
 from repro.kernels.dpq_assign.ref import dpq_assign_ref
 
@@ -17,12 +18,14 @@ dispatch.register_op(
         e_sub, cent, k_limit),
     interpret=lambda e_sub, cent, k_limit=None, block_b=512: dpq_assign(
         e_sub, cent, k_limit, block_b=block_b, interpret=True),
+    tunables={"block_b": Tunable(512, (128, 256, 512, 1024))},
 )
 
 
 def assign(e_sub: jax.Array, centroids: jax.Array,
            k_limit: Optional[jax.Array] = None,
-           block_b: int = 512, backend: Optional[str] = None) -> jax.Array:
+           block_b: Optional[int] = None,
+           backend: Optional[str] = None) -> jax.Array:
     """Nearest-centroid codes (B, D) for subvectors (B, D, S)."""
     return dispatch.dispatch("dpq_assign", e_sub, centroids, k_limit,
                              block_b=block_b, backend=backend)

@@ -16,6 +16,8 @@ dispatch.register_op(
     xla=embedding_bag_ref,
     interpret=lambda table, ids, seg, num_bags, weights=None: embedding_bag(
         table, ids, seg, num_bags, weights, interpret=True),
+    # grid is (nnz,) — one id per step, no free block geometry to tune
+    tunables={},
 )
 
 

@@ -17,10 +17,21 @@ so the gather is re-expressed as a **one-hot matmul** — the MXU eats
 Block layout: grid over B; codes block (Bblk, D) and output block
 (Bblk, d) stream through VMEM; the centroid table is mapped whole into
 VMEM every step (index_map returns the same block).
+
+``rq_decode_stages`` is the residual-quantization variant (DESIGN.md
+§11): codes (B, M) against M stacked full-width codebooks (M, K, d),
+where the output is the SUM over stages rather than a concatenation
+over subspaces.  Running it as M ``mgqe_decode`` launches (one per
+stage, summed outside) costs M kernel dispatches plus an HBM
+round-trip of the (B, M·d) stage outputs; here the stage sum happens
+in one pass — the grid's innermost dimension iterates stages and the
+revisited (Bblk, dblk) output block accumulates in VMEM, so only the
+final (B, d) sum ever reaches HBM.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -66,4 +77,63 @@ def mgqe_decode(codes: jax.Array, centroids: jax.Array,
                                        centroids.dtype),
         interpret=interpret,
     )(codes, centroids)
+    return out[:b]
+
+
+def _staged_kernel(codes_ref, cb_ref, out_ref):
+    stage = pl.program_id(2)                          # innermost grid dim
+    codes = codes_ref[...].astype(jnp.int32)          # (Bblk, 1)
+    cb = cb_ref[0]                                    # (K, dblk)
+    k = cb.shape[0]
+    onehot = (codes
+              == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+              ).astype(cb.dtype)                      # (Bblk, K)
+    dec = jnp.dot(onehot, cb, preferred_element_type=jnp.float32)
+
+    @pl.when(stage == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += dec.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_d", "interpret"))
+def rq_decode_stages(codes: jax.Array, codebooks: jax.Array,
+                     block_b: int = 256, block_d: Optional[int] = None,
+                     interpret: bool = False) -> jax.Array:
+    """codes (B, M) int; stacked codebooks (M, K, d) -> (B, d) float:
+    single-pass residual-stage decode, ``sum_m codebooks[m, codes[:, m]]``.
+
+    Grid (B/block_b, d/block_d, M) with the stage index innermost: the
+    (block_b, block_d) output block is revisited across all M stages
+    and accumulates the one-hot-matmul stage decodes in VMEM — Pallas
+    only flushes a revisited block when its index changes, so the stage
+    sum never round-trips HBM.  Codes stay at their stored dtype
+    (uint8) until the per-block int32 widening in the body.
+
+    ``block_d`` tiles the output width (None = full d; values that do
+    not divide d fall back to full width).  VMEM working set per step:
+    block_b codes + K*block_d codebook slice + block_b*K onehot +
+    block_b*block_d out — 256*256*4 = 256 KB onehot dominates.
+    """
+    b, m = codes.shape
+    m2, k, d = codebooks.shape
+    assert m == m2, (m, m2)
+    if block_d is None or d % block_d:
+        block_d = d
+    pad = (-b) % block_b
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _staged_kernel,
+        grid=((b + pad) // block_b, d // block_d, m),
+        in_specs=[
+            pl.BlockSpec((block_b, 1), lambda i, j, s: (i, s)),
+            pl.BlockSpec((1, k, block_d), lambda i, j, s: (s, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_d), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b + pad, d), codebooks.dtype),
+        interpret=interpret,
+    )(codes, codebooks)
     return out[:b]

@@ -1,10 +1,20 @@
-"""Public wrapper for the MGQE decode kernel.
+"""Public wrappers for the MGQE decode kernels.
 
 ``decode(codes, centroids)`` routes through the kernel backend dispatch
 layer (``repro.kernels.dispatch``): the Pallas kernel on TPU, the jnp
 reference under XLA elsewhere, or Pallas interpret mode when explicitly
 requested (CI runs the kernel bodies on CPU this way) — so call sites
 never branch on backend.
+
+``decode_stages(codes, codebooks)`` is the residual-quantization form:
+codes (B, M) against stacked full-width codebooks (M, K, d), with the
+M-stage sum fused into one kernel pass (DESIGN.md §11).  Codes keep
+their stored dtype (uint8) end-to-end; each backend widens per block.
+
+Both ops declare their block-geometry kwargs as autotunables — leave
+``block_b``/``block_d`` as None and the dispatch layer substitutes the
+tuned value for the call's shape bucket (or the declared default when
+the bucket was never tuned).
 """
 from __future__ import annotations
 
@@ -13,8 +23,11 @@ from typing import Optional
 import jax
 
 from repro.kernels import dispatch
-from repro.kernels.mgqe_decode.mgqe_decode import mgqe_decode
-from repro.kernels.mgqe_decode.ref import mgqe_decode_ref
+from repro.kernels.dispatch import Tunable
+from repro.kernels.mgqe_decode.mgqe_decode import (mgqe_decode,
+                                                   rq_decode_stages)
+from repro.kernels.mgqe_decode.ref import (mgqe_decode_ref,
+                                           rq_decode_stages_ref)
 
 dispatch.register_op(
     "mgqe_decode",
@@ -23,14 +36,40 @@ dispatch.register_op(
     xla=lambda codes, cent, block_b=256: mgqe_decode_ref(codes, cent),
     interpret=lambda codes, cent, block_b=256: mgqe_decode(
         codes, cent, block_b=block_b, interpret=True),
+    tunables={"block_b": Tunable(256, (64, 128, 256, 512))},
+)
+
+dispatch.register_op(
+    "rq_decode_stages",
+    pallas=lambda codes, cbs, block_b=256, block_d=None: rq_decode_stages(
+        codes, cbs, block_b=block_b, block_d=block_d),
+    xla=lambda codes, cbs, block_b=256, block_d=None: rq_decode_stages_ref(
+        codes, cbs),
+    interpret=lambda codes, cbs, block_b=256, block_d=None: rq_decode_stages(
+        codes, cbs, block_b=block_b, block_d=block_d, interpret=True),
+    tunables={"block_b": Tunable(256, (64, 128, 256, 512)),
+              "block_d": Tunable(None, (None, 32, 64, 128))},
 )
 
 
-def decode(codes: jax.Array, centroids: jax.Array, block_b: int = 256,
+def decode(codes: jax.Array, centroids: jax.Array,
+           block_b: Optional[int] = None,
            backend: Optional[str] = None) -> jax.Array:
     """codes (B, D) -> embeddings (B, D*S) via the dispatched kernel."""
     return dispatch.dispatch("mgqe_decode", codes, centroids,
                              block_b=block_b, backend=backend)
 
 
-__all__ = ["decode", "mgqe_decode", "mgqe_decode_ref"]
+def decode_stages(codes: jax.Array, codebooks: jax.Array,
+                  block_b: Optional[int] = None,
+                  block_d: Optional[int] = None,
+                  backend: Optional[str] = None) -> jax.Array:
+    """codes (B, M) + stacked codebooks (M, K, d) -> (B, d): the
+    single-pass fused residual-stage decode, backend-dispatched."""
+    return dispatch.dispatch("rq_decode_stages", codes, codebooks,
+                             block_b=block_b, block_d=block_d,
+                             backend=backend)
+
+
+__all__ = ["decode", "decode_stages", "mgqe_decode", "mgqe_decode_ref",
+           "rq_decode_stages", "rq_decode_stages_ref"]

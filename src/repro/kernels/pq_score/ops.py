@@ -24,11 +24,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
+from repro.kernels.dispatch import Tunable
 from repro.kernels.pq_score.pq_score import (INVALID_ID, pq_score,
                                              pq_score_batched, pq_topk)
 from repro.kernels.pq_score.ref import (build_lut_batch_ref, build_lut_ref,
                                         pq_score_batched_ref, pq_score_ref,
                                         pq_topk_ref)
+
+_BLOCK_N = Tunable(1024, (256, 512, 1024, 2048))
 
 dispatch.register_op(
     "pq_score",
@@ -37,6 +40,7 @@ dispatch.register_op(
     xla=lambda lut, codes, block_n=1024: pq_score_ref(lut, codes),
     interpret=lambda lut, codes, block_n=1024: pq_score(
         lut, codes, block_n=block_n, interpret=True),
+    tunables={"block_n": _BLOCK_N},
 )
 
 dispatch.register_op(
@@ -46,6 +50,7 @@ dispatch.register_op(
     xla=lambda luts, codes, block_n=1024: pq_score_batched_ref(luts, codes),
     interpret=lambda luts, codes, block_n=1024: pq_score_batched(
         luts, codes, block_n=block_n, interpret=True),
+    tunables={"block_n": _BLOCK_N},
 )
 
 dispatch.register_op(
@@ -55,6 +60,7 @@ dispatch.register_op(
     xla=lambda luts, codes, k, block_n=1024: pq_topk_ref(luts, codes, k),
     interpret=lambda luts, codes, k, block_n=1024: pq_topk(
         luts, codes, k, block_n=block_n, interpret=True),
+    tunables={"block_n": _BLOCK_N},
 )
 
 
@@ -69,7 +75,7 @@ def build_lut_batch(queries: jax.Array, centroids: jax.Array) -> jax.Array:
 
 
 def score_candidates(query: jax.Array, centroids: jax.Array,
-                     codes: jax.Array, block_n: int = 1024,
+                     codes: jax.Array, block_n: Optional[int] = None,
                      backend: Optional[str] = None) -> jax.Array:
     """Full ADC path: query (d,) + corpus codes (N, D) -> scores (N,)."""
     lut = build_lut(query, centroids).astype(jnp.float32)
@@ -78,7 +84,7 @@ def score_candidates(query: jax.Array, centroids: jax.Array,
 
 
 def score_candidates_batched(queries: jax.Array, centroids: jax.Array,
-                             codes: jax.Array, block_n: int = 1024,
+                             codes: jax.Array, block_n: Optional[int] = None,
                              backend: Optional[str] = None) -> jax.Array:
     """Batched ADC: queries (B, d) + codes (N, D) -> scores (B, N)."""
     luts = build_lut_batch(queries, centroids).astype(jnp.float32)
@@ -87,7 +93,7 @@ def score_candidates_batched(queries: jax.Array, centroids: jax.Array,
 
 
 def topk_candidates(queries: jax.Array, centroids: jax.Array,
-                    codes: jax.Array, k: int, block_n: int = 1024,
+                    codes: jax.Array, k: int, block_n: Optional[int] = None,
                     backend: Optional[str] = None
                     ) -> Tuple[jax.Array, jax.Array]:
     """Fused batched ADC top-k: queries (B, d) + codes (N, D) ->

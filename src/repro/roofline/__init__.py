@@ -1,13 +1,14 @@
 from repro.roofline.hlo import (HloCost, analyze, collective_bytes,
                                 collective_counts)
 from repro.roofline.model import (HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16,
-                                  RooflineTerms, lm_forward_model_flops,
+                                  RooflineTerms, kernel_roofline,
+                                  lm_forward_model_flops,
                                   lm_train_model_flops,
                                   terms_from_analysis, terms_from_hlo)
 
 __all__ = [
     "HloCost", "analyze", "collective_bytes", "collective_counts",
-    "RooflineTerms", "terms_from_analysis", "terms_from_hlo",
-    "lm_train_model_flops", "lm_forward_model_flops",
+    "RooflineTerms", "kernel_roofline", "terms_from_analysis",
+    "terms_from_hlo", "lm_train_model_flops", "lm_forward_model_flops",
     "PEAK_FLOPS_BF16", "HBM_BW", "ICI_LINK_BW",
 ]

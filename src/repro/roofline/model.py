@@ -111,6 +111,34 @@ def terms_from_hlo(hlo_cost, chips: int,
     )
 
 
+def kernel_roofline(hlo_text: str, measured_s: float,
+                    chips: int = 1) -> Dict:
+    """Achieved-vs-peak for one compiled kernel (DESIGN.md §11).
+
+    ``bound_s`` is the three-term roofline floor of the kernel's
+    per-device HLO under the v5e constants; ``roofline_fraction =
+    min(1, bound_s / measured_s)`` is the share of that hardware bound
+    the measured run achieves — 1.0 means running at the roofline.
+    (On the CPU CI runner the v5e constants make the bound far below
+    the measured time, so fractions are small — the *invariant* the
+    bench gates is only that the fraction exists and sits in (0, 1];
+    the absolute value is meaningful on the target part.)
+    """
+    from repro.roofline.hlo import analyze
+    terms = terms_from_hlo(analyze(hlo_text), chips)
+    bound = terms.bound_s
+    frac = None
+    if measured_s > 0 and bound > 0:
+        frac = min(1.0, bound / measured_s)
+    return {
+        "bound_ms": bound * 1e3,
+        "bound_kind": terms.dominant,
+        "roofline_fraction": frac,
+        "hlo_flops": terms.hlo_flops,
+        "hlo_bytes": terms.hlo_bytes,
+    }
+
+
 # ----------------------------------------------------------------------
 # MODEL_FLOPS estimates (useful FLOPs per step)
 # ----------------------------------------------------------------------

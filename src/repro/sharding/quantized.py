@@ -28,7 +28,10 @@ and the per-shard local decode all come from the scheme registry
 (``Scheme.supports_sharded_codes`` / ``artifact_shard_specs`` /
 ``QuantizedScheme.decode`` — core/schemes/), so the ServingEngine, the
 benches, the tests, and any new scheme plugin all place and decode
-artifacts the same way with zero edits here.
+artifacts the same way with zero edits here.  That routing is how the
+rq scheme's single-pass fused ``rq_decode_stages`` decode (DESIGN.md
+§11) reaches each shard with no sharding-layer changes: the per-shard
+``scheme.decode(art_loc, local, ...)`` call below IS the fused path.
 """
 from __future__ import annotations
 

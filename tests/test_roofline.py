@@ -1,9 +1,14 @@
-"""Roofline machinery: loop-weighted HLO analysis + term computation."""
+"""Roofline machinery: loop-weighted HLO analysis + term computation,
+parser edge cases (malformed/partial HLO text must degrade, never
+raise), and the per-kernel achieved-vs-peak helper the bench gate
+uses (DESIGN.md §11)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.roofline import (PEAK_FLOPS_BF16, analyze, terms_from_hlo)
+from repro.roofline import (PEAK_FLOPS_BF16, analyze, kernel_roofline,
+                            terms_from_hlo)
 
 
 def _compiled_text(fn, *args):
@@ -130,6 +135,142 @@ def test_tpu_fusion_mode_drops_convert_fusions():
     cal = analyze(txt, tpu_fusion=True)
     assert cal.bytes <= raw.bytes
     assert cal.flops == raw.flops           # flops unaffected
+
+
+# ------------------------------------------------ parser edge cases
+
+@pytest.mark.parametrize("text", [
+    "",                                        # empty module text
+    "HloModule empty\n",                       # header, no computations
+    "not hlo at all\n{}\nrandom noise",        # garbage
+])
+def test_analyze_empty_or_garbage_text_degrades(text):
+    """No computations -> zero cost + a warning, never an exception."""
+    c = analyze(text)
+    assert c.flops == 0 and c.bytes == 0 and c.collective_bytes == 0
+    assert c.warnings == ["no entry computation found"]
+
+
+def test_analyze_unparseable_shape_strings_skipped():
+    """Ops whose type strings don't parse (opaque/token/custom dtypes)
+    contribute zero bytes instead of crashing the sweep."""
+    hlo = """
+HloModule weird
+
+ENTRY %main (p0: f32[8,4]) -> f32[8,4] {
+  %p0 = f32[8,4]{1,0} parameter(0)
+  %tok = token[] after-all()
+  %oc = opaque[] custom-call(%p0), custom_call_target="noop"
+  %strange = mystery[8,?]{1,0} add(%p0, %p0)
+  ROOT %out = f32[8,4]{1,0} add(%p0, %p0)
+}
+"""
+    c = analyze(hlo)                 # must not raise
+    # the well-formed root add still counts: 2 operands + 1 output
+    assert c.bytes >= 3 * 8 * 4 * 4
+    assert c.flops >= 8 * 4
+
+
+def test_analyze_fusion_with_multiply_shapes():
+    """A fusion op charges operands + outputs once (innards excluded),
+    including tuple-shaped fusion outputs."""
+    hlo = """
+HloModule fused
+
+%fused_computation (a: f32[16,8], b: f32[16,8]) -> f32[16,8] {
+  %a = f32[16,8]{1,0} parameter(0)
+  %b = f32[16,8]{1,0} parameter(1)
+  %m = f32[16,8]{1,0} multiply(%a, %b)
+  ROOT %s = f32[16,8]{1,0} add(%m, %b)
+}
+
+ENTRY %main (p0: f32[16,8], p1: f32[16,8]) -> (f32[16,8], f32[16,8]) {
+  %p0 = f32[16,8]{1,0} parameter(0)
+  %p1 = f32[16,8]{1,0} parameter(1)
+  %f = f32[16,8]{1,0} fusion(%p0, %p1), kind=kLoop, calls=%fused_computation
+  ROOT %t = (f32[16,8]{1,0}, f32[16,8]{1,0}) tuple(%f, %p1)
+}
+"""
+    c = analyze(hlo)
+    n = 16 * 8 * 4
+    # fusion: 2 operand reads + 1 output write; tuple is free; the
+    # multiply/add INSIDE the fusion body add flops but no bytes
+    assert c.bytes == 3 * n
+    assert c.flops == 2 * 16 * 8
+
+
+def test_analyze_while_without_trip_count_warns_once():
+    hlo = """
+HloModule loopy
+
+%body (x: f32[4]) -> f32[4] {
+  ROOT %x = f32[4]{0} parameter(0)
+}
+
+%cond (x: f32[4]) -> pred[] {
+  %x = f32[4]{0} parameter(0)
+  ROOT %p = pred[] constant(false)
+}
+
+ENTRY %main (p0: f32[4]) -> f32[4] {
+  %p0 = f32[4]{0} parameter(0)
+  ROOT %w = f32[4]{0} while(%p0), condition=%cond, body=%body
+}
+"""
+    c = analyze(hlo)
+    assert any("unknown trip count" in w for w in c.warnings)
+
+
+# ------------------------------------- kernel_roofline (bench gate)
+
+def test_kernel_roofline_fraction_in_unit_interval():
+    x = jnp.ones((256, 64))
+    txt = jax.jit(lambda x: x @ x.T).lower(x).compile().as_text()
+    out = kernel_roofline(txt, measured_s=1e-3)
+    f = out["roofline_fraction"]
+    assert f is not None and 0.0 < f <= 1.0
+    assert out["bound_ms"] > 0
+    assert out["bound_kind"] in ("compute", "memory", "collective")
+
+
+def test_kernel_roofline_clamps_at_one():
+    """A measured time below the hardware bound clamps to exactly 1.0
+    (the gate treats >1 as a measurement artifact, not an achievement)."""
+    x = jnp.ones((512, 512))
+    txt = jax.jit(lambda x: x @ x).lower(x).compile().as_text()
+    assert kernel_roofline(txt, measured_s=1e-12)["roofline_fraction"] == 1.0
+
+
+def test_kernel_roofline_degenerate_inputs():
+    assert kernel_roofline("", measured_s=1e-3)["roofline_fraction"] is None
+    x = jnp.ones((16, 16))
+    txt = jax.jit(lambda x: x + x).lower(x).compile().as_text()
+    assert kernel_roofline(txt, measured_s=0.0)["roofline_fraction"] is None
+
+
+def test_bench_entries_carry_roofline_fraction():
+    """Quick-mode bench functions must attach roofline_fraction ∈ (0, 1]
+    to every kernel entry — the invariant the bench exit code gates."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "benchmarks"))
+    try:
+        import kernel_bench
+    finally:
+        sys.path.pop(0)
+    results = {}
+    # tiny shapes: seconds, not the bench's minutes
+    kernel_bench.bench_rq_decode(results, n=2048, d=16, M=2, K=8,
+                                 batch=256)
+    kernel_bench.bench_adc(results, d=16, D=4, K=8, n_cand=2048)
+    kernel_bench.bench_dpq_assign(results, d=16, D=4, K=8, b=512)
+    for name in ("rq_decode", "adc", "dpq_assign"):
+        f = results[name]["roofline_fraction"]
+        assert f is not None and 0.0 < f <= 1.0, (name, f)
+    assert results["rq_decode"]["parity_ok"]
+    assert "speedup_ok" in results["rq_decode"]
+    assert results["rq_decode"]["tuned_block_b"] in (64, 128, 256, 512)
 
 
 def test_remat_recompute_visible_in_flops():

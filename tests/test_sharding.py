@@ -173,6 +173,45 @@ def test_sharded_quantized_gather_matches_serve_all_variants():
     """)
 
 
+def test_sharded_rq_single_pass_decode_bit_identical():
+    """The rq scheme's single-pass ``rq_decode_stages`` serve path
+    under Mesh(data=2, model=2) must be BIT-identical (array_equal,
+    not a tolerance) to the single-device fused decode — the per-shard
+    decode routes through the same dispatched op, summed via psum of
+    disjoint shard partials, so not even the reduction order differs.
+    Covers odd/ragged batch shapes and both kernel backends."""
+    _run("""
+        import warnings; warnings.filterwarnings('ignore')
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import Embedding, EmbeddingConfig
+        from repro.sharding.rules import shard_quantized_artifact
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        for backend in ("xla", "interpret"):
+            cfg = EmbeddingConfig(vocab_size=128, dim=16, kind="rq",
+                                  num_levels=3, num_centroids=8,
+                                  decode_block_b=32,
+                                  kernel_backend=backend)
+            emb = Embedding(cfg)
+            art = emb.export(emb.init(jax.random.PRNGKey(0)))
+            assert art["codes"].dtype == jnp.uint8
+            scfg = dataclasses.replace(cfg, sharded_codes=True)
+            semb = Embedding(scfg)
+            art_s = shard_quantized_artifact(art, scfg, mesh)
+            for shape in [(8, 8), (7,), (1,), (3, 5)]:
+                ids = jax.random.randint(
+                    jax.random.PRNGKey(sum(shape)), shape, 0, 128)
+                ref = emb.serve(art, ids)
+                assert ref.shape == shape + (16,)
+                with mesh:
+                    out = jax.jit(semb.serve)(art_s, ids)
+                np.testing.assert_array_equal(np.asarray(out),
+                                              np.asarray(ref))
+        print("OK")
+    """)
+
+
 def test_sharded_engine_matches_single_device():
     """ServingEngine(mesh=...) — per-shard device-resident artifact,
     flushes padded to block_b x data shards — returns the same rows as
