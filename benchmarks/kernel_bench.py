@@ -18,8 +18,10 @@ three-term v5e roofline bound of its compiled HLO over the measured
 time (``repro.roofline.kernel_roofline``, DESIGN.md §11) — and the
 decode benches record the block geometry the autotune cache picked
 (``tuned_block_b``/``tuned_block_d``).  Exit-code gates: every parity
-flag, the hot-cache and rq-decode speedup bars, the async SLO, and
-``roofline_fraction`` ∈ (0, 1] on each kernel entry.
+flag, the hot-cache and rq-decode speedup bars, the async SLO, the
+retrieval-scale recall/peak-memory pair (``recall_ok`` /
+``build_peak_ok``), and ``roofline_fraction`` ∈ (0, 1] on each kernel
+entry.
 
 Results are written to a BENCH_*.json (default BENCH_kernels.json) so
 PR-over-PR runs can be diffed.
@@ -182,6 +184,17 @@ def bench_sharded_decode(results: dict, n: int, d: int, D: int, K: int,
     t_single = _time(single_fn, artifact, ids)
     ref = single_fn(artifact, ids)
 
+    # tune the decode block geometry on the shard-local shape FIRST:
+    # the shard body's batch is the all-gathered GLOBAL batch, so the
+    # tuner sees exactly what each shard will decode.  quantized_gather
+    # defaults block_b to this cache; the pinned variant below times
+    # the old behaviour (cfg.decode_block_b forced into the shard body)
+    backend = dispatch.resolve_backend(cfg.kernel_backend)
+    sel = jnp.take(artifact["codes"], ids, axis=0).astype(jnp.int32)
+    tuned = next(iter(dispatch.tune(
+        "mgqe_decode", [(sel, artifact["centroids"])],
+        backend=backend).values()))
+
     mesh = jax.make_mesh((2, 2), ("data", "model"))
     emb_sharded = Embedding(cfg)
     art_sharded = shard_quantized_artifact(artifact, cfg, mesh)
@@ -191,6 +204,10 @@ def bench_sharded_decode(results: dict, n: int, d: int, D: int, K: int,
         out = sharded_fn(art_sharded, ids)
         roofline = _roofline(sharded_fn, art_sharded, ids,
                              measured_s=t_sharded)
+        from repro.sharding.quantized import quantized_gather
+        pinned_fn = jax.jit(lambda a, i: quantized_gather(
+            a, i, cfg, mesh=mesh, decode_block_b=cfg.decode_block_b))
+        t_pinned = _time(pinned_fn, art_sharded, ids)
     err = float(jnp.max(jnp.abs(out - ref)))
     parity_ok = err < 1e-5
     if not parity_ok:
@@ -205,11 +222,18 @@ def bench_sharded_decode(results: dict, n: int, d: int, D: int, K: int,
           f"ms (parity err {err:.1e}); codes {n*D/1e6:.1f} MB -> "
           f"{n*D/model_n/1e6:.1f} MB/shard, wire {wire_mb:.2f} MB/step "
           f"(vocab-independent)")
+    print(f"  shard-body block_b: pinned {cfg.decode_block_b} "
+          f"{t_pinned*1e3:.2f} ms | tuned {tuned.get('block_b')} "
+          f"{t_sharded*1e3:.2f} ms ({t_pinned/t_sharded:.2f}x)")
     results["sharded_decode"] = {
         "vocab": n, "dim": d, "num_subspaces": D, "num_centroids": K,
         "batch": batch, "mesh": dict(mesh.shape),
         "single_device_ms": t_single * 1e3,
         "sharded_ms": t_sharded * 1e3,
+        "sharded_pinned_ms": t_pinned * 1e3,
+        "pinned_block_b": cfg.decode_block_b,
+        "tuned_block_b": tuned.get("block_b"),
+        "tuned_vs_pinned_speedup": t_pinned / t_sharded,
         "parity_max_err": err,
         "parity_ok": parity_ok,
         "codes_mbytes_total": n * D / 1e6,
@@ -636,6 +660,125 @@ def bench_retrieval_topk(results: dict, d: int, D: int, n_cand: int,
     }
 
 
+def bench_retrieval_scale(results: dict, n: int, backend=None,
+                          nprobes=(1, 4, 16, 64, 128), k: int = 100,
+                          batch: int = 16):
+    """Streamed build + nprobe Pareto sweep at corpus scale (DESIGN.md
+    §12): a Zipf-clustered ``n``-row corpus is built through the
+    streaming driver (sampled codebook fit, blocked assign+encode,
+    quantile-capped chained list layout), then searched at each swept
+    ``nprobe``, recording recall@``k`` vs the exact dense scan and the
+    p50/p99 single-flush search latency — the recall/latency dial the
+    operator actually turns.
+
+    Two gates flip the exit code (after the json is written):
+    ``recall_ok`` — some swept nprobe reaches recall@k >= 0.95 — and
+    ``build_peak_ok`` — the build's peak staged device bytes stayed
+    within the config-derived O(sample + block) bound, i.e. the build
+    never materialized O(corpus) on device (``BuildStats``,
+    retrieval/build.py).  The layout fields record the skew story:
+    ``padded_layout_mbytes`` is what the old pad-to-longest-list layout
+    would allocate, ``layout_mbytes`` what the chained layout does,
+    ``ideal_layout_mbytes`` the un-padded code+id bytes.
+    """
+    import dataclasses
+    from repro.data.synthetic import pq_clustered_corpus
+    from repro.retrieval import IndexConfig, get_index, suggest_nlist
+    from repro.retrieval.build import build_ivf_artifact
+
+    d, D, K = 64, 8, 128
+    n_clusters = min(2048, suggest_nlist(n))
+    vecs_np, q_np = pq_clustered_corpus(n=n, d=d, num_subspaces=D,
+                                        n_queries=batch,
+                                        n_clusters=n_clusters,
+                                        cluster_zipf_a=1.3)
+    nlist = suggest_nlist(n, max(nprobes))
+    cfg = IndexConfig(kind="ivf_pq", num_subspaces=D, num_centroids=K,
+                      iters=10, coarse_iters=10, nlist=nlist,
+                      nprobe=max(nprobes),
+                      train_sample=min(n, 131_072),
+                      encode_block=min(n, 131_072),
+                      list_cap_quantile=0.9,
+                      kernel_backend=backend)
+    art_host, stats = build_ivf_artifact(jax.random.PRNGKey(0),
+                                         vecs_np, cfg)
+    print(f"retrieval scale n={n/1e6:.1f}M nlist={nlist} "
+          f"[{dispatch.resolve_backend(backend)}]: build "
+          f"{stats.seconds:.1f} s in {stats.blocks} blocks of "
+          f"{stats.block_rows} (sample {stats.sample_rows}); peak device "
+          f"{stats.peak_device_bytes/1e6:.0f} MB vs bound "
+          f"{stats.device_bound_bytes/1e6:.0f} MB vs corpus "
+          f"{vecs_np.nbytes/1e6:.0f} MB "
+          f"({'OK' if stats.peak_device_ok else 'BLOWN'})")
+    layout_mb = (art_host["list_codes"].nbytes
+                 + art_host["list_ids"].nbytes) / 1e6
+    padded_mb = nlist * stats.list_count_max * (D + 4) / 1e6
+    ideal_mb = n * (D + 4) / 1e6
+    print(f"  list layout: cap {stats.list_cap} (q=0.9), chain <= "
+          f"{stats.max_chain}, {stats.lists_ext} ext lists -> "
+          f"{layout_mb:.0f} MB (pad-to-max {padded_mb:.0f} MB, ideal "
+          f"{ideal_mb:.0f} MB)")
+
+    art = {name: jnp.asarray(leaf) for name, leaf in art_host.items()}
+    q = jnp.asarray(q_np)
+    ex_ids = np.argsort(-(q_np @ vecs_np.T), axis=1)[:, :k]
+    sweep, best_recall = {}, 0.0
+    iters = 30 if n <= 2_000_000 else 10
+    for p in nprobes:
+        idx = get_index(dataclasses.replace(cfg, nprobe=p))
+        fn = jax.jit(lambda a, qq, idx=idx: idx.search(a, qq, k))
+        out = fn(art, q)
+        jax.block_until_ready(out)
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = fn(art, q)
+            jax.block_until_ready(out)
+            times.append(time.perf_counter() - t0)
+        ids = np.asarray(out[1])
+        rec = float(np.mean([np.isin(ids[b], ex_ids[b]).mean()
+                             for b in range(batch)]))
+        best_recall = max(best_recall, rec)
+        p50, p99 = (float(np.percentile(times, q_) * 1e3)
+                    for q_ in (50, 99))
+        sweep[str(p)] = {"recall_at_k": rec, "p50_ms": p50,
+                         "p99_ms": p99}
+        print(f"  nprobe={p:>4}: recall@{k} {rec:.3f} | p50 "
+              f"{p50:.1f} ms | p99 {p99:.1f} ms")
+    recall_ok = best_recall >= 0.95
+    if not recall_ok:
+        print(f"WARNING: retrieval scale recall@{k} below 0.95 at every "
+              f"swept nprobe (best {best_recall:.3f})")
+    if not stats.peak_device_ok:
+        print("WARNING: retrieval scale build peak device bytes "
+              "exceeded the O(sample + block) bound")
+    results["retrieval_scale"] = {
+        "corpus_rows": n, "dim": d, "num_subspaces": D,
+        "num_centroids": K, "nlist": nlist, "k": k, "batch": batch,
+        "n_clusters": n_clusters, "cluster_zipf_a": 1.3,
+        "backend": dispatch.resolve_backend(backend),
+        "build_seconds": stats.seconds,
+        "build_blocks": stats.blocks,
+        "train_sample": stats.sample_rows,
+        "encode_block": stats.block_rows,
+        "peak_device_mbytes": stats.peak_device_bytes / 1e6,
+        "device_bound_mbytes": stats.device_bound_bytes / 1e6,
+        "build_peak_ok": stats.peak_device_ok,
+        "corpus_mbytes": vecs_np.nbytes / 1e6,
+        "layout_mbytes": layout_mb,
+        "padded_layout_mbytes": padded_mb,
+        "ideal_layout_mbytes": ideal_mb,
+        "list_cap": stats.list_cap,
+        "max_chain": stats.max_chain,
+        "lists_ext": stats.lists_ext,
+        "list_count_max": stats.list_count_max,
+        "list_cap_quantile": 0.9,
+        "sweep": sweep,
+        "recall_at_k_best": best_recall,
+        "recall_ok": recall_ok,
+    }
+
+
 def bench_dpq_assign(results: dict, d: int, D: int, K: int, b: int):
     k = jax.random.PRNGKey(0)
     cent = jax.random.normal(k, (D, K, d // D))
@@ -652,7 +795,8 @@ def bench_dpq_assign(results: dict, d: int, D: int, K: int, b: int):
     }
 
 
-def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
+def main(out_json: str = "BENCH_kernels.json", quick: bool = False,
+         scale_rows: int = 0, scale_backend: str = None):
     print("== kernel micro-bench (dispatch-layer paths + byte accounting) ==")
     n, d, D, K = (100_000 if quick else 1_000_000), 64, 8, 256
     results = {
@@ -672,6 +816,9 @@ def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
                         else (200, 500, 1000, 2000))
     bench_adc(results, d, D, K, n_cand=n)
     bench_retrieval_topk(results, d, D, n_cand=100_000)
+    bench_retrieval_scale(
+        results, n=scale_rows or (1_000_000 if quick else 10_000_000),
+        backend=scale_backend)
     bench_dpq_assign(results, d, D, K, b=8192 if quick else 65_536)
     if out_json:
         with open(out_json, "w") as f:
@@ -685,6 +832,8 @@ def main(out_json: str = "BENCH_kernels.json", quick: bool = False):
     ok &= results.get("hot_cache_lookup", {}).get("speedup_ok", True)
     ok &= results.get("rq_decode", {}).get("speedup_ok", True)
     ok &= results.get("async_serving", {}).get("slo_ok", True)
+    ok &= results.get("retrieval_scale", {}).get("recall_ok", True)
+    ok &= results.get("retrieval_scale", {}).get("build_peak_ok", True)
 
     def roofline_ok(entry):
         if not entry or "skipped" in entry:
@@ -710,6 +859,14 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--devices", type=int, default=4,
                     help="forced host device count for the sharded bench")
+    ap.add_argument("--scale-rows", type=int, default=0,
+                    help="retrieval_scale corpus rows (default: 1M "
+                         "quick / 10M full)")
+    ap.add_argument("--scale-backend", default=None,
+                    help="kernel backend for the retrieval_scale "
+                         "encode (e.g. interpret; default: resolved)")
     a = ap.parse_args()
     force_host_device_count(a.devices)
-    raise SystemExit(main(out_json=a.json, quick=a.quick))
+    raise SystemExit(main(out_json=a.json, quick=a.quick,
+                          scale_rows=a.scale_rows,
+                          scale_backend=a.scale_backend))

@@ -47,6 +47,15 @@ def log2ceil(k: int) -> int:
     return max(1, math.ceil(math.log2(k)))
 
 
+# ``QuantizedScheme.decode`` block_b sentinel: pin the decode kernel's
+# batch block to ``cfg.decode_block_b``.  Right default for the
+# single-device serve path (the engine pads every flush to exactly
+# that size); the sharded gather passes ``block_b=None`` instead so the
+# autotune cache (DESIGN.md §11) picks the block for the shard-local
+# batch shape.
+PIN_TO_CONFIG: Any = "pin-to-config"
+
+
 @dataclasses.dataclass(frozen=True)
 class ArtifactLeaf:
     """One leaf of a serving artifact, fully described.
@@ -252,15 +261,26 @@ class QuantizedScheme(Scheme):
         ids = jnp.arange(self.cfg.hot_rows, dtype=jnp.int32)
         return jax.jit(self.decode)(artifact, ids)
 
+    def resolve_block_b(self, block_b) -> Optional[int]:
+        """Map the ``decode`` block_b argument to a concrete value:
+        :data:`PIN_TO_CONFIG` -> ``cfg.decode_block_b``; anything else
+        (None = autotune cache, or an explicit int) passes through."""
+        return self.cfg.decode_block_b if block_b is PIN_TO_CONFIG \
+            else block_b
+
     def decode(self, artifact: dict, ids: jax.Array,
-               tier_ids: Optional[jax.Array] = None) -> jax.Array:
+               tier_ids: Optional[jax.Array] = None,
+               block_b=PIN_TO_CONFIG) -> jax.Array:
         """Single-device fused decode of ``ids`` against the artifact's
         code tables.  ``tier_ids`` defaults to ``ids``; the sharded
         gather passes GLOBAL ids there while ``ids`` are shard-local
         row offsets — any frequency-rank-dependent blending must key on
-        the global id.  ONE implementation shared by the single-device
-        serve path and each shard's local decode, so they cannot
-        drift."""
+        the global id.  ``block_b`` is the decode kernel's batch block:
+        the default pins ``cfg.decode_block_b`` (flush batches are
+        padded to it), ``None`` defers to the autotune cache, an int
+        pins explicitly — resolve via :meth:`resolve_block_b`.  ONE
+        implementation shared by the single-device serve path and each
+        shard's local decode, so they cannot drift."""
         raise NotImplementedError
 
 

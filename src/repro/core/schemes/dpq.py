@@ -2,8 +2,9 @@
 from __future__ import annotations
 
 from repro.core import dpq
-from repro.core.schemes.base import (ArtifactLeaf, QuantizedScheme,
-                                     log2ceil, register_scheme)
+from repro.core.schemes.base import (PIN_TO_CONFIG, ArtifactLeaf,
+                                     QuantizedScheme, log2ceil,
+                                     register_scheme)
 
 
 @register_scheme("dpq")
@@ -32,11 +33,12 @@ class DifferentiableProductQuantization(QuantizedScheme):
         return {"codes": codes.astype(self.code_dtype),
                 "centroids": params["centroids"]}
 
-    def decode(self, artifact, ids, tier_ids=None):
+    def decode(self, artifact, ids, tier_ids=None,
+               block_b=PIN_TO_CONFIG):
         cfg = self.cfg
         return dpq.serving_lookup(artifact["codes"], artifact["centroids"],
                                   ids, backend=cfg.kernel_backend,
-                                  block_b=cfg.decode_block_b)
+                                  block_b=self.resolve_block_b(block_b))
 
     def cold_artifact_spec(self):
         cfg = self.cfg

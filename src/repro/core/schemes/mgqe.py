@@ -11,8 +11,9 @@ import jax.numpy as jnp
 
 from repro.core import dpq, mgqe
 from repro.core.partition import tier_of_ids
-from repro.core.schemes.base import (ArtifactLeaf, QuantizedScheme,
-                                     log2ceil, register_scheme)
+from repro.core.schemes.base import (PIN_TO_CONFIG, ArtifactLeaf,
+                                     QuantizedScheme, log2ceil,
+                                     register_scheme)
 from repro.core.types import MGQE_VARIANTS
 
 
@@ -73,16 +74,18 @@ class MultiGranularQuantizedEmbedding(QuantizedScheme):
     def export(self, params):
         return mgqe.export_serving(params, self.cfg)
 
-    def decode(self, artifact, ids, tier_ids=None):
+    def decode(self, artifact, ids, tier_ids=None,
+               block_b=PIN_TO_CONFIG):
         """Decode through the dispatched fused kernel, blending
         private-variant tiers by mask (tier membership keys on the
         GLOBAL frequency-sorted id — see QuantizedScheme.decode)."""
         cfg = self.cfg
+        bb = self.resolve_block_b(block_b)
         if cfg.mgqe_variant == "shared_k":
             return dpq.serving_lookup(artifact["codes"],
                                       artifact["centroids"], ids,
                                       backend=cfg.kernel_backend,
-                                      block_b=cfg.decode_block_b)
+                                      block_b=bb)
         tiers = tier_of_ids(ids if tier_ids is None else tier_ids,
                             cfg.tier_boundaries)
         outs = []
@@ -92,7 +95,7 @@ class MultiGranularQuantizedEmbedding(QuantizedScheme):
                        else artifact["codes"])
             outs.append(dpq.serving_lookup(codes_i, cent, ids,
                                            backend=cfg.kernel_backend,
-                                           block_b=cfg.decode_block_b))
+                                           block_b=bb))
         out = outs[0]
         for i in range(1, len(outs)):
             out = jnp.where((tiers == i)[..., None], outs[i], out)

@@ -40,8 +40,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dpq
-from repro.core.schemes.base import (ArtifactLeaf, QuantizedScheme,
-                                     log2ceil, register_scheme)
+from repro.core.schemes.base import (PIN_TO_CONFIG, ArtifactLeaf,
+                                     QuantizedScheme, log2ceil,
+                                     register_scheme)
 
 
 def _stage_assign(r: jax.Array, codebook: jax.Array) -> jax.Array:
@@ -118,17 +119,18 @@ class ResidualQuantization(QuantizedScheme):
         return {"codes": jnp.concatenate(outs).astype(self.code_dtype),
                 "codebooks": cbs}
 
-    def decode(self, artifact, ids, tier_ids=None):
+    def decode(self, artifact, ids, tier_ids=None,
+               block_b=PIN_TO_CONFIG):
         cfg = self.cfg
         from repro.kernels.mgqe_decode import decode_stages
         # codes keep their stored dtype (uint8) end-to-end; the kernel
         # widens per block, the XLA ref per gather.
         codes = jnp.take(artifact["codes"], ids, axis=0)
         m = codes.shape[-1]
-        # block_b stays pinned to decode_block_b (the engine pads flush
-        # batches to it); block_d is left for the autotune cache.
+        # block_b defaults to the decode_block_b pin (the engine pads
+        # flush batches to it); block_d is left for the autotune cache.
         out = decode_stages(codes.reshape(-1, m), artifact["codebooks"],
-                            block_b=cfg.decode_block_b,
+                            block_b=self.resolve_block_b(block_b),
                             backend=cfg.kernel_backend)
         return out.reshape(ids.shape + (cfg.dim,))
 

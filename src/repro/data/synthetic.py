@@ -294,7 +294,8 @@ def pq_clustered_corpus(n: int = 100_000, d: int = 64,
                         num_subspaces: int = 8, n_words: int = 16,
                         n_clusters: int = 64, p_mut: float = 0.25,
                         n_queries: int = 16, query_noise: float = 0.05,
-                        seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+                        seed: int = 0, cluster_zipf_a: float = 0.0
+                        ) -> Tuple[np.ndarray, np.ndarray]:
     """Synthetic corpus for measuring retrieval recall vs the exact
     dense scan: (items (n, d) f32, queries (n_queries, d) f32).
 
@@ -308,13 +309,21 @@ def pq_clustered_corpus(n: int = 100_000, d: int = 64,
     uniformly) so top-k boundaries are not degenerate tie groups.
     Queries point along cluster prototypes plus noise — the
     concentrated-top-k regime IVF exists for.
+
+    ``cluster_zipf_a`` > 1 draws cluster membership from the truncated
+    power law instead of uniform — head clusters hold most of the
+    corpus, the skew regime the bounded IVF list layout exists for
+    (DESIGN.md §12).  0 (default) keeps cluster sizes uniform.
     """
     assert d % num_subspaces == 0, (d, num_subspaces)
     s = d // num_subspaces
     rng = np.random.default_rng(seed)
     books = rng.normal(size=(num_subspaces, n_words, s)).astype(np.float32)
     proto = rng.integers(0, n_words, (n_clusters, num_subspaces))
-    g = rng.integers(0, n_clusters, n)
+    if cluster_zipf_a:
+        g = zipf_ids(rng, n, n_clusters, cluster_zipf_a)
+    else:
+        g = rng.integers(0, n_clusters, n)
     mut = rng.random((n, num_subspaces)) < p_mut
     code = np.where(mut, rng.integers(0, n_words, (n, num_subspaces)),
                     proto[g])

@@ -537,12 +537,20 @@ class RetrievalEngine(_MicroBatchEngine):
     ``model_axis`` (``sharding/rules.shard_retrieval_artifact``) and
     every flush fans one shard_map per-shard-top-k + merge across the
     whole mesh — wire bytes O(B·k), corpus-independent.
+
+    Pass ``host_staged=True`` (or build the index with
+    ``IndexConfig(host_staged=True)``) to keep the O(corpus) list
+    tables in HOST memory (DESIGN.md §12): every flush stages only the
+    probed lists to device (``Index.search_host_staged``) — upload
+    ∝ B·nprobe·cap per flush, corpus-independent.  Single-device only
+    (a sharded corpus already bounds per-device bytes by 1/shards).
     """
 
     def __init__(self, index, artifact: dict, k: int,
                  block_q: int = 64, max_queue: int = 4096,
                  backend: Optional[str] = None,
-                 mesh=None, model_axis: str = "model"):
+                 mesh=None, model_axis: str = "model",
+                 host_staged: Optional[bool] = None):
         from repro.retrieval import get_index, sharded_topk
         if backend is not None:
             index = get_index(dataclasses.replace(
@@ -550,6 +558,18 @@ class RetrievalEngine(_MicroBatchEngine):
         self.index, self.k = index, k
         self.block_q = block_q
         self.model_axis = model_axis
+        if host_staged is None:
+            host_staged = index.cfg.host_staged
+        if host_staged:
+            if mesh is not None:
+                raise ValueError(
+                    "host_staged serving is single-device; a sharded "
+                    "corpus already bounds per-device bytes")
+            if not index.supports_host_staged:
+                raise ValueError(
+                    f"index kind {index.cfg.kind!r} has no host-staged "
+                    f"serve path")
+        self.host_staged = bool(host_staged)
         data_shards = 1
         if mesh is not None:
             if not index.supports_sharded:
@@ -579,9 +599,28 @@ class RetrievalEngine(_MicroBatchEngine):
                 artifact, index, mesh, model_axis=model_axis)
             self._search = jax.jit(lambda art, q: sharded_topk(
                 index, art, q, k, model_axis=model_axis, mesh=mesh))
+        elif self.host_staged:
+            # host leaves stay numpy; only the tiny replicated leaves
+            # (coarse table, codebooks, chain) go to device up front
+            host = set(index.host_leaves())
+            self.artifact = {
+                name: np.asarray(leaf) if name in host
+                else jax.device_put(jnp.asarray(leaf))
+                for name, leaf in artifact.items()}
+            # search_host_staged jits its device stages internally (the
+            # staged-list count varies per flush)
+            self._search = lambda art, q: index.search_host_staged(
+                art, q, k)
         else:
-            self.artifact = jax.device_put(artifact)
+            self.artifact = jax.device_put(
+                {name: jnp.asarray(leaf)
+                 for name, leaf in artifact.items()})
             self._search = jax.jit(lambda art, q: index.search(art, q, k))
+
+    @property
+    def staged_mbytes(self) -> float:
+        """Total MB staged to device so far (host-staged mode)."""
+        return float(getattr(self.index, "staged_bytes", 0)) / 1e6
 
     def _coerce(self, queries) -> jax.Array:
         q = jnp.asarray(queries, jnp.float32)

@@ -101,17 +101,22 @@ def serve_lm(cfg, batch: int, prompt_len: int, decode_steps: int):
 def serve_retrieval(cfg, n_candidates: int, index_kind: str = "flat_pq",
                     nprobe: int = 8, topk: int = 100,
                     n_requests: int = 50, req_batch: int = 16,
-                    backend=None):
+                    backend=None, host_staged: bool = False):
     """Top-k candidate retrieval through the index registry + the
-    micro-batching RetrievalEngine (DESIGN.md §8)."""
+    micro-batching RetrievalEngine (DESIGN.md §8).
+
+    ``host_staged`` keeps the O(corpus) list tables in host memory and
+    stages only probed lists per flush (DESIGN.md §12)."""
     from repro.launch.engine import RetrievalEngine
     from repro.models.recsys.two_tower import TwoTower
-    from repro.retrieval import IndexConfig
+    from repro.retrieval import IndexConfig, suggest_nlist
     model = TwoTower(cfg)
     params = model.init(jax.random.PRNGKey(0))
     n = min(n_candidates, cfg.n_items)
     item_ids = jnp.arange(n, dtype=jnp.int32)
-    nlist = max(nprobe, min(64, max(1, n // 64)))
+    # nlist ≈ √N balances probed work against list length; the old
+    # min(64, n // 64) cap left a 10M corpus probing 156k-row lists
+    nlist = suggest_nlist(n, nprobe)
     icfg = IndexConfig(kind=index_kind, num_subspaces=8, num_centroids=64,
                        nlist=nlist, nprobe=min(nprobe, nlist),
                        kernel_backend=backend)
@@ -129,7 +134,8 @@ def serve_retrieval(cfg, n_candidates: int, index_kind: str = "flat_pq",
              if index_kind == "ivf_pq" else ""))
 
     # online: stream user batches through the engine; top-k ids + scores
-    engine = RetrievalEngine(index, artifact, k=topk, block_q=16)
+    engine = RetrievalEngine(index, artifact, k=topk, block_q=16,
+                             host_staged=host_staged)
     rng = np.random.default_rng(0)
     users = [rng.integers(0, cfg.n_users,
                           int(rng.integers(1, req_batch + 1)))
@@ -143,6 +149,10 @@ def serve_retrieval(cfg, n_candidates: int, index_kind: str = "flat_pq",
     print(f"engine: {st.requests} requests / {st.lookups} queries in "
           f"{st.flushes} flushes, {st.seconds:.3f}s -> "
           f"{st.lookups_per_s:,.0f} queries/s x top-{topk}")
+    if host_staged:
+        print(f"host-staged: {engine.staged_mbytes:.2f} MB staged over "
+              f"{st.flushes * 2} flushes (warm+measured) vs "
+              f"{code_mb:.1f} MB device-resident")
 
     # recall vs the exact dense scan, one probe batch
     scores, ids = model.retrieval_topk(params, index, artifact,
@@ -330,6 +340,10 @@ def main():
                     help="ivf_pq: coarse lists probed per query")
     ap.add_argument("--topk", type=int, default=100,
                     help="candidates returned per retrieval query")
+    ap.add_argument("--host-staged", action="store_true",
+                    help="retrieval: keep the list tables in host "
+                         "memory; stage only probed lists per flush "
+                         "(ivf_pq, DESIGN.md §12)")
     ap.add_argument("--engine", action="store_true",
                     help="drive the micro-batching ServingEngine")
     ap.add_argument("--requests", type=int, default=200)
@@ -389,6 +403,9 @@ def main():
     if args.use_async and args.arrival_rate <= 0:
         ap.error(f"--arrival-rate must be > 0 (open-loop load is "
                  f"rate-driven), got {args.arrival_rate}")
+    if args.host_staged and args.engine:
+        ap.error("--host-staged applies to the retrieval serving path, "
+                 "not --engine")
     if args.engine:
         serve_engine(family, cfg, args.requests, args.req_batch,
                      backend=args.kernel_backend, mesh_spec=args.mesh,
@@ -402,7 +419,8 @@ def main():
     elif cfg.model == "two_tower":
         serve_retrieval(cfg, args.candidates, index_kind=args.retrieval,
                         nprobe=args.nprobe, topk=args.topk,
-                        backend=args.kernel_backend)
+                        backend=args.kernel_backend,
+                        host_staged=args.host_staged)
     elif family == "recsys":
         serve_ctr(cfg, args.batch)
     else:

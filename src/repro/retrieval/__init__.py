@@ -8,19 +8,24 @@ Batched top-k candidate retrieval over PQ-coded corpora: an
   ``ivf_pq``   coarse k-means partition + per-list PQ residual codes,
                ``nprobe``-controlled probing
 
-plus deterministic top-k merging (``topk.py``) and row-sharded
-distributed search (``sharded.py``).  Serve through
-:class:`repro.launch.engine.RetrievalEngine`.
+plus deterministic top-k merging (``topk.py``), row-sharded
+distributed search (``sharded.py``), and the streamed build driver for
+corpora that do not fit on device (``build.py``, DESIGN.md §12).
+Serve through :class:`repro.launch.engine.RetrievalEngine`.
 """
 from repro.retrieval import flat_pq, ivf_pq  # noqa: F401  (register kinds)
 from repro.retrieval.base import (Index, IndexConfig, get_index,
                                   index_class, register_index,
-                                  registered_index_kinds)
+                                  registered_index_kinds, suggest_nlist)
+from repro.retrieval.build import (BuildStats, build_flat_artifact,
+                                   build_ivf_artifact)
 from repro.retrieval.flat_pq import FlatPQ
 from repro.retrieval.ivf_pq import IVFPQ
 from repro.retrieval.sharded import sharded_topk
 from repro.retrieval.topk import INVALID_ID, merge_topk, topk_by_position
 
-__all__ = ["FlatPQ", "IVFPQ", "INVALID_ID", "Index", "IndexConfig",
+__all__ = ["BuildStats", "FlatPQ", "IVFPQ", "INVALID_ID", "Index",
+           "IndexConfig", "build_flat_artifact", "build_ivf_artifact",
            "get_index", "index_class", "merge_topk", "register_index",
-           "registered_index_kinds", "sharded_topk", "topk_by_position"]
+           "registered_index_kinds", "sharded_topk", "suggest_nlist",
+           "topk_by_position"]

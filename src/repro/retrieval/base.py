@@ -36,6 +36,7 @@ valid candidates carry ``score = -inf, id = INVALID_ID``
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional, Tuple, Type
 
 import jax
@@ -52,6 +53,15 @@ class IndexConfig:
     only matter to IVF kinds.  ``block_n`` is the candidate-block size
     of the fused scoring kernels; ``kernel_backend`` pins the dispatch
     backend (None/auto = resolve per DESIGN.md §5).
+
+    The scale knobs (DESIGN.md §12) bound BUILD device memory for
+    corpora that do not fit on device: ``train_sample`` fits the
+    coarse/PQ codebooks on a row sample instead of the full corpus,
+    ``encode_block`` runs assignment + encoding over fixed-size row
+    blocks (host-accumulated), ``list_cap_quantile`` caps the padded
+    IVF list tables at a count quantile (overflow spills into chained
+    lists), and ``host_staged`` keeps the list tables in host memory at
+    serve time, staging only probed lists per flush.
     """
 
     kind: str = "flat_pq"
@@ -70,10 +80,36 @@ class IndexConfig:
     ivf_residual: bool = False
     block_n: int = 1024
     kernel_backend: Optional[str] = None
+    # ---- streaming-build / at-scale knobs (DESIGN.md §12) ----
+    train_sample: int = 0       # rows to fit codebooks on; 0 = full corpus
+    encode_block: int = 0       # rows per assign/encode block; 0 = one shot
+    list_cap_quantile: float = 0.95  # IVF list cap at this count quantile
+    host_staged: bool = False   # serve list tables from host memory
 
     def __post_init__(self):
+        if self.train_sample < 0 or self.encode_block < 0:
+            raise ValueError(
+                f"train_sample/encode_block must be >= 0, got "
+                f"{self.train_sample}/{self.encode_block}")
+        if not 0.0 < self.list_cap_quantile <= 1.0:
+            raise ValueError(
+                f"list_cap_quantile must be in (0, 1], got "
+                f"{self.list_cap_quantile}")
         cls = index_class(self.kind)   # raises on unknown kinds
         cls.validate(self)
+
+
+def suggest_nlist(n: int, nprobe: int = 1) -> int:
+    """Default IVF partition count for an ``n``-row corpus.
+
+    nlist ≈ √N keeps probed work ∝ nprobe·√N and list length ≈ √N —
+    the classic IVF balance point (a fixed cap like 64 leaves a 10M
+    corpus probing 156k-row lists).  Clamped so the result stays a
+    valid config: at least ``nprobe`` (nprobe ≤ nlist) and at most
+    ``n`` (every cell needs a seed vector).
+    """
+    nlist = int(round(math.sqrt(max(n, 1))))
+    return max(1, min(n, max(nprobe, nlist)))
 
 
 class Index:
@@ -125,6 +161,25 @@ class Index:
     @property
     def supports_sharded(self) -> bool:
         return bool(self.rows_leaves)
+
+    # host-staged serving (DESIGN.md §12): kinds that can keep their
+    # O(corpus) leaves in host memory and stage only the rows a flush
+    # probes override this to True and implement search_host_staged.
+    supports_host_staged: bool = False
+
+    def host_leaves(self) -> Tuple[str, ...]:
+        """Artifact keys that stay host-resident under host-staged
+        serving — by default the O(corpus) row tables."""
+        return self.rows_leaves
+
+    def search_host_staged(self, artifact: Dict, queries: jax.Array,
+                           k: int) -> Tuple[jax.Array, jax.Array]:
+        """Like ``search`` but ``host_leaves()`` entries of ``artifact``
+        are host numpy arrays; implementations stage only the probed
+        rows to device.  Must return bit-identical results to
+        ``search`` on the same artifact."""
+        raise NotImplementedError(
+            f"index kind {self.kind!r} has no host-staged serve path")
 
     def artifact_shard_specs(self, artifact: Dict,
                              model_axis: str = "model") -> Dict:

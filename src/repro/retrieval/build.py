@@ -1,0 +1,244 @@
+"""Streaming index-build driver (DESIGN.md §12).
+
+The one-shot build paths are O(corpus) in device memory three ways:
+the codebook fits materialize ``(N, nlist)`` / ``(D, N, K)`` score
+matrices, ``coarse_assign`` + ``encode_corpus`` run over all N rows at
+once, and the whole corpus lives on device for the duration.  This
+driver bounds all three for corpora that only fit in host memory:
+
+  * **sampled fit** — codebooks (coarse k-means + PQ) are fitted on a
+    ``cfg.train_sample``-row sample (without replacement, key-derived);
+    fit temporaries scale with the sample, not the corpus;
+  * **blocked encode** — ``coarse_assign`` / ``encode_corpus`` run over
+    fixed ``cfg.encode_block``-row blocks through ONE jitted step
+    (static shapes, last block zero-padded and sliced on the host),
+    outputs accumulated in host numpy;
+  * **host outputs** — the assembled list tables come back as host
+    numpy; placement (device_put / host-staged split / sharding) is the
+    serving engine's call, so build peak memory never includes the
+    O(corpus) artifact.
+
+Streamed == one-shot bit-for-bit at equal sample settings by
+construction: both run the SAME code path (one shot is a single block
+covering N), and both ``coarse_assign`` (row-wise argmin) and
+``dpq_assign`` are row-independent, so the block boundary cannot
+change any row's code.  ``tests/test_retrieval_scale.py`` holds the
+property over arbitrary chunk sizes.
+
+``BuildStats.peak_device_bytes`` tracks the bytes this driver stages
+to device at once (sample upload + per-block I/O + codebooks); the
+analytic ``device_bound_bytes`` is derived from the config alone —
+independent of N — and gates the scale bench (``peak_device_ok``).
+XLA fit temporaries are additionally O(sample·max(nlist, D·K)), also
+corpus-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class BuildStats:
+    """Accounting for one streamed build (DESIGN.md §12)."""
+
+    n: int = 0                   # corpus rows
+    d: int = 0                   # vector width
+    sample_rows: int = 0         # rows the codebooks were fitted on
+    block_rows: int = 0          # rows per encode block
+    blocks: int = 0              # encode blocks run
+    seconds: float = 0.0         # wall time of the whole build
+    peak_device_bytes: int = 0   # max bytes staged to device at once
+    device_bound_bytes: int = 0  # analytic config-derived bound
+    # layout accounting (IVF only; zeros for flat kinds)
+    list_count_max: int = 0      # longest coarse list
+    list_count_mean: float = 0.0
+    list_cap: int = 0            # per-list slot cap after quantile
+    max_chain: int = 0           # longest spill chain
+    lists_ext: int = 0           # extended list count (base + spill)
+
+    @property
+    def peak_device_ok(self) -> bool:
+        """Did staged device memory stay within the config-derived
+        (corpus-independent) bound?"""
+        return self.peak_device_bytes <= self.device_bound_bytes
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self) | {
+            "peak_device_ok": self.peak_device_ok}
+
+
+def training_sample(key: jax.Array, vectors_np: np.ndarray,
+                    sample: int) -> np.ndarray:
+    """Without-replacement row sample for the codebook fits.
+
+    ``sample`` of 0 (or >= N) means the full corpus.  Indices are
+    sorted so the sample preserves corpus order — keyed only by
+    ``key``/``sample``, never by the block size, which keeps the
+    streamed-vs-one-shot parity property exact.
+    """
+    n = vectors_np.shape[0]
+    if not sample or sample >= n:
+        return vectors_np
+    idx = np.sort(np.asarray(
+        jax.random.choice(key, n, (int(sample),), replace=False)))
+    return vectors_np[idx]
+
+
+def blocked_map(step: Callable, vectors_np: np.ndarray, block: int,
+                ) -> Tuple[Tuple[np.ndarray, ...], int, int]:
+    """Run a jitted per-row map over fixed-size row blocks.
+
+    ``step`` maps a ``(block, d)`` device array to a tuple of per-row
+    outputs; the last partial block is zero-padded (static shapes ->
+    one compilation) and its outputs sliced host-side.  Returns the
+    host-concatenated outputs, the block count, and the peak staged
+    device bytes (input + outputs of the widest block).
+    """
+    n = vectors_np.shape[0]
+    block = min(block, n) if block else n
+    jstep = jax.jit(step)
+    outs: list = []
+    blocks = 0
+    peak = 0
+    for start in range(0, n, block):
+        stop = min(start + block, n)
+        blk = vectors_np[start:stop]
+        if stop - start < block:   # zero-pad the tail block
+            pad = np.zeros((block - (stop - start),) + blk.shape[1:],
+                           blk.dtype)
+            blk = np.concatenate([blk, pad])
+        dev = jnp.asarray(blk)
+        res = jstep(dev)
+        res = res if isinstance(res, tuple) else (res,)
+        peak = max(peak, int(dev.nbytes) + sum(int(r.nbytes) for r in res))
+        outs.append(tuple(np.asarray(r)[:stop - start] for r in res))
+        blocks += 1
+    cat = tuple(np.concatenate([o[j] for o in outs])
+                for j in range(len(outs[0])))
+    return cat, blocks, peak
+
+
+def _device_bound_bytes(sample_rows: int, block: int, d: int,
+                        out_bytes_per_row: int,
+                        codebook_bytes: int) -> int:
+    """Config-derived staging bound: sample upload + block I/O +
+    codebooks, with 2x slack for transient double-buffering.  No term
+    depends on the corpus size."""
+    sample_bytes = sample_rows * d * 4
+    block_bytes = block * (d * 4 + out_bytes_per_row)
+    return 2 * (sample_bytes + block_bytes + codebook_bytes) + (1 << 20)
+
+
+def build_flat_artifact(key: jax.Array, vectors,
+                        cfg) -> Tuple[Dict, BuildStats]:
+    """Streamed ``flat_pq`` build: sampled fit + blocked encode.
+
+    Returns ``({codes, centroids}, BuildStats)`` with ``codes`` as
+    host numpy (the caller/engine owns placement).
+    """
+    from repro.retrieval import flat_pq
+
+    t0 = time.perf_counter()
+    vec_np = np.asarray(vectors)     # zero-copy when already host numpy
+    n, d = vec_np.shape
+    k_sample, k_fit = jax.random.split(key)
+    train_np = training_sample(k_sample, vec_np, cfg.train_sample)
+    cent = flat_pq.fit_pq(k_fit, jnp.asarray(train_np),
+                          cfg.num_subspaces, cfg.num_centroids, cfg.iters)
+    code_dtype = np.uint8 if cfg.num_centroids <= 256 else np.int32
+
+    def step(blk):
+        return flat_pq.encode_corpus(blk, cent,
+                                     backend=cfg.kernel_backend)
+
+    (codes_np,), blocks, peak = blocked_map(
+        step, vec_np, cfg.encode_block)
+    block = min(cfg.encode_block, n) if cfg.encode_block else n
+    stats = BuildStats(
+        n=n, d=d, sample_rows=train_np.shape[0], block_rows=block,
+        blocks=blocks,
+        peak_device_bytes=peak + train_np.nbytes + int(cent.nbytes),
+        device_bound_bytes=_device_bound_bytes(
+            train_np.shape[0], block, d,
+            out_bytes_per_row=4 * cfg.num_subspaces,
+            codebook_bytes=int(cent.nbytes)))
+    artifact = {"codes": codes_np.astype(code_dtype),
+                "centroids": cent}
+    stats.seconds = time.perf_counter() - t0
+    return artifact, stats
+
+
+def build_ivf_artifact(key: jax.Array, vectors,
+                       cfg) -> Tuple[Dict, BuildStats]:
+    """Streamed ``ivf_pq`` build: sampled coarse + PQ fit, blocked
+    assign + encode, bounded chained list layout.
+
+    Returns ``({coarse, centroids, list_chain, list_codes, list_ids},
+    BuildStats)`` with the list tables as host numpy.
+    """
+    from repro.retrieval import flat_pq
+    from repro.retrieval.ivf_pq import (bounded_list_layout, coarse_assign,
+                                        coarse_kmeans)
+
+    t0 = time.perf_counter()
+    vec_np = np.asarray(vectors)
+    n, d = vec_np.shape
+    if n < cfg.nlist:
+        raise ValueError(
+            f"corpus of {n} vectors cannot fill nlist={cfg.nlist} "
+            f"coarse cells")
+    k_sample, k_coarse, k_pq = jax.random.split(key, 3)
+    train_np = training_sample(k_sample, vec_np, cfg.train_sample)
+    if train_np.shape[0] < cfg.nlist:
+        raise ValueError(
+            f"train_sample={train_np.shape[0]} cannot seed "
+            f"nlist={cfg.nlist} coarse cells")
+    train = jnp.asarray(train_np)
+    coarse = coarse_kmeans(k_coarse, train, cfg.nlist,
+                           iters=cfg.coarse_iters)
+    if cfg.ivf_residual:
+        t_assign = coarse_assign(train, coarse)
+        to_code = train - jnp.take(coarse, t_assign, axis=0)
+    else:
+        to_code = train
+    cent = flat_pq.fit_pq(k_pq, to_code, cfg.num_subspaces,
+                          cfg.num_centroids, cfg.iters)
+    code_dtype = np.uint8 if cfg.num_centroids <= 256 else np.int32
+
+    def step(blk):
+        a = coarse_assign(blk, coarse)
+        tc = blk - jnp.take(coarse, a, axis=0) \
+            if cfg.ivf_residual else blk
+        return a, flat_pq.encode_corpus(tc, cent,
+                                        backend=cfg.kernel_backend)
+
+    (assign_np, codes_np), blocks, peak = blocked_map(
+        step, vec_np, cfg.encode_block)
+    layout = bounded_list_layout(
+        assign_np, codes_np.astype(code_dtype), cfg.nlist,
+        cfg.list_cap_quantile)
+    counts = np.bincount(assign_np, minlength=cfg.nlist)
+    block = min(cfg.encode_block, n) if cfg.encode_block else n
+    codebook_bytes = int(coarse.nbytes) + int(cent.nbytes)
+    stats = BuildStats(
+        n=n, d=d, sample_rows=train_np.shape[0], block_rows=block,
+        blocks=blocks,
+        peak_device_bytes=peak + train_np.nbytes + codebook_bytes,
+        device_bound_bytes=_device_bound_bytes(
+            train_np.shape[0], block, d,
+            out_bytes_per_row=4 + 4 * cfg.num_subspaces,
+            codebook_bytes=codebook_bytes),
+        list_count_max=int(counts.max()),
+        list_count_mean=float(counts.mean()),
+        list_cap=layout["list_codes"].shape[1],
+        max_chain=layout["list_chain"].shape[1],
+        lists_ext=layout["list_codes"].shape[0])
+    artifact = {"coarse": coarse, "centroids": cent, **layout}
+    stats.seconds = time.perf_counter() - t0
+    return artifact, stats

@@ -131,11 +131,15 @@ class FlatPQ(Index):
                 f"2, got {cfg.num_subspaces}/{cfg.num_centroids}")
 
     def build(self, key: jax.Array, vectors: jax.Array) -> Dict:
-        cfg = self.cfg
-        return build_corpus_artifact(
-            key, vectors, num_subspaces=cfg.num_subspaces,
-            num_centroids=cfg.num_centroids, iters=cfg.iters,
-            backend=cfg.kernel_backend)
+        """Build via the streaming driver (retrieval/build.py):
+        codebooks fitted on ``cfg.train_sample`` rows, encoding run in
+        ``cfg.encode_block``-row blocks (0 = full corpus / one shot).
+        Use ``build.build_flat_artifact`` directly to keep the code
+        table in host memory."""
+        from repro.retrieval.build import build_flat_artifact
+        artifact, _ = build_flat_artifact(key, vectors, self.cfg)
+        return {name: jnp.asarray(leaf)
+                for name, leaf in artifact.items()}
 
     def scores(self, artifact: Dict, queries: jax.Array) -> jax.Array:
         """Full (B, N) score matrix — exactness oracle + small corpora."""

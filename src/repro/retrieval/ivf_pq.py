@@ -16,17 +16,38 @@ per query (the codebook is global, so the LUT is shared across probed
 lists); ``nprobe`` controls the recall/bytes dial.  Residual coding
 defaults OFF for this dot-product workload — see ``IndexConfig``.
 
-Storage layout: lists are padded to the longest list so probing is a
-static-shape gather — ``list_codes (nlist, L, D)`` uint8 and
-``list_ids (nlist, L)`` int32 carrying GLOBAL corpus ids
-(``INVALID_ID`` in the padding).  Building runs on the host (numpy
-bucketing) — it is the offline step; searching is pure JAX.
+Storage layout (DESIGN.md §12): probing must stay a static-shape
+gather, but padding every list to the LONGEST list blows memory by
+the max/mean list ratio on Zipf-skewed corpora.  Lists are instead
+capped at the ``list_cap_quantile`` count quantile; rows past the cap
+spill into chained extension lists appended after index ``nlist`` in
+the extended tables —
 
-Distribution: lists are row-sharded over the model mesh axis
-(``rows_leaves``); the tiny coarse table is replicated, so every shard
-agrees on which lists each query probes and scores only the probed
-lists it owns (``local_topk``) — the sharded driver merges the
-per-shard (B, k) partials (retrieval/sharded.py, DESIGN.md §8).
+  ``list_codes (nlist_ext, cap, D)`` uint8,
+  ``list_ids   (nlist_ext, cap)``   int32 (GLOBAL corpus ids,
+                                          ``INVALID_ID`` padding),
+  ``list_chain (nlist, max_chain)`` int32 — per base list, its full
+      chain of extended-list ids (-1 padded); row 0 is the base list
+      itself, so ``max_chain`` is static from the leaf SHAPE (the
+      artifact arrives as tracers under the serving jit).
+
+Probing gathers the (B, P) probed base lists' chains in one
+``jnp.take`` then their slots — (B, P, C, cap), still static-shape.
+Total storage is ≈ N + nlist·cap slots regardless of skew;
+``list_cap_quantile=1.0`` reproduces the old pad-to-max layout
+(max_chain == 1, no spill lists).  ``nlist_ext`` is padded with empty
+lists to a multiple of ``nlist`` so row-sharding divisibility is
+unchanged.  Building streams through ``retrieval/build.py`` (sampled
+codebook fit, blocked assign+encode, host numpy accumulation);
+searching is pure JAX.
+
+Distribution: extended lists are row-sharded over the model mesh axis
+(``rows_leaves``); the tiny coarse table and the chain table are
+replicated, so every shard agrees on which extended lists each query
+probes and scores only the ones it owns (``local_topk``) — the
+tiebreak is the candidate's position in the replicated
+(probe × chain × slot) layout, so the sharded merge is bit-identical
+(retrieval/sharded.py, DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -41,6 +62,10 @@ from repro.kernels.pq_score import (INVALID_ID, build_lut_batch,
 from repro.retrieval import flat_pq
 from repro.retrieval.base import Index, IndexConfig, register_index
 from repro.retrieval.topk import topk_by_position
+
+# host-staged serving pads the staged-list count to a multiple of this
+# so the scoring jit sees a bounded set of shapes (retraces O(log U))
+_STAGE_PAD = 64
 
 
 def coarse_kmeans(key: jax.Array, vectors: jax.Array, nlist: int,
@@ -59,11 +84,66 @@ def coarse_assign(vectors: jax.Array, coarse: jax.Array) -> jax.Array:
     return jnp.argmin(c_sq[None, :] - 2 * dots, axis=-1).astype(jnp.int32)
 
 
+def bounded_list_layout(assign_np: np.ndarray, codes_np: np.ndarray,
+                        nlist: int, cap_quantile: float) -> Dict:
+    """Host-side bucketing into the quantile-capped chained layout.
+
+    Returns host numpy ``{list_chain, list_codes, list_ids}`` (see the
+    module docstring for shapes).  Within a base list, corpus ids
+    ascend along the chain (stable sort), matching the old layout's
+    per-list order.
+    """
+    n = assign_np.shape[0]
+    counts = np.bincount(assign_np, minlength=nlist)
+    if cap_quantile >= 1.0:
+        cap = max(int(counts.max()), 1)
+    else:
+        cap = max(int(np.ceil(np.quantile(counts, cap_quantile))), 1)
+    chunks = np.maximum(1, -(-counts // cap))      # ceil; >= 1 per list
+    max_chain = int(chunks.max())
+    n_spill = int((chunks - 1).sum())
+    # pad with empty lists to a multiple of nlist: row-sharding keeps
+    # dividing wherever nlist did
+    n_ext = -(-(nlist + n_spill) // nlist) * nlist
+    spill_start = nlist + np.concatenate(
+        [[0], np.cumsum(chunks - 1)[:-1]])
+    chain = np.full((nlist, max_chain), -1, np.int32)
+    chain[:, 0] = np.arange(nlist)
+    for j in range(1, max_chain):
+        has = chunks > j
+        chain[has, j] = spill_start[has] + (j - 1)
+
+    order = np.argsort(assign_np, kind="stable")   # ids ascend per list
+    starts = np.zeros(nlist, np.int64)
+    starts[1:] = np.cumsum(counts)[:-1]
+    slot = np.arange(n) - starts[assign_np[order]]
+    ext = chain[assign_np[order], slot // cap]     # extended-list row
+    within = slot % cap
+    D = codes_np.shape[1]
+    list_codes = np.zeros((n_ext, cap, D), codes_np.dtype)
+    list_ids = np.full((n_ext, cap), INVALID_ID, np.int32)
+    list_codes[ext, within] = codes_np[order]
+    list_ids[ext, within] = order
+    return {"list_chain": chain, "list_codes": list_codes,
+            "list_ids": list_ids}
+
+
 @register_index("ivf_pq")
 class IVFPQ(Index):
     """nprobe-controlled probing over a coarse partition of PQ codes."""
 
     rows_leaves = ("list_codes", "list_ids")
+    supports_host_staged = True
+
+    def host_leaves(self) -> Tuple[str, ...]:
+        # the chain expands on the host in host-staged mode — keep it
+        # host-resident alongside the row tables
+        return self.rows_leaves + ("list_chain",)
+
+    def __init__(self, cfg: IndexConfig):
+        super().__init__(cfg)
+        self._staged_fns = None      # lazy jits for host-staged serving
+        self.staged_bytes = 0        # total bytes staged to device
 
     @classmethod
     def validate(cls, cfg: IndexConfig) -> None:
@@ -76,42 +156,14 @@ class IVFPQ(Index):
 
     # ------------------------------------------------------------ build
     def build(self, key: jax.Array, vectors: jax.Array) -> Dict:
-        cfg = self.cfg
-        n, d = vectors.shape
-        if n < cfg.nlist:
-            raise ValueError(
-                f"corpus of {n} vectors cannot fill nlist={cfg.nlist} "
-                f"coarse cells")
-        k_coarse, k_pq = jax.random.split(key)
-        coarse = coarse_kmeans(k_coarse, vectors, cfg.nlist,
-                               iters=cfg.coarse_iters)
-        assign = coarse_assign(vectors, coarse)
-        to_code = vectors - jnp.take(coarse, assign, axis=0) \
-            if cfg.ivf_residual else vectors
-        cent = flat_pq.fit_pq(k_pq, to_code, cfg.num_subspaces,
-                              cfg.num_centroids, cfg.iters)
-        codes = flat_pq.encode_corpus(to_code, cent,
-                                      backend=cfg.kernel_backend)
-        code_dtype = np.uint8 if cfg.num_centroids <= 256 else np.int32
-
-        # host-side bucketing into padded per-list tables (offline step)
-        assign_np = np.asarray(assign)
-        codes_np = np.asarray(codes).astype(code_dtype)
-        counts = np.bincount(assign_np, minlength=cfg.nlist)
-        cap = max(int(counts.max()), 1)
-        order = np.argsort(assign_np, kind="stable")   # ids ascend per list
-        starts = np.zeros(cfg.nlist, np.int64)
-        starts[1:] = np.cumsum(counts)[:-1]
-        slot = np.arange(n) - starts[assign_np[order]]
-        list_codes = np.zeros((cfg.nlist, cap, cfg.num_subspaces),
-                              code_dtype)
-        list_ids = np.full((cfg.nlist, cap), INVALID_ID, np.int32)
-        list_codes[assign_np[order], slot] = codes_np[order]
-        list_ids[assign_np[order], slot] = order
-        return {"coarse": coarse,
-                "centroids": cent,
-                "list_codes": jnp.asarray(list_codes),
-                "list_ids": jnp.asarray(list_ids)}
+        """Build via the streaming driver (retrieval/build.py) and
+        device-put the result — the classic on-device artifact.  Use
+        ``build.build_ivf_artifact`` directly to keep the list tables
+        in host memory (host-staged serving / sharded placement)."""
+        from repro.retrieval.build import build_ivf_artifact
+        artifact, _ = build_ivf_artifact(key, vectors, self.cfg)
+        return {name: jnp.asarray(leaf)
+                for name, leaf in artifact.items()}
 
     # ----------------------------------------------------------- search
     def _probe(self, artifact: Dict, queries: jax.Array
@@ -122,37 +174,48 @@ class IVFPQ(Index):
         coarse_scores = queries @ artifact["coarse"].T      # (B, nlist)
         return jax.lax.top_k(coarse_scores, self.cfg.nprobe)
 
+    def _expand_chain(self, artifact: Dict, lists: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+        """(B, P) probed base lists -> (B, P, C) extended-list ids via
+        the replicated chain table, plus the live mask (chain padding
+        is -1).  Dead slots clamp to row 0 and are masked downstream."""
+        chain = jnp.take(artifact["list_chain"], lists, axis=0)
+        live = chain >= 0
+        return jnp.where(live, chain, 0), live
+
     def _score_probed(self, artifact: Dict, queries: jax.Array,
-                      probe_s: jax.Array, lists: jax.Array,
+                      probe_s: jax.Array, chain: jax.Array,
                       hit: jax.Array) -> Tuple[jax.Array, jax.Array]:
-        """Score the (B, nprobe) probed lists -> flat (B, nprobe*L)
-        candidate (scores, global ids); ``hit`` masks probes this
-        caller does not own (sharded path) to (-inf, INVALID_ID)."""
+        """Score the (B, P, C) probed extended lists -> flat
+        (B, P·C·cap) candidate (scores, global ids); ``hit`` masks
+        chain padding and rows this caller does not own (sharded /
+        staged paths) to (-inf, INVALID_ID)."""
         luts = build_lut_batch(queries, artifact["centroids"]
                                ).astype(jnp.float32)        # (B, D, K)
-        codes = jnp.take(artifact["list_codes"], lists, axis=0)
-        ids = jnp.take(artifact["list_ids"], lists, axis=0)  # (B, P, L)
-        b, p, cap, n_sub = codes.shape
-        # per-query LUT gather over its own probed rows — a (B, P·L, D)
-        # gather, not the shared-code-stream kernel (each query reads
-        # different rows); vmapped jnp stays fused under jit
+        codes = jnp.take(artifact["list_codes"], chain, axis=0)
+        ids = jnp.take(artifact["list_ids"], chain, axis=0)
+        b, p, c, cap, n_sub = codes.shape
+        # per-query LUT gather over its own probed rows — a
+        # (B, P·C·cap, D) gather, not the shared-code-stream kernel
+        # (each query reads different rows); vmapped jnp fuses under jit
         cand_scores = jax.vmap(pq_score_batched_ref)(
-            luts[:, None], codes.reshape(b, p * cap, n_sub)
-        ).reshape(b, p, cap)
+            luts[:, None], codes.reshape(b, p * c * cap, n_sub)
+        ).reshape(b, p, c, cap)
         if self.cfg.ivf_residual:
-            cand_scores = cand_scores + probe_s[:, :, None]  # coarse term
-        valid = (ids != INVALID_ID) & hit[:, :, None]
+            cand_scores = cand_scores + probe_s[:, :, None, None]
+        valid = (ids != INVALID_ID) & hit[..., None]
         cand_scores = jnp.where(valid, cand_scores, -jnp.inf)
         ids = jnp.where(valid, ids, INVALID_ID)
-        return cand_scores.reshape(b, p * cap), ids.reshape(b, p * cap)
+        return (cand_scores.reshape(b, p * c * cap),
+                ids.reshape(b, p * c * cap))
 
     def search(self, artifact: Dict, queries: jax.Array,
                k: int) -> Tuple[jax.Array, jax.Array]:
         probe_s, lists = self._probe(artifact, queries)
-        hit = jnp.ones(lists.shape, bool)
-        s, i = self._score_probed(artifact, queries, probe_s, lists, hit)
-        # position tiebreak: candidate layout (probe slot x list slot)
-        # is identical on every shard, so this order is shard-invariant
+        chain, live = self._expand_chain(artifact, lists)
+        s, i = self._score_probed(artifact, queries, probe_s, chain, live)
+        # position tiebreak: candidate layout (probe x chain x slot) is
+        # identical on every shard, so this order is shard-invariant
         top_s, _, top_i = topk_by_position(s, i, k)
         return top_s, top_i
 
@@ -160,9 +223,62 @@ class IVFPQ(Index):
                    shard: jax.Array, num_shards: int
                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
         lists_local = artifact["list_codes"].shape[0]
-        probe_s, lists = self._probe(artifact, queries)  # GLOBAL list ids
-        local = lists - shard * lists_local
-        hit = (local >= 0) & (local < lists_local)
+        probe_s, lists = self._probe(artifact, queries)
+        chain, live = self._expand_chain(artifact, lists)  # GLOBAL ids
+        local = chain - shard * lists_local
+        hit = live & (local >= 0) & (local < lists_local)
         local = jnp.clip(local, 0, lists_local - 1)
         s, i = self._score_probed(artifact, queries, probe_s, local, hit)
         return topk_by_position(s, i, k)
+
+    # ------------------------------------------------------ host-staged
+    def search_host_staged(self, artifact: Dict, queries: jax.Array,
+                           k: int) -> Tuple[jax.Array, jax.Array]:
+        """Serve with the list tables host-resident (DESIGN.md §12).
+
+        Probing runs on device (the coarse table is tiny); the probed
+        base lists' chains expand on the host, and only the unique
+        probed extended lists are gathered from host memory and staged
+        to device — upload ∝ B·nprobe·max_chain·cap, never O(corpus).
+        Scoring reuses ``_score_probed`` with the staged tables and
+        the probe-layout positions, so results are bit-identical to
+        ``search`` on the device-resident artifact.
+        """
+        codes_h = np.asarray(artifact["list_codes"])
+        ids_h = np.asarray(artifact["list_ids"])
+        chain_h = np.asarray(artifact["list_chain"])
+        probe, score = self._staged_jits()
+        probe_s, lists = probe(artifact["coarse"], queries)
+        chain = chain_h[np.asarray(lists)]             # (B, P, C)
+        live = chain >= 0
+        uniq, inv = np.unique(np.where(live, chain, 0),
+                              return_inverse=True)
+        u = len(uniq)
+        u_pad = -(-u // _STAGE_PAD) * _STAGE_PAD
+        staged_codes = np.zeros((u_pad,) + codes_h.shape[1:],
+                                codes_h.dtype)
+        staged_codes[:u] = codes_h[uniq]
+        staged_ids = np.full((u_pad,) + ids_h.shape[1:], INVALID_ID,
+                             np.int32)
+        staged_ids[:u] = ids_h[uniq]
+        slots = inv.reshape(chain.shape).astype(np.int32)
+        self.staged_bytes += staged_codes.nbytes + staged_ids.nbytes
+        return score(artifact["centroids"], queries, probe_s,
+                     jnp.asarray(staged_codes), jnp.asarray(staged_ids),
+                     jnp.asarray(slots), jnp.asarray(live), k)
+
+    def _staged_jits(self):
+        if self._staged_fns is None:
+            def _score(cent, q, probe_s, codes, ids, slots, live, k):
+                staged = {"centroids": cent, "list_codes": codes,
+                          "list_ids": ids}
+                s, i = self._score_probed(staged, q, probe_s, slots,
+                                          live)
+                top_s, _, top_i = topk_by_position(s, i, k)
+                return top_s, top_i
+
+            self._staged_fns = (
+                jax.jit(lambda coarse, q: jax.lax.top_k(
+                    q @ coarse.T, self.cfg.nprobe)),
+                jax.jit(_score, static_argnames="k"))
+        return self._staged_fns

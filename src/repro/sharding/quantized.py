@@ -84,12 +84,21 @@ def _codes_rows(artifact: dict) -> int:
 
 def quantized_gather(artifact: dict, ids: jax.Array, cfg: EmbeddingConfig,
                      model_axis: str = "model",
-                     mesh: Optional[jax.sharding.Mesh] = None) -> jax.Array:
+                     mesh: Optional[jax.sharding.Mesh] = None,
+                     decode_block_b: Optional[int] = None) -> jax.Array:
     """Sharded serving decode: ``Embedding.serve`` for distributed codes.
 
     Falls back to the single-device fused decode when no usable mesh is
     ambient or the shapes don't divide (single-device tests, export
     tooling) — call sites never branch.
+
+    ``decode_block_b`` is the batch block of each shard's local decode
+    kernel.  The default ``None`` defers to the autotune cache
+    (DESIGN.md §11) — the shard-local batch is the all-gathered global
+    batch, a shape the engine's ``cfg.decode_block_b`` pin was never
+    sized for (pinning it here bypassed the tuner and measured 8x
+    slower in ``BENCH_kernels.json`` sharded_decode).  Pass an int to
+    pin explicitly.
     """
     scheme = get_scheme(cfg)
     if not scheme.supports_sharded_codes:
@@ -132,7 +141,8 @@ def quantized_gather(artifact: dict, ids: jax.Array, cfg: EmbeddingConfig,
         # decode against the LOCAL code shard; any frequency-dependent
         # blending (MGQE tiers) keys on the GLOBAL id, not the shard
         # offset — the scheme's decode hook takes both
-        rows = scheme.decode(art_loc, local, tier_ids=ids_all)  # (B_global, d)
+        rows = scheme.decode(art_loc, local, tier_ids=ids_all,
+                             block_b=decode_block_b)  # (B_global, d)
         rows = rows * hit[:, None].astype(rows.dtype)
         full = jax.lax.psum(rows, model_axis)
         if data_axes:

@@ -328,12 +328,14 @@ def retrieval_artifact_specs(index, artifact, model_axis: str = "model"):
     """PartitionSpec pytree for a retrieval index artifact.
 
     Same placement policy as the quantized tables above — the
-    O(corpus) leaves (``Index.rows_leaves``: flat corpus codes, IVF
-    list tables) are row-sharded over ``model_axis``; codebooks and
-    the coarse table are KBs and replicated.  DERIVED from the index
-    plugin's own spec (``Index.artifact_shard_specs``,
-    retrieval/base.py) so any registered kind is covered with no
-    edits here.
+    O(corpus) leaves (``Index.rows_leaves``: flat corpus codes, the
+    bounded IVF list tables ``list_codes``/``list_ids`` including any
+    spill lists) are row-sharded over ``model_axis``; codebooks, the
+    coarse table, and the O(nlist) ``list_chain`` map are KBs and
+    replicated — every shard needs the full chain to expand a probed
+    cell into its spill lists.  DERIVED from the index plugin's own
+    spec (``Index.artifact_shard_specs``, retrieval/base.py) so any
+    registered kind is covered with no edits here.
     """
     return index.artifact_shard_specs(artifact, model_axis=model_axis)
 

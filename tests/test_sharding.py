@@ -371,6 +371,32 @@ def test_sharded_retrieval_topk_bit_identical_all_kinds():
                                       np.asarray(ref[0]))
         np.testing.assert_array_equal(np.asarray(out[1]),
                                       np.asarray(ref[1]))
+
+        # spilled chained layout (DESIGN.md §12): a skewed corpus under
+        # a tight list cap forces multi-chunk chains; the sharded merge
+        # must stay bit-identical with spill lists scattered over shards
+        cents = np.asarray(jax.random.normal(jax.random.PRNGKey(5),
+                                             (8, 16)))
+        g = np.repeat(np.arange(8),
+                      [1200, 400, 200, 100, 60, 40, 28, 20])
+        vs = jnp.asarray(
+            cents[g] + 0.05 * np.random.default_rng(3).normal(
+                size=(2048, 16)))
+        index = get_index(IndexConfig(kind="ivf_pq", num_subspaces=4,
+                                      num_centroids=16, iters=3,
+                                      nlist=8, nprobe=8,
+                                      list_cap_quantile=0.5))
+        art = index.build(jax.random.PRNGKey(2), vs)
+        assert art["list_chain"].shape[1] > 1    # chains really spill
+        ref = index.search(art, q, 50)
+        art_s = shard_retrieval_artifact(art, index, mesh)
+        with mesh:
+            out = jax.jit(lambda a, qq: sharded_topk(
+                index, a, qq, 50))(art_s, q)
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      np.asarray(ref[0]))
+        np.testing.assert_array_equal(np.asarray(out[1]),
+                                      np.asarray(ref[1]))
         print("OK")
     """)
 
