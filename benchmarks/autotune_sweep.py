@@ -49,6 +49,12 @@ def sweep_cases(quick: bool):
         ("dpq_assign",
          (jax.random.normal(k, (b, D, d // D)),
           jax.random.normal(k, (D, K, d // D)), None)),
+        # tail tier of the mpe layout: 2-bit packed codes (bits is
+        # positional so it lands in the shape bucket — 2/4/8-bit calls
+        # tune independently)
+        ("packed_decode",
+         (jax.random.randint(k, (b, 2), 0, 256).astype(jnp.uint8),
+          jax.random.normal(k, (D, 4, d // D)), 2)),
     ]
     declared = {op for op in dispatch.registered_ops()
                 if dispatch.op_tunables(op)}

@@ -11,6 +11,7 @@ from repro.core.schemes.base import (ArtifactLeaf, QuantizedScheme, Scheme,
 from repro.core.schemes import baselines as _baselines   # noqa: F401
 from repro.core.schemes import dpq as _dpq               # noqa: F401
 from repro.core.schemes import mgqe as _mgqe             # noqa: F401
+from repro.core.schemes import mpe as _mpe               # noqa: F401
 from repro.core.schemes import rq as _rq                 # noqa: F401
 
 __all__ = ["ArtifactLeaf", "QuantizedScheme", "Scheme", "get_scheme",

@@ -1,0 +1,157 @@
+"""Mixed-Precision Embeddings (arXiv 2409.20305) as a registry plugin.
+
+MGQE's capacity knob one level down the stack: instead of varying the
+number of centroids or subspaces per frequency tier, ``mpe`` varies the
+*bitwidth* of the stored codes — tier i uses ``K_i = 2**tier_bits[i]``
+centroids per subspace and stores its codes bit-packed at
+``tier_bits[i]`` bits per code (int8 head, int4/int2 tail).  Tiering
+reuses ``core/partition.py``; packing reuses
+``kernels/packed_decode/pack.py``; serving decodes through the fused
+unpack-and-decode kernel (``kernels/packed_decode``), so the 2-4x
+tail-tier HBM byte cut survives end to end (DESIGN.md §13).
+
+Storage follows the ``mgqe`` ``private_d`` precedent: each tier keeps a
+FULL (n, W_i) packed table so decode stays one fused kernel call per
+tier blended by tier masks, while ``logical_bits`` account only the
+rows in tier i at their packed width (paper §1.1-style accounting).
+Because every leaf is a plain ``ArtifactLeaf`` with ``rows=True``
+codes, sharded serving, the hot-row cache, both engines, and size
+accounting all come from the generic machinery with no glue.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dpq
+from repro.core.partition import tier_of_ids
+from repro.core.schemes.base import (PIN_TO_CONFIG, ArtifactLeaf,
+                                     QuantizedScheme, register_scheme)
+from repro.kernels.packed_decode import (PACK_BITS, decode, pack_codes,
+                                         packed_width)
+
+
+@register_scheme("mpe")
+class MixedPrecisionEmbedding(QuantizedScheme):
+    """Per-frequency-tier code bitwidths with bit-packed storage:
+    frequent items get int8 codes, the tail int4/int2."""
+
+    @classmethod
+    def validate(cls, cfg):
+        if cfg.dim % cfg.num_subspaces != 0:
+            raise ValueError(
+                f"dim={cfg.dim} not divisible by D={cfg.num_subspaces}")
+        m = len(cfg.tier_boundaries) + 1
+        if len(cfg.tier_bits) != m:
+            raise ValueError(
+                f"tier_bits must have {m} entries, got "
+                f"{len(cfg.tier_bits)}")
+        for b in cfg.tier_bits:
+            if b not in PACK_BITS:
+                raise ValueError(
+                    f"tier_bits entries must be one of {PACK_BITS}, "
+                    f"got {b}")
+        if any(cfg.tier_bits[i] < cfg.tier_bits[i + 1]
+               for i in range(len(cfg.tier_bits) - 1)):
+            raise ValueError("tier_bits must be non-increasing")
+        if any(b <= 0 or b >= cfg.vocab_size for b in cfg.tier_boundaries):
+            raise ValueError("tier boundaries must lie inside (0, vocab)")
+        if any(cfg.tier_boundaries[i] >= cfg.tier_boundaries[i + 1]
+               for i in range(len(cfg.tier_boundaries) - 1)):
+            raise ValueError("tier boundaries must be strictly ascending")
+
+    # ------------------------------------------------------------ train
+    def init(self, key, dtype):
+        cfg = self.cfg
+        k_emb, k_cent = jax.random.split(key)
+        keys = jax.random.split(k_cent, cfg.num_tiers)
+        return {
+            "emb": dpq.init_full_table(k_emb, cfg.vocab_size, cfg.dim,
+                                       dtype=dtype),
+            "centroids": [
+                dpq.init_centroids(keys[i], cfg.num_subspaces, 2 ** b_i,
+                                   cfg.subspace_dim, scale=cfg.dim ** -0.5,
+                                   dtype=dtype)
+                for i, b_i in enumerate(cfg.tier_bits)],
+        }
+
+    def apply(self, params, ids):
+        """Training path: per-tier codebook quantization blended by tier
+        masks (same static loop as the mgqe private variants)."""
+        from repro.sharding.gather import row_gather
+        cfg = self.cfg
+        e = row_gather(params["emb"], ids, sharded=cfg.sharded_rows)
+        tiers = tier_of_ids(ids, cfg.tier_boundaries)
+        out = jnp.zeros_like(e)
+        aux = jnp.asarray(0.0, dtype=jnp.float32)
+        for i, cent in enumerate(params["centroids"]):
+            q_i, _, aux_i = dpq.quantize(e, cent, beta=cfg.beta)
+            mask = (tiers == i)
+            out = jnp.where(mask[..., None], q_i, out)
+            aux = aux + aux_i * jnp.mean(mask.astype(jnp.float32))
+        return out, aux
+
+    # ------------------------------------------------------------ serve
+    def export(self, params):
+        """Discard the full table; per tier, assign codes against the
+        tier codebook over the whole vocab and bit-pack them."""
+        cfg = self.cfg
+        out = {"codes": [], "centroids": params["centroids"]}
+        for b_i, cent in zip(cfg.tier_bits, params["centroids"]):
+            codes = dpq.export_codes(
+                {"emb": params["emb"], "centroids": cent})
+            out["codes"].append(pack_codes(codes, b_i))
+        return out
+
+    def decode(self, artifact, ids, tier_ids=None,
+               block_b=PIN_TO_CONFIG):
+        """Fused unpack-and-decode per tier, blended by tier masks.
+
+        The gathered rows stay PACKED across the kernel boundary — each
+        tier's (B, W_i) words go straight into the dispatched
+        ``packed_decode`` kernel, which unpacks per VMEM block (tier
+        membership keys on the GLOBAL frequency-sorted id — see
+        QuantizedScheme.decode)."""
+        cfg = self.cfg
+        bb = self.resolve_block_b(block_b)
+        tiers = tier_of_ids(ids if tier_ids is None else tier_ids,
+                            cfg.tier_boundaries)
+        out = None
+        for i, (b_i, cent) in enumerate(zip(cfg.tier_bits,
+                                            artifact["centroids"])):
+            packed = jnp.take(artifact["codes"][i], ids, axis=0)
+            w_i = packed.shape[-1]
+            flat = decode(packed.reshape(-1, w_i), cent, b_i,
+                          block_b=bb, backend=cfg.kernel_backend)
+            out_i = flat.reshape(ids.shape + (cfg.dim,))
+            out = out_i if out is None \
+                else jnp.where((tiers == i)[..., None], out_i, out)
+        return out
+
+    # -------------------------------------------------------- structure
+    def cold_artifact_spec(self):
+        cfg = self.cfg
+        n, D = cfg.vocab_size, cfg.num_subspaces
+        sizes = cfg.tier_sizes()
+        return {
+            "codes": [
+                ArtifactLeaf((n, packed_width(D, b_i)), jnp.uint8,
+                             rows=True, logical_bits=sz * D * b_i)
+                for sz, b_i in zip(sizes, cfg.tier_bits)],
+            "centroids": [
+                ArtifactLeaf((D, 2 ** b_i, cfg.subspace_dim),
+                             cfg.param_dtype)
+                for b_i in cfg.tier_bits],
+        }
+
+    def training_param_count(self):
+        cfg = self.cfg
+        return (cfg.vocab_size * cfg.dim
+                + cfg.dim * sum(2 ** b for b in cfg.tier_bits))
+
+    @classmethod
+    def probe_config(cls, variant="-"):
+        from repro.core.types import EmbeddingConfig
+        return EmbeddingConfig(vocab_size=32, dim=8, kind="mpe",
+                               num_subspaces=4, tier_boundaries=(8, 16),
+                               tier_bits=(8, 4, 2))

@@ -51,6 +51,12 @@ class EmbeddingConfig:
     tier_num_centroids: Tuple[int, ...] = ()    # len m, non-increasing
     tier_num_subspaces: Tuple[int, ...] = ()    # len m, non-increasing (private_d)
 
+    # --- mixed-precision packed codes (mpe) ---
+    # per-tier code bitwidth (len m, non-increasing, each in {8, 4, 2});
+    # tier i stores K_i = 2**tier_bits[i] centroids per subspace and its
+    # codes bit-packed at tier_bits[i] bits per code (DESIGN.md §13)
+    tier_bits: Tuple[int, ...] = ()
+
     # --- residual quantization (rq) ---
     num_levels: int = 4             # M sequential full-width codebooks
 

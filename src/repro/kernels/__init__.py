@@ -5,6 +5,7 @@ tiling), ops.py (dispatch-registered wrapper), ref.py (pure-jnp
 oracle):
 
   mgqe_decode     codes + centroids -> embeddings (serving hot path)
+  packed_decode   fused unpack-and-decode for bit-packed mpe codes
   dpq_assign      nearest-centroid search (training/export hot path)
   pq_score        ADC retrieval scoring vs a PQ-coded corpus
   embedding_bag   fused ragged gather + segment-sum (TBE pattern)
@@ -20,7 +21,7 @@ All kernels are validated against their oracles in interpret mode
 """
 from repro.kernels import dispatch  # noqa: F401  (must import first)
 from repro.kernels import (dpq_assign, embedding_bag, flash_attention,
-                           mgqe_decode, pq_score)
+                           mgqe_decode, packed_decode, pq_score)
 
 __all__ = ["dispatch", "dpq_assign", "embedding_bag", "flash_attention",
-           "mgqe_decode", "pq_score"]
+           "mgqe_decode", "packed_decode", "pq_score"]

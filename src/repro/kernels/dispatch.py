@@ -345,10 +345,14 @@ def tune(name: str, args_sets: Iterable, *, backend: Optional[str] = None,
     the sweep actually executes the op).  ``timer(thunk, iters)``
     overrides the wall-clock measurement (tests inject a deterministic
     one).  Already-tuned buckets are returned from cache unless
-    ``force``; ties and near-ties resolve to the earliest candidate in
-    declaration order, so a winner is deterministic for a fixed timer.
-    Returns ``{shape_bucket: winning params}`` and, when ``save`` and
-    $REPRO_KERNEL_TUNE_CACHE is set, persists the cache file.
+    ``force``.  The declared-default combo is always swept FIRST — even
+    when it is absent from the candidate grid — and a challenger must
+    strictly beat it, so ties and near-ties keep the default and tuning
+    can never regress below the pinned behaviour (the
+    ``tuned_vs_pinned_speedup < 1`` failure mode); a winner is
+    deterministic for a fixed timer.  Returns ``{shape_bucket: winning
+    params}`` and, when ``save`` and $REPRO_KERNEL_TUNE_CACHE is set,
+    persists the cache file.
     """
     _ensure_registered()
     if name not in _REGISTRY:
@@ -363,6 +367,12 @@ def tune(name: str, args_sets: Iterable, *, backend: Optional[str] = None,
     combos = [dict(zip(params_names, values))
               for values in itertools.product(
                   *(spec[p].candidates for p in params_names))] or [{}]
+    # The default combo leads the sweep (deduped from the grid): the
+    # strict `<` comparison below then keeps it on any tie-or-loss, so
+    # a tuned config is never slower than the declared default.
+    defaults = {p: spec[p].default for p in params_names}
+    if params_names:
+        combos = [defaults] + [c for c in combos if c != defaults]
     for args in args_sets:
         if not isinstance(args, tuple):
             args = (args,)

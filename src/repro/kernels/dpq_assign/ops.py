@@ -8,17 +8,21 @@ import jax
 from repro.kernels import dispatch
 from repro.kernels.dispatch import Tunable
 from repro.kernels.dpq_assign.dpq_assign import dpq_assign
-from repro.kernels.dpq_assign.ref import dpq_assign_ref
+from repro.kernels.dpq_assign.ref import (dpq_assign_blocked_ref,
+                                          dpq_assign_ref)
 
+# The xla entry honours block_b too (scan-blocked so the per-block
+# distance slab stays cache-resident — see ref.py); 64/128 win on CPU,
+# the larger blocks on the MXU-fed paths.
 dispatch.register_op(
     "dpq_assign",
     pallas=lambda e_sub, cent, k_limit=None, block_b=512: dpq_assign(
         e_sub, cent, k_limit, block_b=block_b),
-    xla=lambda e_sub, cent, k_limit=None, block_b=512: dpq_assign_ref(
-        e_sub, cent, k_limit),
+    xla=lambda e_sub, cent, k_limit=None, block_b=512:
+        dpq_assign_blocked_ref(e_sub, cent, k_limit, block_b=block_b),
     interpret=lambda e_sub, cent, k_limit=None, block_b=512: dpq_assign(
         e_sub, cent, k_limit, block_b=block_b, interpret=True),
-    tunables={"block_b": Tunable(512, (128, 256, 512, 1024))},
+    tunables={"block_b": Tunable(512, (64, 128, 256, 512, 1024))},
 )
 
 
@@ -31,4 +35,5 @@ def assign(e_sub: jax.Array, centroids: jax.Array,
                              block_b=block_b, backend=backend)
 
 
-__all__ = ["assign", "dpq_assign", "dpq_assign_ref"]
+__all__ = ["assign", "dpq_assign", "dpq_assign_blocked_ref",
+           "dpq_assign_ref"]

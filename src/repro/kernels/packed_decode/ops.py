@@ -1,0 +1,54 @@
+"""Public wrapper for the fused unpack-and-decode kernel.
+
+``decode(packed, centroids, bits)`` routes through the kernel backend
+dispatch layer like every other hot-path op; the packed (B, W) uint8
+words are what cross the dispatch boundary — unpacking happens inside
+each backend's kernel body (per VMEM block on pallas/interpret, fused
+into the batch gather on xla), never as a standalone O(n) copy.  The
+spy test in tests/test_packed_decode.py holds the call sites to this.
+
+``bits`` is a positional arg, so it participates in the autotune shape
+bucket — bits=2 and bits=8 tune independently (their byte/flop ratios
+differ by 4x).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.dispatch import Tunable
+from repro.kernels.packed_decode.pack import (PACK_BITS, pack_codes,
+                                              packed_width, unpack_codes)
+from repro.kernels.packed_decode.packed_decode import packed_decode
+from repro.kernels.packed_decode.ref import packed_decode_ref
+
+dispatch.register_op(
+    "packed_decode",
+    pallas=lambda packed, cent, bits, block_b=256, block_d=None:
+        packed_decode(packed, cent, bits, block_b=block_b,
+                      block_d=block_d),
+    xla=lambda packed, cent, bits, block_b=256, block_d=None:
+        packed_decode_ref(packed, cent, bits),
+    interpret=lambda packed, cent, bits, block_b=256, block_d=None:
+        packed_decode(packed, cent, bits, block_b=block_b,
+                      block_d=block_d, interpret=True),
+    tunables={"block_b": Tunable(256, (64, 128, 256, 512)),
+              "block_d": Tunable(None, (None, 2, 4))},
+)
+
+
+def decode(packed: jax.Array, centroids: jax.Array, bits: int,
+           block_b: Optional[int] = None,
+           block_d: Optional[int] = None,
+           backend: Optional[str] = None) -> jax.Array:
+    """packed (B, W) uint8 -> embeddings (B, D*S) via the dispatched
+    fused unpack-and-decode kernel."""
+    return dispatch.dispatch("packed_decode", packed, centroids, bits,
+                             block_b=block_b, block_d=block_d,
+                             backend=backend)
+
+
+__all__ = ["PACK_BITS", "decode", "pack_codes", "packed_decode",
+           "packed_decode_ref", "packed_width", "unpack_codes"]

@@ -1,0 +1,62 @@
+"""Bit-packing for sub-byte quantization codes (DESIGN.md §13).
+
+A code table (..., D) whose entries fit in ``bits`` ∈ {2, 4, 8} bits is
+stored as packed bytes (..., W) with ``W = ceil(D / (8 // bits))`` —
+``8 // bits`` codes per byte, little-endian within the byte (code j of
+a byte occupies bits ``[j*bits, (j+1)*bits)``).  The layout is chosen
+so a byte-aligned slice of W is a byte-aligned slice of codes, which is
+what lets the fused kernel tile the subspace axis without crossing
+byte boundaries.
+
+Both functions are pure jnp (trace-safe, shape-polymorphic over the
+leading dims); ``pack_codes`` runs once at export time, while
+``unpack_codes`` is the *reference* unpack — the serving path never
+materializes it, the kernel unpacks per VMEM block instead
+(``packed_decode.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PACK_BITS = (2, 4, 8)
+
+
+def packed_width(num_codes: int, bits: int) -> int:
+    """Bytes needed to pack ``num_codes`` codes of ``bits`` bits each."""
+    if bits not in PACK_BITS:
+        raise ValueError(f"bits must be one of {PACK_BITS}, got {bits}")
+    per_byte = 8 // bits
+    return -(-num_codes // per_byte)
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """codes (..., D) int, values < 2**bits -> packed (..., W) uint8."""
+    per_byte = 8 // bits
+    d = codes.shape[-1]
+    w = packed_width(d, bits)
+    pad = w * per_byte - d
+    c = codes.astype(jnp.uint8)
+    if pad:
+        c = jnp.pad(c, [(0, 0)] * (c.ndim - 1) + [(0, pad)])
+    c = c.reshape(c.shape[:-1] + (w, per_byte)).astype(jnp.uint32)
+    shifts = jnp.arange(per_byte, dtype=jnp.uint32) * bits
+    word = jnp.sum(c << shifts, axis=-1)
+    return word.astype(jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array, bits: int, num_codes: int) -> jax.Array:
+    """packed (..., W) uint8 -> codes (..., num_codes) uint8.
+
+    Inverse of :func:`pack_codes`; trailing pad codes are dropped.
+    """
+    per_byte = 8 // bits
+    w = packed.shape[-1]
+    if w != packed_width(num_codes, bits):
+        raise ValueError(
+            f"packed width {w} does not hold {num_codes} codes of "
+            f"{bits} bits (want {packed_width(num_codes, bits)})")
+    shifts = jnp.arange(per_byte, dtype=jnp.int32) * bits
+    codes = (packed.astype(jnp.int32)[..., None] >> shifts) & (2 ** bits - 1)
+    codes = codes.reshape(packed.shape[:-1] + (w * per_byte,))
+    return codes[..., :num_codes].astype(jnp.uint8)

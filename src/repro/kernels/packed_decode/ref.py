@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused unpack-and-decode kernel.
+
+Unpack the (B, W) packed words to (B, D) codes, then the same
+per-subspace centroid gather as ``mgqe_decode_ref``.  Under one jit
+XLA fuses the shift/mask unpack into the gather's index computation,
+so this is also the honest XLA serving fallback — the unpacked (B, D)
+codes for the *batch* live in registers/cache, and no O(n) unpacked
+table is ever materialized.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.packed_decode.pack import unpack_codes
+
+
+def packed_decode_ref(packed: jnp.ndarray, centroids: jnp.ndarray,
+                      bits: int) -> jnp.ndarray:
+    """packed (B, W) uint8; centroids (D, K, S) -> (B, D*S) float."""
+    b = packed.shape[0]
+    d, _, s = centroids.shape
+    codes = unpack_codes(packed, bits, d)             # (B, D) uint8
+    gathered = jnp.take_along_axis(
+        centroids[None],                              # (1, D, K, S)
+        codes.astype(jnp.int32)[..., None, None],     # (B, D, 1, 1)
+        axis=2)                                       # (B, D, 1, S)
+    return gathered[:, :, 0, :].reshape(b, d * s)

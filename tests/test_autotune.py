@@ -3,8 +3,13 @@
 Properties held:
 
   * determinism — for a fixed timer-seed and shape bucket, the sweep
-    picks the same winner every run (ties resolve to declaration
-    order, never dict/hash order);
+    picks the same winner every run (ties resolve to the declared
+    DEFAULT combo, never dict/hash order);
+  * the default is never regressed — the pinned/default combo is always
+    among the swept candidates (even when absent from the candidate
+    grid) and a challenger must strictly beat it, so
+    ``tuned_vs_pinned_speedup`` can never fall below 1 for a fixed
+    timer (the sharded_decode 0.875x regression);
   * JSON cache round-trip — save_tune_cache -> fresh process state ->
     the file seeds tuned_params with identical entries;
   * tuning is a PERFORMANCE layer — every candidate block geometry is
@@ -39,8 +44,9 @@ def _clean_tune_state(monkeypatch):
 
 def _seeded_timer(seed):
     """Deterministic fake timer: the sweep calls it once per candidate
-    in declaration order, so a fixed seed fixes the whole time series
-    (and therefore the winner) without running any kernel twice."""
+    in a fixed order (default combo first, then declaration order), so
+    a fixed seed fixes the whole time series (and therefore the winner)
+    without running any kernel twice."""
     rng = np.random.default_rng(seed)
 
     def timer(thunk, iters):
@@ -76,15 +82,54 @@ def test_tune_deterministic_for_fixed_seed(seed):
         assert v in spec[p].candidates
 
 
-def test_tune_tie_break_is_declaration_order():
+def test_tune_tie_keeps_default():
     """A constant timer ties every candidate; the winner must be the
-    first declared combination, not whatever hash order yields."""
+    declared DEFAULT combo — a challenger has to strictly beat it
+    (the sharded_decode tuned_vs_pinned_speedup=0.875 regression)."""
     out = dispatch.tune("rq_decode_stages", [_example_args()],
                         backend="xla", timer=lambda th, it: 1.0,
                         save=False)
     (params,) = out.values()
     spec = dispatch.op_tunables("rq_decode_stages")
-    assert params == {p: t.candidates[0] for p, t in spec.items()}
+    assert params == {p: t.default for p, t in spec.items()}
+
+
+def test_tune_sweeps_default_absent_from_candidates():
+    """The pinned/default value is always among the swept combos, even
+    when the candidate grid does not list it — and it wins ties."""
+    seen = []
+    dispatch.register_op(
+        "autotune_default_probe",
+        pallas=lambda x, block=7: (seen.append(block), x)[1],
+        xla=lambda x, block=7: (seen.append(block), x)[1],
+        tunables={"block": Tunable(7, (2, 4))},   # 7 not a candidate
+    )
+    out = dispatch.tune("autotune_default_probe", [jnp.arange(4.0)],
+                        backend="xla", timer=lambda th, it: (th(), 1.0)[1],
+                        save=False)
+    (params,) = out.values()
+    assert seen[0] == 7 and set(seen) == {7, 2, 4}
+    assert params == {"block": 7}
+
+
+def test_tune_challenger_must_strictly_beat_default():
+    """A strictly faster candidate still wins the sweep (the default
+    only protects against ties and losses, not real improvements)."""
+    import itertools
+    spec = dispatch.op_tunables("rq_decode_stages")
+    n_total = len(list(itertools.product(*(t.candidates
+                                           for t in spec.values()))))
+    # the sweep times the default combo first, then the rest of the
+    # grid in declaration order — make only the LAST combo faster
+    times = iter([1.0] * (n_total - 1) + [0.5])
+
+    def timer(th, it):
+        th()
+        return next(times)
+    out = dispatch.tune("rq_decode_stages", [_example_args()],
+                        backend="xla", timer=timer, save=False)
+    (params,) = out.values()
+    assert params == {p: t.candidates[-1] for p, t in spec.items()}
 
 
 def test_tune_cache_hit_skips_resweep():
@@ -143,9 +188,9 @@ def test_in_process_entries_win_over_file(tmp_path, monkeypatch):
     path = str(tmp_path / "tune.json")
     args = _example_args()
     dispatch.tune("rq_decode_stages", [args], backend="xla",
-                  timer=lambda th, it: 1.0, save=False)   # first combo
+                  timer=lambda th, it: 1.0, save=False)   # default combo
     dispatch.save_tune_cache(path)
-    # file now holds the declaration-order winner; seed the process
+    # file now holds the tie-kept default winner; seed the process
     # with a DIFFERENT winner and check the file does not clobber it
     spec = dispatch.op_tunables("rq_decode_stages")
     other = {p: t.candidates[-1] for p, t in spec.items()}

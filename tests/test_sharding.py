@@ -130,7 +130,8 @@ def test_sharded_mgqe_embedding_lookup_matches():
 def test_sharded_quantized_gather_matches_serve_all_variants():
     """Row-sharded codes + replicated codebooks on Mesh(data=2, model=2)
     must serve identically to the single-device fused decode, for DPQ,
-    all three MGQE variants, and the rq plugin (DESIGN.md §6/§7)."""
+    all three MGQE variants, and the rq and mpe plugins
+    (DESIGN.md §6/§7)."""
     _run("""
         import warnings; warnings.filterwarnings('ignore')
         import dataclasses
@@ -149,6 +150,8 @@ def test_sharded_quantized_gather_matches_serve_all_variants():
                  num_centroids=8, tier_boundaries=(16,),
                  tier_num_subspaces=(4, 2)),
             dict(kind="rq", num_levels=3, num_centroids=8),
+            dict(kind="mpe", num_subspaces=8, tier_boundaries=(16, 48),
+                 tier_bits=(8, 4, 2)),
         ]
         mesh = jax.make_mesh((2, 2), ("data", "model"))
         assert dict(mesh.shape) == {"data": 2, "model": 2}
@@ -196,6 +199,49 @@ def test_sharded_rq_single_pass_decode_bit_identical():
             emb = Embedding(cfg)
             art = emb.export(emb.init(jax.random.PRNGKey(0)))
             assert art["codes"].dtype == jnp.uint8
+            scfg = dataclasses.replace(cfg, sharded_codes=True)
+            semb = Embedding(scfg)
+            art_s = shard_quantized_artifact(art, scfg, mesh)
+            for shape in [(8, 8), (7,), (1,), (3, 5)]:
+                ids = jax.random.randint(
+                    jax.random.PRNGKey(sum(shape)), shape, 0, 128)
+                ref = emb.serve(art, ids)
+                assert ref.shape == shape + (16,)
+                with mesh:
+                    out = jax.jit(semb.serve)(art_s, ids)
+                np.testing.assert_array_equal(np.asarray(out),
+                                              np.asarray(ref))
+        print("OK")
+    """)
+
+
+def test_sharded_mpe_packed_decode_bit_identical():
+    """The mpe scheme's fused unpack-and-decode serve path under
+    Mesh(data=2, model=2) must be BIT-identical to the single-device
+    decode: each shard gathers PACKED rows from its local (n/2, W_i)
+    code shards and unpacks inside the dispatched kernel, with tier
+    blending keyed on the all-gathered GLOBAL ids.  Covers odd/ragged
+    batch shapes and both kernel backends (DESIGN.md §13)."""
+    _run("""
+        import warnings; warnings.filterwarnings('ignore')
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import Embedding, EmbeddingConfig
+        from repro.sharding.rules import shard_quantized_artifact
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        for backend in ("xla", "interpret"):
+            cfg = EmbeddingConfig(vocab_size=128, dim=16, kind="mpe",
+                                  num_subspaces=8,
+                                  tier_boundaries=(16, 48),
+                                  tier_bits=(8, 4, 2),
+                                  decode_block_b=32,
+                                  kernel_backend=backend)
+            emb = Embedding(cfg)
+            art = emb.export(emb.init(jax.random.PRNGKey(0)))
+            # stored packed: W_i = ceil(D * bits / 8) bytes per row
+            assert [c.shape[1] for c in art["codes"]] == [8, 4, 2]
+            assert all(c.dtype == jnp.uint8 for c in art["codes"])
             scfg = dataclasses.replace(cfg, sharded_codes=True)
             semb = Embedding(scfg)
             art_s = shard_quantized_artifact(art, scfg, mesh)
@@ -268,6 +314,8 @@ def test_sharded_engine_hot_cache_bit_identical():
                  num_centroids=8, tier_boundaries=(16,),
                  tier_num_subspaces=(4, 2)),
             dict(kind="rq", num_levels=3, num_centroids=8),
+            dict(kind="mpe", num_subspaces=8, tier_boundaries=(16, 48),
+                 tier_bits=(8, 4, 2)),
         ]
         mesh = jax.make_mesh((2, 2), ("data", "model"))
         rng = np.random.default_rng(0)
