@@ -1,0 +1,23 @@
+"""Repo-invariant static analysis (DESIGN.md §15).
+
+Importing this package registers the built-in rules; project-specific
+rules register themselves with :func:`register_rule` on import —
+exactly the ``core/schemes/`` / ``retrieval/`` plugin shape.  The
+package is stdlib-only by design: linting must never initialize the
+JAX backend it checks for.
+"""
+from repro.analysis.engine import (Diagnostic, FileContext, Rule,
+                                   analyze_file, analyze_paths,
+                                   analyze_source, filter_baseline,
+                                   load_baseline, register_rule,
+                                   registered_rule_ids, rule_class,
+                                   write_baseline)
+from repro.analysis.scope import lint_exclusions
+
+# built-in rules — importing the module registers every class
+from repro.analysis import rules as _rules          # noqa: F401
+
+__all__ = ["Diagnostic", "FileContext", "Rule", "analyze_file",
+           "analyze_paths", "analyze_source", "filter_baseline",
+           "lint_exclusions", "load_baseline", "register_rule",
+           "registered_rule_ids", "rule_class", "write_baseline"]

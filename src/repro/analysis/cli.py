@@ -1,0 +1,106 @@
+"""CLI driver: ``python -m repro.analysis`` / ``tools/repro_lint.py``.
+
+    python -m repro.analysis src tools            # lint, gate on NEW
+    python -m repro.analysis --list-rules         # rule table
+    python -m repro.analysis src --json report.json
+    python -m repro.analysis src --write-baseline # accept current debt
+
+Exit code 1 when any non-baselined diagnostic remains (the CI
+``analysis`` job gate); 0 otherwise.  The committed baseline
+(tools/lint_baseline.json) is EMPTY — every rule's violations were
+fixed or explicitly suppressed when the gate landed, so any hit is a
+regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.analysis.engine import (analyze_paths, filter_baseline,
+                                   load_baseline, registered_rule_ids,
+                                   rule_class, write_baseline)
+from repro.analysis.scope import find_repo_root, lint_exclusions
+
+__all__ = ["main"]
+
+DEFAULT_BASELINE = "tools/lint_baseline.json"
+
+
+def _list_rules() -> str:
+    lines = []
+    for rid in registered_rule_ids():
+        cls = rule_class(rid)
+        lines.append(f"{rid}\n    {cls.title}\n    why: {cls.motivation}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST lint for this repo's serving invariants "
+                    "(DESIGN.md §15)")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files/directories to lint (default: src tools)")
+    ap.add_argument("--root", default=None,
+                    help="repo root for relative paths/config "
+                         "(default: nearest pyproject.toml)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline JSON (default: <root>/"
+                         f"{DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept every current diagnostic into the "
+                         "baseline file and exit 0")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the full machine-readable report here")
+    ap.add_argument("--rule", action="append", default=None,
+                    help="run only this rule id (repeatable)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    root = args.root or find_repo_root(".")
+    paths = args.paths or [f"{root}/src", f"{root}/tools"]
+    if args.rule:
+        unknown = [r for r in args.rule
+                   if r not in registered_rule_ids()]
+        if unknown:
+            ap.error(f"unknown rule ids {unknown}; known: "
+                     f"{registered_rule_ids()}")
+    diags, n_files = analyze_paths(paths, root=root,
+                                   exclude=lint_exclusions(root),
+                                   rule_ids=args.rule)
+
+    baseline_path = args.baseline or f"{root}/{DEFAULT_BASELINE}"
+    if args.write_baseline:
+        counts = write_baseline(baseline_path, diags)
+        print(f"repro-lint: wrote {sum(counts.values())} accepted "
+              f"diagnostic(s) to {baseline_path}")
+        return 0
+
+    new, baselined = filter_baseline(diags, load_baseline(baseline_path))
+    for d in new:
+        print(d.format())
+
+    report = {
+        "files_scanned": n_files,
+        "rules": registered_rule_ids(),
+        "new": [d.as_dict() for d in new],
+        "baselined": [d.as_dict() for d in baselined],
+        "counts": {"new": len(new), "baselined": len(baselined)},
+    }
+    if args.json_out:
+        with open(args.json_out, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    summary = (f"repro-lint: {n_files} files, "
+               f"{len(new)} new diagnostic(s), "
+               f"{len(baselined)} baselined")
+    print(summary, file=sys.stderr)
+    return 1 if new else 0

@@ -1,0 +1,325 @@
+"""Repo-invariant lint engine (DESIGN.md §15).
+
+Every bit-parity / wire-byte guarantee this reproduction makes rests on
+code invariants that reviewers have re-fixed by hand across PRs:
+import-time backend init, kind-string dispatch bypassing the scheme
+registry, uint8 code upcasts, hardcoded block sizes, shard_map-in-jit,
+recompile-hazard flush paths, unlocked engine state, bare asserts.
+This module turns those into machine checks: an AST-based rule engine
+with a ``@register_rule`` registry (mirroring ``core/schemes/`` and
+``retrieval/``), per-line suppression comments, and a JSON baseline so
+the CI gate lands at zero NEW violations.
+
+Deliberately stdlib-only: ``python -m repro.analysis`` must never
+initialize the JAX backend it lints for (rule ``import-time-jax``
+would be a lie otherwise), and it has to run in a bare CI step before
+heavyweight deps are importable.
+
+Vocabulary:
+
+  * :class:`Diagnostic` — one finding: file, line, rule id, message,
+    plus a drift-tolerant ``key`` (path + rule + stripped source line)
+    used for baseline matching.
+  * :class:`Rule` — one invariant; subclasses registered with
+    :func:`register_rule` implement ``check(ctx)`` over a
+    :class:`FileContext` (path + AST + source lines).
+  * suppression — ``# repro-lint: disable=<rule-id>[,<rule-id>]`` on
+    the flagged line (or on a comment-only line directly above it)
+    silences the named rules for that line; ``disable=all`` silences
+    every rule.  Suppressions are for *sanctioned* exceptions and must
+    carry a reason in the surrounding comment; the baseline is for
+    *inherited* debt only.
+  * baseline — a JSON map ``key -> count``.  Diagnostics matching a
+    baseline entry (up to its count) are reported as "baselined" and
+    do not fail the gate; everything else is NEW and does.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Type
+
+__all__ = ["Diagnostic", "FileContext", "Rule", "analyze_file",
+           "analyze_paths", "analyze_source", "filter_baseline",
+           "load_baseline", "register_rule", "registered_rule_ids",
+           "rule_class", "write_baseline"]
+
+PARSE_ERROR_RULE = "parse-error"
+
+_SUPPRESS = re.compile(r"#\s*repro-lint:\s*disable=([\w\-, ]+)")
+
+
+# ----------------------------------------------------------------------
+# diagnostics
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Diagnostic:
+    """One finding.  ``key`` identifies it for baseline matching by
+    (path, rule, stripped source line) — stable under unrelated edits
+    that shift line numbers, unlike a raw ``path:line`` key."""
+
+    path: str          # repo-relative, posix separators
+    line: int          # 1-based
+    col: int           # 0-based
+    rule_id: str
+    message: str
+    line_text: str = ""
+
+    @property
+    def key(self) -> str:
+        return f"{self.path}::{self.rule_id}::{self.line_text}"
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: " \
+               f"[{self.rule_id}] {self.message}"
+
+    def as_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["key"] = self.key
+        return d
+
+
+class FileContext:
+    """Everything a rule sees for one file: repo-relative path, parsed
+    AST, raw source lines, and the :meth:`diag` factory stamping
+    diagnostics with the flagged line's text (baseline key)."""
+
+    def __init__(self, path: str, text: str, tree: ast.AST):
+        self.path = path.replace(os.sep, "/")
+        self.text = text
+        self.tree = tree
+        self.lines = text.splitlines()
+
+    def in_dir(self, *prefixes: str) -> bool:
+        return any(self.path.startswith(p) for p in prefixes)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def diag(self, node: ast.AST, rule_id: str, message: str) -> Diagnostic:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Diagnostic(path=self.path, line=line, col=col,
+                          rule_id=rule_id, message=message,
+                          line_text=self.line_text(line))
+
+
+# ----------------------------------------------------------------------
+# rule registry (same shape as core/schemes/ and retrieval/)
+# ----------------------------------------------------------------------
+
+class Rule:
+    """Protocol every lint rule implements.
+
+    Class attributes double as the documentation the CI registry-sync
+    gate checks against the DESIGN.md §15 rule table:
+
+      * ``rule_id`` — stable kebab-case id (suppression comments and
+        the baseline reference it);
+      * ``title`` — one-line statement of the invariant;
+      * ``motivation`` — the historical bug class / PR that makes the
+        invariant load-bearing.
+    """
+
+    rule_id: str = ""
+    title: str = ""
+    motivation: str = ""
+
+    def check(self, ctx: FileContext) -> Iterable[Diagnostic]:
+        raise NotImplementedError
+
+
+_RULES: Dict[str, Type[Rule]] = {}
+
+
+def register_rule(cls: Type[Rule]) -> Type[Rule]:
+    """Class decorator: add one rule to the registry (import-time
+    registration, exactly like ``@register_scheme``)."""
+    rid = cls.rule_id
+    if not rid or not re.fullmatch(r"[a-z][a-z0-9\-]*", rid):
+        raise ValueError(f"rule {cls.__name__} needs a kebab-case "
+                         f"rule_id, got {rid!r}")
+    if rid == PARSE_ERROR_RULE:
+        raise ValueError(f"rule id {rid!r} is reserved")
+    if rid in _RULES:
+        raise ValueError(f"duplicate rule id {rid!r} "
+                         f"({_RULES[rid].__name__} vs {cls.__name__})")
+    if not cls.title or not cls.motivation:
+        raise ValueError(f"rule {rid!r} must document title + motivation")
+    _RULES[rid] = cls
+    return cls
+
+
+def _ensure_registered() -> None:
+    if not _RULES:
+        import repro.analysis.rules  # noqa: F401  — registers on import
+
+
+def registered_rule_ids() -> List[str]:
+    _ensure_registered()
+    return sorted(_RULES)
+
+
+def rule_class(rule_id: str) -> Type[Rule]:
+    _ensure_registered()
+    if rule_id not in _RULES:
+        raise KeyError(f"lint rule {rule_id!r} not registered; known: "
+                       f"{registered_rule_ids()}")
+    return _RULES[rule_id]
+
+
+# ----------------------------------------------------------------------
+# suppressions
+# ----------------------------------------------------------------------
+
+def _suppressions(text: str) -> Dict[int, frozenset]:
+    """lineno -> rule ids silenced on that line.  A directive on a
+    comment-only line also covers the next line (so long flagged lines
+    can carry the reason above them)."""
+    out: Dict[int, set] = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _SUPPRESS.search(line)
+        if not m:
+            continue
+        ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+        out.setdefault(i, set()).update(ids)
+        if line.lstrip().startswith("#"):
+            out.setdefault(i + 1, set()).update(ids)
+    return {k: frozenset(v) for k, v in out.items()}
+
+
+def _suppressed(diag: Diagnostic, supp: Dict[int, frozenset]) -> bool:
+    ids = supp.get(diag.line, frozenset())
+    return diag.rule_id in ids or "all" in ids
+
+
+# ----------------------------------------------------------------------
+# analysis drivers
+# ----------------------------------------------------------------------
+
+def analyze_source(path: str, text: str,
+                   rule_ids: Optional[Sequence[str]] = None
+                   ) -> List[Diagnostic]:
+    """Analyze one file's source under a (possibly virtual) repo
+    relative path — rules are path-scoped, so fixtures pass paths like
+    ``src/repro/launch/foo.py``.  Never raises on bad source: a syntax
+    error becomes a single ``parse-error`` diagnostic."""
+    _ensure_registered()
+    try:
+        tree = ast.parse(text)
+    except (SyntaxError, ValueError) as e:
+        line = getattr(e, "lineno", 1) or 1
+        return [Diagnostic(path=path.replace(os.sep, "/"), line=line,
+                           col=0, rule_id=PARSE_ERROR_RULE,
+                           message=f"could not parse: {e.msg if hasattr(e, 'msg') else e}",
+                           line_text="")]
+    ctx = FileContext(path, text, tree)
+    supp = _suppressions(text)
+    out: List[Diagnostic] = []
+    for rid in (rule_ids or registered_rule_ids()):
+        rule = rule_class(rid)()
+        for d in rule.check(ctx):
+            if not _suppressed(d, supp):
+                out.append(d)
+    return sorted(out)
+
+
+def analyze_file(path: str, root: str = ".",
+                 rule_ids: Optional[Sequence[str]] = None
+                 ) -> List[Diagnostic]:
+    rel = os.path.relpath(os.path.abspath(path), os.path.abspath(root))
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    return analyze_source(rel, text, rule_ids)
+
+
+def iter_python_files(paths: Sequence[str],
+                      exclude: Sequence[str] = ()) -> List[str]:
+    """Expand files/directories into a sorted, deduped .py file list,
+    dropping any file whose path ends with an ``exclude`` entry (the
+    shared ruff/repro-lint exclusion list, ``repro.analysis.scope``)."""
+    found: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in ("__pycache__",))
+                found.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames)
+                             if f.endswith(".py"))
+        elif p.endswith(".py"):
+            found.append(p)
+    norm = []
+    for f in sorted(dict.fromkeys(found)):
+        posix = f.replace(os.sep, "/")
+        if any(posix.endswith(e.lstrip("./")) for e in exclude):
+            continue
+        norm.append(f)
+    return norm
+
+
+def analyze_paths(paths: Sequence[str], root: str = ".",
+                  exclude: Sequence[str] = (),
+                  rule_ids: Optional[Sequence[str]] = None
+                  ) -> Tuple[List[Diagnostic], int]:
+    """Lint every .py under ``paths`` -> (diagnostics, files scanned)."""
+    files = iter_python_files(paths, exclude=exclude)
+    out: List[Diagnostic] = []
+    for f in files:
+        out.extend(analyze_file(f, root=root, rule_ids=rule_ids))
+    return sorted(out), len(files)
+
+
+# ----------------------------------------------------------------------
+# baseline
+# ----------------------------------------------------------------------
+
+def load_baseline(path: Optional[str]) -> Dict[str, int]:
+    """Baseline JSON -> {diagnostic key: allowed count}.  Missing file
+    (or None) means an empty baseline — the committed state of this
+    repo, where every diagnostic is NEW."""
+    if not path or not os.path.exists(path):
+        return {}
+    with open(path, encoding="utf-8") as f:
+        raw = json.load(f)
+    entries = raw.get("entries", raw) if isinstance(raw, dict) else {}
+    if not isinstance(entries, dict) or not all(
+            isinstance(k, str) and isinstance(v, int)
+            for k, v in entries.items()):
+        raise ValueError(f"baseline {path!r} is not a "
+                         f"{{key: count}} JSON object")
+    return dict(entries)
+
+
+def write_baseline(path: str, diags: Sequence[Diagnostic]) -> Dict[str, int]:
+    """Persist the current findings as the accepted debt."""
+    counts: Dict[str, int] = {}
+    for d in diags:
+        counts[d.key] = counts.get(d.key, 0) + 1
+    payload = {"version": 1, "entries": dict(sorted(counts.items()))}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return counts
+
+
+def filter_baseline(diags: Sequence[Diagnostic], baseline: Dict[str, int]
+                    ) -> Tuple[List[Diagnostic], List[Diagnostic]]:
+    """Split findings into (new, baselined): each baseline key absorbs
+    up to its count of matching diagnostics."""
+    budget = dict(baseline)
+    new: List[Diagnostic] = []
+    old: List[Diagnostic] = []
+    for d in diags:
+        if budget.get(d.key, 0) > 0:
+            budget[d.key] -= 1
+            old.append(d)
+        else:
+            new.append(d)
+    return new, old

@@ -1,0 +1,539 @@
+"""The built-in lint rules: one class per historical bug class.
+
+Each rule encodes an invariant a past PR broke and re-fixed by hand
+(``motivation`` names the incident; the DESIGN.md §15 table mirrors
+these docstrings and the CI registry-sync gate keeps the two in sync).
+Rules are AST heuristics, not proofs: they are tuned to be quiet on
+the current tree (empty committed baseline) and loud on the exact
+pattern that caused the original bug.  Sanctioned exceptions carry a
+``# repro-lint: disable=<id>`` comment with a reason; tracer-level
+invariants the AST cannot see run in the dynamic sanitizer lane
+instead (``pytest --sanitize``, DESIGN.md §15).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.engine import Diagnostic, FileContext, Rule, register_rule
+
+__all__ = ["SCHEME_KIND_NAMES"]
+
+
+# Scheme + retrieval-index kind strings whose ``.kind ==`` comparison
+# outside the registries is dispatch-by-string (rule kind-dispatch).
+# Kept as a literal so the linter never imports jax; the registry test
+# in tests/test_analysis.py asserts this stays a superset of the live
+# registries.  "dhe" is pre-listed for the ROADMAP plugin.
+SCHEME_KIND_NAMES = frozenset({
+    "full", "lrf", "sq", "hash", "dpq", "mgqe", "rq", "mpe", "dhe",
+    "flat_pq", "ivf_pq",
+})
+
+_BLOCK_PARAMS = frozenset({"block_b", "block_d", "block_n"})
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """Attribute chain -> dotted name ('jax.numpy.pad'), else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_self_attr(node: ast.AST) -> Optional[str]:
+    """'self.X' attribute -> 'X', else None (nested attrs excluded)."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+# ----------------------------------------------------------------------
+# 1. import-time backend init
+# ----------------------------------------------------------------------
+
+# meta/config helpers that never touch the XLA client
+_SAFE_TAILS = frozenset({"iinfo", "finfo", "dtype", "promote_types",
+                         "result_type"})
+# lazy transform wrappers: applying them does not trace or compile
+_SAFE_JAX_TOP = frozenset({"jit", "vmap", "pmap", "grad",
+                           "value_and_grad", "checkpoint", "custom_vjp",
+                           "custom_jvp", "named_call", "named_scope"})
+_SAFE_EXACT = frozenset({"jax.sharding.PartitionSpec"})
+_SAFE_PREFIXES = ("jax.tree_util.", "jax.config.", "jax.typing.")
+
+
+def _is_backend_init_call(name: str) -> bool:
+    root = name.split(".", 1)[0]
+    if root not in ("jax", "jnp"):
+        return False
+    if name.rsplit(".", 1)[-1] in _SAFE_TAILS:
+        return False
+    if name in _SAFE_EXACT or name.startswith(_SAFE_PREFIXES):
+        return False
+    if root == "jax" and name.count(".") == 1 \
+            and name.split(".")[1] in _SAFE_JAX_TOP:
+        return False
+    return True
+
+
+def _import_time_stmts(tree: ast.Module) -> Iterable[ast.AST]:
+    """Statements/expressions evaluated when the module is imported:
+    module body and class bodies, plus decorator lists and argument
+    defaults of function defs (their *bodies* run later)."""
+    stack: List[ast.AST] = list(tree.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(node.decorator_list)
+            stack.extend(d for d in node.args.defaults if d is not None)
+            stack.extend(d for d in node.args.kw_defaults if d is not None)
+        elif isinstance(node, ast.ClassDef):
+            stack.extend(node.decorator_list)
+            stack.extend(node.bases)
+            stack.extend(node.body)
+        else:
+            yield node
+
+
+def _walk_skip_lazy(node: ast.AST) -> Iterable[ast.AST]:
+    """ast.walk that does not descend into lambda/def bodies (deferred
+    execution) but still visits lambda argument defaults (eager)."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            for d in list(child.args.defaults) + \
+                    [d for d in child.args.kw_defaults if d is not None]:
+                yield d
+                yield from _walk_skip_lazy(d)
+            continue
+        yield child
+        yield from _walk_skip_lazy(child)
+
+
+@register_rule
+class ImportTimeJaxRule(Rule):
+    """Module-level ``jnp.*``/``jax.*`` calls initialize the XLA
+    backend at import."""
+
+    rule_id = "import-time-jax"
+    title = ("no module-level jnp/jax calls — they initialize the XLA "
+             "backend at import time")
+    motivation = ("PR 1/PR 2: module-level jnp constants "
+                  "(core/baselines.py, nn/attention FULL_WINDOW) "
+                  "initialized the backend before launch/serve.py could "
+                  "force host device counts, breaking --mesh runs")
+
+    def check(self, ctx: FileContext) -> Iterable[Diagnostic]:
+        for stmt in _import_time_stmts(ctx.tree):
+            nodes = [stmt] if isinstance(stmt, ast.expr) else []
+            nodes += list(_walk_skip_lazy(stmt))
+            for node in nodes:
+                if not isinstance(node, ast.Call):
+                    continue
+                name = _dotted(node.func)
+                if name and _is_backend_init_call(name):
+                    yield ctx.diag(
+                        node, self.rule_id,
+                        f"module-level call {name}(...) runs at import "
+                        f"and initializes the JAX backend; build it "
+                        f"lazily inside a function")
+
+
+# ----------------------------------------------------------------------
+# 2. kind-string dispatch outside the registries
+# ----------------------------------------------------------------------
+
+@register_rule
+class KindDispatchRule(Rule):
+    """``cfg.kind == "dpq"``-style branching outside the scheme /
+    index registries."""
+
+    rule_id = "kind-dispatch"
+    title = ("no scheme/index kind-string comparisons outside "
+             "core/schemes/ and retrieval/ — dispatch through the "
+             "registry")
+    motivation = ("PR 3: per-kind if-chains drifted out of sync with "
+                  "the scheme registry; grep 'cfg.kind ==' reaching 0 "
+                  "was that PR's acceptance gate")
+
+    _EXEMPT = ("src/repro/core/schemes/", "src/repro/retrieval/")
+
+    @staticmethod
+    def _kind_consts(node: ast.AST) -> Set[str]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return {node.value} & SCHEME_KIND_NAMES
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            out: Set[str] = set()
+            for e in node.elts:
+                out |= KindDispatchRule._kind_consts(e)
+            return out
+        return set()
+
+    def check(self, ctx: FileContext) -> Iterable[Diagnostic]:
+        if ctx.in_dir(*self._EXEMPT):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            sides = [node.left] + list(node.comparators)
+            has_kind = any(isinstance(s, ast.Attribute) and s.attr == "kind"
+                           for s in sides)
+            if not has_kind:
+                continue
+            ok_ops = all(isinstance(op, (ast.Eq, ast.NotEq, ast.In,
+                                         ast.NotIn)) for op in node.ops)
+            kinds = set()
+            for s in sides:
+                kinds |= self._kind_consts(s)
+            if ok_ops and kinds:
+                yield ctx.diag(
+                    node, self.rule_id,
+                    f"kind-string comparison against {sorted(kinds)} "
+                    f"bypasses the scheme registry; use "
+                    f"get_scheme/scheme_class capabilities instead")
+
+
+# ----------------------------------------------------------------------
+# 3. uint8 code upcasts outside the kernels
+# ----------------------------------------------------------------------
+
+_INT32_NAMES = frozenset({"jnp.int32", "np.int32", "numpy.int32",
+                          "jax.numpy.int32"})
+
+
+@register_rule
+class CodeUpcastRule(Rule):
+    """Code tensors must cross the dispatch boundary at their stored
+    uint8 dtype; widening belongs inside the kernel bodies."""
+
+    rule_id = "code-upcast"
+    title = ("no .astype(int32) on code tensors outside "
+             "src/repro/kernels/ — codes stay uint8 across the "
+             "dispatch boundary")
+    motivation = ("PR 4: eager int32 copies of the O(vocab) code table "
+                  "at call sites cost a 4x transient buffer per request "
+                  "until the batched pq ops accepted stored-dtype codes")
+
+    def check(self, ctx: FileContext) -> Iterable[Diagnostic]:
+        if ctx.in_dir("src/repro/kernels/"):
+            return
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args):
+                continue
+            arg = node.args[0]
+            target = _dotted(arg)
+            is_i32 = (target in _INT32_NAMES
+                      or (isinstance(arg, ast.Constant)
+                          and arg.value == "int32"))
+            if not is_i32:
+                continue
+            recv = ast.unparse(node.func.value).lower()
+            if "code" in recv:
+                yield ctx.diag(
+                    node, self.rule_id,
+                    f"upcasting {ast.unparse(node.func.value)!r} to "
+                    f"int32 copies the code table 4x wide; pass stored "
+                    f"uint8 codes through — kernels widen per block")
+
+
+# ----------------------------------------------------------------------
+# 4. hardcoded block-size literals at dispatch call sites
+# ----------------------------------------------------------------------
+
+@register_rule
+class BlockLiteralRule(Rule):
+    """Block geometry is None-pin-or-Tunable: call sites pass ``None``
+    (autotune resolves) or a config pin, never a literal."""
+
+    rule_id = "block-literal"
+    title = ("no hardcoded block_b/block_d/block_n literals at kernel "
+             "call sites or in non-kernel signatures — pass None "
+             "(autotune) or a config pin")
+    motivation = ("PR 6/PR 7: hand-picked block sizes at call sites "
+                  "bypassed the autotune cache (sharded_decode pinned "
+                  "block_b measured 8x slower than tuned)")
+
+    @staticmethod
+    def _kernel_names(tree: ast.Module) -> Set[str]:
+        names: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module \
+                    and node.module.startswith("repro.kernels"):
+                names.update(a.asname or a.name for a in node.names)
+        return names
+
+    def check(self, ctx: FileContext) -> Iterable[Diagnostic]:
+        in_kernels = ctx.in_dir("src/repro/kernels/")
+        kernel_names = self._kernel_names(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            # (a) literal defaults in non-kernel signatures
+            if (not in_kernels
+                    and isinstance(node, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef,
+                                          ast.Lambda))):
+                a = node.args
+                pos = a.posonlyargs + a.args
+                pairs = list(zip(pos[len(pos) - len(a.defaults):],
+                                 a.defaults))
+                pairs += [(k, d) for k, d in zip(a.kwonlyargs,
+                                                 a.kw_defaults) if d]
+                for arg, default in pairs:
+                    if (arg.arg in _BLOCK_PARAMS
+                            and isinstance(default, ast.Constant)
+                            and isinstance(default.value, int)
+                            and not isinstance(default.value, bool)):
+                        yield ctx.diag(
+                            default, self.rule_id,
+                            f"literal default {arg.arg}="
+                            f"{default.value} pins the block size; "
+                            f"default to None so the autotune cache "
+                            f"resolves it (DESIGN.md §11)")
+            # (b) literal kwargs at dispatch / kernel-op call sites
+            if isinstance(node, ast.Call):
+                callee = _dotted(node.func) or ""
+                is_kernel_call = (
+                    callee == "dispatch" or callee.endswith(".dispatch")
+                    or callee.split(".", 1)[0] in kernel_names)
+                if not is_kernel_call:
+                    continue
+                for kw in node.keywords:
+                    if (kw.arg in _BLOCK_PARAMS
+                            and isinstance(kw.value, ast.Constant)
+                            and isinstance(kw.value.value, int)
+                            and not isinstance(kw.value.value, bool)):
+                        yield ctx.diag(
+                            kw.value, self.rule_id,
+                            f"literal {kw.arg}={kw.value.value} at a "
+                            f"kernel call site bypasses the autotune "
+                            f"cache; pass None or a config pin")
+
+
+# ----------------------------------------------------------------------
+# 5. shard_map consumed inside an enclosing jit
+# ----------------------------------------------------------------------
+
+@register_rule
+class ShardMapInJitRule(Rule):
+    """A shard_map whose output feeds further ops inside the same jit
+    miscounts under GSPMD; run it as its own jit."""
+
+    rule_id = "shard-map-in-jit"
+    title = ("no shard_map call lexically inside a jitted function — "
+             "the shard_map decode runs as its OWN jit and its "
+             "materialized output is consumed outside")
+    motivation = ("PR 5: a shard_map decode consumed by the hot-cache "
+                  "merge inside one jit made GSPMD double the sharded "
+                  "operand (P() x P('data') concat); the fix split "
+                  "_serve and _mesh_merge into separate jits")
+
+    @staticmethod
+    def _is_jit(name: Optional[str]) -> bool:
+        return name in ("jit", "jax.jit")
+
+    def _jitted_bodies(self, tree: ast.Module) -> List[ast.AST]:
+        defs: Dict[str, ast.AST] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs[node.name] = node
+        bodies: List[ast.AST] = []
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    name = _dotted(dec)
+                    partial = (isinstance(dec, ast.Call)
+                               and _dotted(dec.func) in
+                               ("partial", "functools.partial")
+                               and dec.args
+                               and self._is_jit(_dotted(dec.args[0])))
+                    if self._is_jit(name) or partial:
+                        bodies.append(node)
+            elif isinstance(node, ast.Call) and self._is_jit(
+                    _dotted(node.func)) and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Lambda):
+                    bodies.append(target.body)
+                elif isinstance(target, ast.Name) and target.id in defs:
+                    bodies.append(defs[target.id])
+        return bodies
+
+    def check(self, ctx: FileContext) -> Iterable[Diagnostic]:
+        seen: Set[int] = set()
+        for body in self._jitted_bodies(ctx.tree):
+            for node in ast.walk(body):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = _dotted(node.func) or ""
+                if (name == "shard_map" or name.endswith(".shard_map")) \
+                        and id(node) not in seen:
+                    seen.add(id(node))
+                    yield ctx.diag(
+                        node, self.rule_id,
+                        "shard_map inside a jitted function: its output "
+                        "consumed in-jit miscounts under GSPMD — run "
+                        "the shard_map as its own jit and merge its "
+                        "materialized output outside")
+
+
+# ----------------------------------------------------------------------
+# 6. device-side padding in the flush paths
+# ----------------------------------------------------------------------
+
+@register_rule
+class PadInFlushRule(Rule):
+    """Engine flush paths assemble and pad host-side (``run_flat``);
+    device-side jnp.pad retraces per distinct request length."""
+
+    rule_id = "pad-in-flush"
+    title = ("no jnp.pad in src/repro/launch/ — flush paths assemble "
+             "host-side (np.pad) and route through run_flat")
+    motivation = ("PR 6: jnp.pad + per-length slices on the flush path "
+                  "recompiled per distinct batch size (~40ms/flush, "
+                  "the XLA-CPU recompile-per-length death spiral); "
+                  "run_flat pads in numpy before ONE upload")
+
+    def check(self, ctx: FileContext) -> Iterable[Diagnostic]:
+        if not ctx.in_dir("src/repro/launch/"):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and _dotted(node.func) in (
+                    "jnp.pad", "jax.numpy.pad"):
+                yield ctx.diag(
+                    node, self.rule_id,
+                    "jnp.pad on a request-sized array re-dispatches "
+                    "(and on a fresh length, recompiles) per flush; "
+                    "pad host-side with np.pad and route through "
+                    "run_flat")
+
+
+# ----------------------------------------------------------------------
+# 7. engine lock discipline
+# ----------------------------------------------------------------------
+
+_LOCK_CTORS = frozenset({"threading.Lock", "threading.RLock",
+                         "threading.Condition"})
+
+
+@register_rule
+class LockDisciplineRule(Rule):
+    """Engine attributes shared between the submit / flush / refresh
+    threads are only written with the lock (or a condition built on
+    it) held."""
+
+    rule_id = "lock-discipline"
+    title = ("in launch/ classes owning a Lock/Condition, attributes "
+             "ever assigned under the lock are never assigned outside "
+             "it (off-__init__)")
+    motivation = ("PR 6: the async engine's queue/inflight/stop state "
+                  "is read by three threads; unlocked writes tear the "
+                  "FlushPolicy accounting and deadlock drain()")
+
+    @staticmethod
+    def _lock_attrs(cls: ast.ClassDef) -> Set[str]:
+        locks: Set[str] = set()
+        for node in ast.walk(cls):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.value, ast.Call)):
+                continue
+            attr = _is_self_attr(node.targets[0])
+            if attr and _dotted(node.value.func) in _LOCK_CTORS:
+                locks.add(attr)
+        return locks
+
+    @staticmethod
+    def _guarded_nodes(method: ast.AST, locks: Set[str]) -> Set[int]:
+        """ids of nodes lexically inside a ``with self.<lock>:`` body."""
+        out: Set[int] = set()
+        for node in ast.walk(method):
+            if not isinstance(node, ast.With):
+                continue
+            if any(_is_self_attr(item.context_expr) in locks
+                   for item in node.items):
+                for sub in ast.walk(node):
+                    out.add(id(sub))
+        return out
+
+    @staticmethod
+    def _assigned_attrs(node: ast.AST) -> List[str]:
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                targets.extend(t.elts if isinstance(
+                    t, (ast.Tuple, ast.List)) else [t])
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        return [a for a in (_is_self_attr(t) for t in targets) if a]
+
+    def check(self, ctx: FileContext) -> Iterable[Diagnostic]:
+        if not ctx.in_dir("src/repro/launch/"):
+            return
+        for cls in ast.walk(ctx.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            locks = self._lock_attrs(cls)
+            if not locks:
+                continue
+            methods = [n for n in cls.body
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))
+                       and n.name != "__init__"]
+            guarded_attrs: Set[str] = set()
+            guarded_ids: Dict[str, Set[int]] = {}
+            for m in methods:
+                g = self._guarded_nodes(m, locks)
+                guarded_ids[m.name] = g
+                for node in ast.walk(m):
+                    if id(node) in g:
+                        guarded_attrs.update(self._assigned_attrs(node))
+            guarded_attrs -= locks
+            if not guarded_attrs:
+                continue
+            for m in methods:
+                g = guarded_ids[m.name]
+                for node in ast.walk(m):
+                    if id(node) in g:
+                        continue
+                    for attr in self._assigned_attrs(node):
+                        if attr in guarded_attrs:
+                            yield ctx.diag(
+                                node, self.rule_id,
+                                f"self.{attr} is assigned under "
+                                f"{sorted(locks)} elsewhere in "
+                                f"{cls.name} but written here without "
+                                f"the lock held")
+
+
+# ----------------------------------------------------------------------
+# 8. bare asserts in library code
+# ----------------------------------------------------------------------
+
+@register_rule
+class BareAssertRule(Rule):
+    """Library invariants raise typed errors; ``assert`` vanishes
+    under ``python -O`` and reports tuples instead of messages."""
+
+    rule_id = "bare-assert"
+    title = ("no bare assert in src/ library code — raise "
+             "ValueError/TypeError with a real message")
+    motivation = ("PR 2: partition.validate_partition shipped asserts "
+                  "that disappeared under -O and produced opaque "
+                  "tuple-reprs; converted to ValueError with coverage "
+                  "tests, then kept regressing in new modules")
+
+    def check(self, ctx: FileContext) -> Iterable[Diagnostic]:
+        if not ctx.in_dir("src/"):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assert):
+                yield ctx.diag(
+                    node, self.rule_id,
+                    "bare assert in library code is stripped under "
+                    "python -O; raise a typed error with a message")

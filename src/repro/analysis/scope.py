@@ -1,0 +1,59 @@
+"""Shared lint scope: ONE exclusion list for ruff and repro-lint.
+
+The two linters disagreeing on which files are in scope is its own
+bug class (a file ruff skips but repro-lint scans, or vice versa,
+makes "CI is green" ambiguous).  The single source of truth is
+``[tool.ruff] extend-exclude`` in pyproject.toml: ruff reads it
+natively, and :func:`lint_exclusions` parses the same list for
+repro-lint.
+
+Parsed with a deliberately small regex rather than a TOML library —
+the repo pins Python 3.10 (no stdlib tomllib) and the list is a flat
+array of string literals under our own control.  An unreadable
+pyproject degrades to the built-in default so the linter keeps
+working from a partial checkout.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Tuple
+
+__all__ = ["DEFAULT_EXCLUSIONS", "find_repo_root", "lint_exclusions"]
+
+# mirrors pyproject [tool.ruff] extend-exclude — compat shims and
+# generated files that neither linter should hold to style rules
+DEFAULT_EXCLUSIONS: Tuple[str, ...] = ("tests/_hypothesis_compat.py",)
+
+_EXTEND_EXCLUDE = re.compile(
+    r"^extend-exclude\s*=\s*\[(?P<body>[^\]]*)\]", re.MULTILINE)
+_STRING = re.compile(r"""["']([^"']+)["']""")
+
+
+def find_repo_root(start: str = ".") -> str:
+    """Nearest ancestor of ``start`` containing pyproject.toml (falls
+    back to ``start`` itself)."""
+    cur = os.path.abspath(start)
+    while True:
+        if os.path.exists(os.path.join(cur, "pyproject.toml")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return os.path.abspath(start)
+        cur = parent
+
+
+def lint_exclusions(root: str = ".") -> Tuple[str, ...]:
+    """The shared exclusion list from ``[tool.ruff] extend-exclude``
+    (posix-relative path suffixes), or :data:`DEFAULT_EXCLUSIONS` when
+    pyproject.toml is missing/unparseable."""
+    path = os.path.join(find_repo_root(root), "pyproject.toml")
+    try:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+    except OSError:
+        return DEFAULT_EXCLUSIONS
+    m = _EXTEND_EXCLUDE.search(text)
+    if not m:
+        return DEFAULT_EXCLUSIONS
+    return tuple(_STRING.findall(m.group("body"))) or DEFAULT_EXCLUSIONS

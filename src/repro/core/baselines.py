@@ -65,14 +65,17 @@ def sq_export(params, cfg: EmbeddingConfig) -> dict:
     hi = jnp.max(emb, axis=0)
     buckets = (1 << cfg.sq_bits) - 1
     scale = jnp.where(hi > lo, (hi - lo) / buckets, 1.0)
-    q = jnp.round((emb - lo) / scale).astype(
+    # explicit rank match (sanitizer lane runs rank_promotion='raise')
+    q = jnp.round((emb - lo[None, :]) / scale[None, :]).astype(
         jnp.uint8 if cfg.sq_bits <= 8 else jnp.int32)
     return {"q": q, "lo": lo, "scale": scale}
 
 
 def sq_serving_lookup(artifact, ids, cfg) -> jax.Array:
     rows = jnp.take(artifact["q"], ids, axis=0).astype(jnp.float32)
-    return rows * artifact["scale"] + artifact["lo"]
+    lead = (1,) * (rows.ndim - 1)
+    return (rows * artifact["scale"].reshape(lead + (-1,))
+            + artifact["lo"].reshape(lead + (-1,)))
 
 
 # ---------------------------------------------------------------- hash

@@ -59,6 +59,8 @@ def subspace_distances(e_sub: jax.Array, centroids: jax.Array) -> jax.Array:
     """
     dots = jnp.einsum("...ds,dks->...dk", e_sub, centroids)
     c_sq = jnp.sum(jnp.square(centroids), axis=-1)  # (D, K)
+    # explicit rank match (sanitizer lane runs rank_promotion='raise')
+    c_sq = c_sq.reshape((1,) * (dots.ndim - 2) + c_sq.shape)
     return c_sq - 2.0 * dots
 
 
@@ -74,10 +76,12 @@ def assign_codes(e_sub: jax.Array, centroids: jax.Array,
     dist = subspace_distances(e_sub, centroids)
     if k_limit is not None:
         k = dist.shape[-1]
-        slot = jnp.arange(k, dtype=jnp.int32)
-        # (..., 1, K) mask against (...,) limits
-        mask = slot[None, :] >= k_limit[..., None, None]
-        dist = jnp.where(mask, jnp.inf, dist)
+        # explicit rank match (sanitizer lane runs rank_promotion=
+        # 'raise'): slot (..1.., K) vs limits broadcast to (..., 1, 1)
+        slot = jnp.arange(k, dtype=jnp.int32).reshape(
+            (1,) * (dist.ndim - 1) + (k,))
+        lim = jnp.broadcast_to(k_limit, dist.shape[:-2])[..., None, None]
+        dist = jnp.where(slot >= lim, jnp.inf, dist)
     return jnp.argmin(dist, axis=-1).astype(jnp.int32)
 
 
@@ -190,7 +194,9 @@ def serving_lookup(codes_table: jax.Array, centroids: jax.Array,
     None, ``block_b`` resolves through the autotune cache.
     """
     from repro.kernels.mgqe_decode import decode
-    codes = jnp.take(codes_table, ids, axis=0).astype(jnp.int32)  # (..., D)
+    # gather at the STORED dtype (uint8 for K<=256); the kernels widen
+    # per block in VMEM — an int32 batch here quadruples gather traffic
+    codes = jnp.take(codes_table, ids, axis=0)        # (..., D)
     d = codes.shape[-1]
     flat = decode(codes.reshape(-1, d), centroids,
                   block_b=block_b, backend=backend)

@@ -29,7 +29,9 @@ def size_table(cfgs: Iterable[EmbeddingConfig]) -> List[Dict]:
     cfgs = list(cfgs)
     full_bits = None
     for c in cfgs:
-        if c.kind == "full":
+        # not scheme dispatch — picking the uncompressed row as the
+        # size-table baseline; behavior lives in core/schemes/
+        if c.kind == "full":  # repro-lint: disable=kind-dispatch
             full_bits = c.serving_size_bits()
             break
     if full_bits is None:

@@ -93,7 +93,10 @@ class ShardedIterator:
         out = {}
         for k, v in batch.items():
             b = v.shape[0]
-            assert b % self.num_hosts == 0, (k, b, self.num_hosts)
+            if b % self.num_hosts:
+                raise ValueError(
+                    f"batch leaf {k!r} has {b} rows, not divisible over "
+                    f"{self.num_hosts} hosts")
             per = b // self.num_hosts
             out[k] = v[self.host_id * per:(self.host_id + 1) * per]
         return out

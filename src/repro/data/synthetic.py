@@ -197,7 +197,9 @@ def criteo_field_vocabs(n_sparse: int = 39) -> Tuple[int, ...]:
     huge id spaces, a middle band, and many small enum fields."""
     sizes = ([10_000_000] * 2 + [1_000_000] * 4 + [100_000] * 6
              + [10_000] * 9 + [1_000] * 9 + [100] * 9)
-    assert len(sizes) == 39
+    if len(sizes) != 39:
+        raise ValueError(f"criteo-style tier list has {len(sizes)} != 39 "
+                         f"entries")
     return tuple(sizes[:n_sparse])
 
 
@@ -315,7 +317,9 @@ def pq_clustered_corpus(n: int = 100_000, d: int = 64,
     corpus, the skew regime the bounded IVF list layout exists for
     (DESIGN.md §12).  0 (default) keeps cluster sizes uniform.
     """
-    assert d % num_subspaces == 0, (d, num_subspaces)
+    if d % num_subspaces:
+        raise ValueError(
+            f"dim {d} does not divide into {num_subspaces} subspaces")
     s = d // num_subspaces
     rng = np.random.default_rng(seed)
     books = rng.normal(size=(num_subspaces, n_words, s)).astype(np.float32)

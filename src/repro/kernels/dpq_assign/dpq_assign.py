@@ -48,7 +48,9 @@ def dpq_assign(e_sub: jax.Array, centroids: jax.Array,
     -> codes (B, D) int32."""
     b, d, s = e_sub.shape
     n_sub, k, s2 = centroids.shape
-    assert (d, s) == (n_sub, s2), ((d, s), (n_sub, s2))
+    if (d, s) != (n_sub, s2):
+        raise ValueError(f"e_sub subspaces {(d, s)} do not match "
+                         f"centroids {(n_sub, s2)}")
     if k_limit is None:
         k_limit = jnp.full((b,), k, jnp.int32)
     k_limit = k_limit.astype(jnp.int32)

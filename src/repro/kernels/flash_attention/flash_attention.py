@@ -88,10 +88,13 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     """
     b, sq, h, hd = q.shape
     _, skv, hkv, _ = k.shape
-    assert h % hkv == 0, (h, hkv)
+    if h % hkv:
+        raise ValueError(f"query heads {h} not a multiple of kv heads {hkv}")
     g = h // hkv
-    assert sq % block_q == 0, (sq, block_q)
-    assert skv % block_k == 0, (skv, block_k)
+    if sq % block_q:
+        raise ValueError(f"seq_q {sq} not a multiple of block_q {block_q}")
+    if skv % block_k:
+        raise ValueError(f"seq_kv {skv} not a multiple of block_k {block_k}")
 
     # (B, S, H, hd) -> (B*H, S, hd) with kv head g-fold repeat folded in
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)

@@ -61,7 +61,8 @@ def mgqe_decode(codes: jax.Array, centroids: jax.Array,
     """
     b, d = codes.shape
     n_sub, k, s = centroids.shape
-    assert d == n_sub, (d, n_sub)
+    if d != n_sub:
+        raise ValueError(f"codes have {d} subspaces, centroids {n_sub}")
     pad = (-b) % block_b
     if pad:
         codes = jnp.pad(codes, ((0, pad), (0, 0)))
@@ -119,7 +120,8 @@ def rq_decode_stages(codes: jax.Array, codebooks: jax.Array,
     """
     b, m = codes.shape
     m2, k, d = codebooks.shape
-    assert m == m2, (m, m2)
+    if m != m2:
+        raise ValueError(f"codes have {m} layers, codebooks {m2}")
     if block_d is None or d % block_d:
         block_d = d
     pad = (-b) % block_b

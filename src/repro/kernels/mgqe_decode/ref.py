@@ -13,10 +13,13 @@ def mgqe_decode_ref(codes: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
     """codes (B, D) int; centroids (D, K, S) -> (B, D*S) float."""
     b, d = codes.shape
     _, _, s = centroids.shape
+    # mode="clip": under mgqe private_k, ids of OTHER tiers carry codes
+    # >= this tier's K — those lanes are masked downstream by the tier
+    # select, but jit's default OOB fill (NaN) would trip debug_nans
     gathered = jnp.take_along_axis(
         centroids[None],                                   # (1, D, K, S)
         codes.astype(jnp.int32)[..., None, None],          # (B, D, 1, 1)
-        axis=2)                                            # (B, D, 1, S)
+        axis=2, mode="clip")                               # (B, D, 1, S)
     return gathered[:, :, 0, :].reshape(b, d * s)
 
 

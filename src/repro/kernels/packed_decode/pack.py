@@ -40,7 +40,9 @@ def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
     if pad:
         c = jnp.pad(c, [(0, 0)] * (c.ndim - 1) + [(0, pad)])
     c = c.reshape(c.shape[:-1] + (w, per_byte)).astype(jnp.uint32)
-    shifts = jnp.arange(per_byte, dtype=jnp.uint32) * bits
+    # explicit rank match (sanitizer lane runs rank_promotion='raise')
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits).reshape(
+        (1,) * (c.ndim - 1) + (per_byte,))
     word = jnp.sum(c << shifts, axis=-1)
     return word.astype(jnp.uint8)
 
@@ -56,7 +58,8 @@ def unpack_codes(packed: jax.Array, bits: int, num_codes: int) -> jax.Array:
         raise ValueError(
             f"packed width {w} does not hold {num_codes} codes of "
             f"{bits} bits (want {packed_width(num_codes, bits)})")
-    shifts = jnp.arange(per_byte, dtype=jnp.int32) * bits
+    shifts = (jnp.arange(per_byte, dtype=jnp.int32) * bits).reshape(
+        (1,) * packed.ndim + (per_byte,))
     codes = (packed.astype(jnp.int32)[..., None] >> shifts) & (2 ** bits - 1)
     codes = codes.reshape(packed.shape[:-1] + (w * per_byte,))
     return codes[..., :num_codes].astype(jnp.uint8)

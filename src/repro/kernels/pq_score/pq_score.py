@@ -64,7 +64,8 @@ def pq_score(lut: jax.Array, codes: jax.Array, block_n: int = 1024,
     """lut (D, K) f32; codes (N, D) int -> scores (N,) f32."""
     n, d = codes.shape
     n_sub, k = lut.shape
-    assert d == n_sub, (d, n_sub)
+    if d != n_sub:
+        raise ValueError(f"codes have {d} subspaces, LUT {n_sub}")
     pad = (-n) % block_n
     if pad:
         codes = jnp.pad(codes, ((0, pad), (0, 0)))
@@ -95,7 +96,8 @@ def pq_score_batched(luts: jax.Array, codes: jax.Array,
     """luts (B, D, K) f32; codes (N, D) int -> scores (B, N) f32."""
     n, d = codes.shape
     b, n_sub, k = luts.shape
-    assert d == n_sub, (d, n_sub)
+    if d != n_sub:
+        raise ValueError(f"codes have {d} subspaces, LUT {n_sub}")
     pad = (-n) % block_n
     if pad:
         codes = jnp.pad(codes, ((0, pad), (0, 0)))
@@ -151,7 +153,8 @@ def pq_topk(luts: jax.Array, codes: jax.Array, k: int,
     """
     n, d = codes.shape
     b, n_sub, kk = luts.shape
-    assert d == n_sub, (d, n_sub)
+    if d != n_sub:
+        raise ValueError(f"codes have {d} subspaces, LUT {n_sub}")
     pad = (-n) % block_n
     if pad:
         codes = jnp.pad(codes, ((0, pad), (0, 0)))

@@ -48,8 +48,9 @@ def pq_score_batched_ref(luts: jnp.ndarray,
     layout), and identical math.
     """
     b, n_sub, k = luts.shape
-    flat = (codes.astype(jnp.int32)
-            + jnp.arange(n_sub, dtype=jnp.int32) * k).reshape(-1)
+    # explicit rank match (sanitizer lane runs rank_promotion='raise')
+    offs = (jnp.arange(n_sub, dtype=jnp.int32) * k)[None, :]
+    flat = (codes.astype(jnp.int32) + offs).reshape(-1)
     return jnp.take(luts.reshape(b, n_sub * k), flat,
                     axis=1).reshape(b, -1, n_sub).sum(-1)
 

@@ -317,10 +317,8 @@ class AsyncServingEngine:
                 flat = (batch[0][0] if len(batch) == 1 else
                         np.concatenate([arr for arr, _, _ in batch]))
                 n_valid = int(flat.shape[0])
-                out = self.engine.run_flat(flat, n_valid)
-                # the inner engine saw one request; the front-end served
-                # len(batch) of them — keep the shared counter honest
-                self.stats_.requests += len(batch) - 1
+                out = self.engine.run_flat(flat, n_valid,
+                                           n_requests=len(batch))
                 leaves, treedef = jax.tree_util.tree_flatten(out)
                 np_leaves = [np.asarray(leaf)[:n_valid] for leaf in leaves]
                 offs = np.cumsum([0] + sizes)

@@ -150,7 +150,9 @@ def lm_train_cell(arch: str, cfg: LMConfig, shape: ShapeSpec, mesh,
     if microbatches == 1:
         step = opt_lib.make_step_fn(ocfg, loss_fn)
     else:
-        assert b % microbatches == 0, (b, microbatches)
+        if b % microbatches:
+            raise ValueError(f"batch {b} not divisible into "
+                             f"{microbatches} microbatches")
         mb = b // microbatches
         # fp32 accumulators carry the ZeRO-1 sharding of the Adam
         # moments (extra data-axis split) — a full param-shaped fp32

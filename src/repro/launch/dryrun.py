@@ -125,7 +125,8 @@ def main():
                     continue
                 cells.append((arch, shape))
     else:
-        assert args.arch, "--arch or --all required"
+        if not args.arch:
+            raise SystemExit("--arch or --all required")
         for shape in shapes_for(args.arch):
             if args.shape and shape.name != args.shape:
                 continue

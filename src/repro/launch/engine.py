@@ -5,12 +5,14 @@ The engines here own device-resident artifacts — placed once with
 ``jax.device_put`` and reused across every request, never re-uploaded —
 and micro-batch queued requests into a single fused call:
 
-  * ``submit(x)`` enqueues a request and returns a handle;
-  * ``flush()`` concatenates the queue, pads the flat batch up to the
-    kernel's block granularity (so every launch hits the full-block
-    fast path and JIT retraces are bounded by queue-size/block, not by
-    request shape), runs ONE jitted call, and splits results back per
-    request;
+  * ``submit(x)`` enqueues a request (coerced HOST-side — no device
+    work on the submit path) and returns a handle;
+  * ``flush()`` concatenates the queue in numpy, pads the flat batch
+    up to the kernel's block granularity (so every launch hits the
+    full-block fast path and JIT retraces are bounded by
+    queue-size/block, not by request shape), runs ONE jitted call via
+    the shared ``run_flat`` device leg — one upload, one fused call —
+    and splits results back per request;
   * the synchronous helpers (``lookup`` / ``search``) are
     submit + flush.
 
@@ -93,11 +95,11 @@ class EngineStats:
 class _MicroBatchEngine:
     """Queue/pad/flush/split plumbing shared by the serving engines.
 
-    Subclasses define ``_coerce`` (request -> array with a leading
-    batch dim) and ``_run`` (padded flat batch -> pytree of arrays
-    with the same leading dim); everything else — queueing, padding to
-    ``pad_multiple``, stats, splitting results back per request — is
-    identical between id-lookup and retrieval traffic.
+    Subclasses define ``_coerce_host`` (request -> numpy array with a
+    leading batch dim) and ``_run`` (padded flat batch -> pytree of
+    arrays with the same leading dim); everything else — queueing,
+    padding to ``pad_multiple``, stats, splitting results back per
+    request — is identical between id-lookup and retrieval traffic.
     """
 
     def __init__(self, pad_multiple: int, max_queue: int,
@@ -105,21 +107,18 @@ class _MicroBatchEngine:
         self.pad_multiple = pad_multiple
         self.max_queue = max_queue
         self.mesh = mesh
-        self._queue: List[jax.Array] = []
+        self._queue: List[np.ndarray] = []
         self._queued = 0
         self._n_valid = 0          # real rows of the flush in flight
         self.stats_ = EngineStats()
 
     # --------------------------------------------------------- hooks
-    def _coerce(self, request) -> jax.Array:
-        raise NotImplementedError
-
     def _coerce_host(self, request) -> np.ndarray:
-        """Host-side (numpy) twin of ``_coerce`` — same shape/dtype
-        rules, NO device upload.  The async front-end
-        (`launch/async_engine.py`) queues requests host-side and ships
-        one concatenated array per flush; per-request device arrays
-        would cost a dispatch each on the submit path."""
+        """Request -> host (numpy) array with a leading batch dim, NO
+        device upload.  Both front-ends (the queueing ``submit`` here
+        and `launch/async_engine.py`) queue requests host-side and
+        ship one concatenated array per flush; per-request device
+        arrays would cost a dispatch each on the submit path."""
         raise NotImplementedError
 
     def _run(self, flat: jax.Array):
@@ -130,8 +129,11 @@ class _MicroBatchEngine:
     # --------------------------------------------------------- queue
     def submit(self, request) -> int:
         """Enqueue one request; returns its handle (index into the
-        list the next flush() returns)."""
-        arr = self._coerce(request)
+        list the next flush() returns).  Requests are coerced and
+        queued HOST-side (``_coerce_host``) so the submit path never
+        dispatches device work — the whole batch ships as one upload
+        inside the flush."""
+        arr = self._coerce_host(request)
         self._queue.append(arr)
         self._queued += arr.shape[0]
         return len(self._queue) - 1
@@ -145,32 +147,20 @@ class _MicroBatchEngine:
 
     # --------------------------------------------------------- serve
     def flush(self) -> List:
-        """Process every queued request in one padded micro-batch."""
+        """Process every queued request in one padded micro-batch.
+
+        Assembly and padding are pure host work routed through the
+        shared :meth:`run_flat` device leg — the device-side
+        ``jnp.pad`` this method used to do re-dispatched (and on a
+        fresh length, recompiled) per distinct unpadded batch size
+        (lint rule ``pad-in-flush``, DESIGN.md §15)."""
         if not self._queue:
             return []
         reqs, self._queue = self._queue, []
         n_req, n_rows = len(reqs), self._queued
         self._queued = 0
-        flat = jnp.concatenate(reqs) if n_req > 1 else reqs[0]
-        pad = (-flat.shape[0]) % self.pad_multiple
-        if pad:
-            widths = [(0, pad)] + [(0, 0)] * (flat.ndim - 1)
-            flat = jnp.pad(flat, widths)   # zero rows are always valid
-        self._n_valid = n_rows         # lets _run tell rows from padding
-        t0 = time.perf_counter()
-        if self.mesh is not None:
-            # ambient mesh at trace time -> shard_map fused path
-            with self.mesh:
-                out = self._run(flat)
-        else:
-            out = self._run(flat)
-        jax.block_until_ready(out)
-        dt = time.perf_counter() - t0
-        self.stats_.requests += n_req
-        self.stats_.lookups += n_rows
-        self.stats_.padded_lookups += int(flat.shape[0])
-        self.stats_.flushes += 1
-        self.stats_.seconds += dt
+        flat = np.concatenate(reqs) if n_req > 1 else reqs[0]
+        out = self.run_flat(flat, n_rows, n_requests=n_req)
         sizes = [r.shape[0] for r in reqs]
         splits = np.cumsum(sizes)[:-1].tolist()
         leaves, treedef = jax.tree.flatten(out)
@@ -179,7 +169,8 @@ class _MicroBatchEngine:
         return [treedef.unflatten([p[i] for p in pieces])
                 for i in range(n_req)]
 
-    def run_flat(self, flat: np.ndarray, n_valid: Optional[int] = None):
+    def run_flat(self, flat: np.ndarray, n_valid: Optional[int] = None,
+                 n_requests: int = 1):
         """One fused call over a HOST-assembled flat batch — the async
         front-end's flush path (`launch/async_engine.py`); the queueing
         ``submit``/``flush`` pair above is unchanged.
@@ -192,7 +183,9 @@ class _MicroBatchEngine:
         memcpy, and the padded lengths collapse to a couple of stable,
         warmable shapes.  Returns the RAW result pytree (padded rows
         included) — callers slice ``[:n_valid]`` host-side, where it is
-        free.  Stats accumulate as one request of ``n_valid`` lookups.
+        free.  Stats accumulate as ``n_requests`` requests (the queueing
+        ``flush`` and the async front-end pass their batch sizes; the
+        default 1 fits direct callers) of ``n_valid`` total lookups.
         """
         n_valid = int(flat.shape[0] if n_valid is None else n_valid)
         pad = (-n_valid) % self.pad_multiple
@@ -209,7 +202,7 @@ class _MicroBatchEngine:
             out = self._run(dev)
         jax.block_until_ready(out)
         self.stats_.seconds += time.perf_counter() - t0
-        self.stats_.requests += 1
+        self.stats_.requests += n_requests
         self.stats_.lookups += n_valid
         self.stats_.padded_lookups += int(dev.shape[0])
         self.stats_.flushes += 1
@@ -453,9 +446,6 @@ class ServingEngine(_MicroBatchEngine):
         return self._hot_ids
 
     # --------------------------------------------------------- serve
-    def _coerce(self, ids) -> jax.Array:
-        return jnp.asarray(ids, jnp.int32).reshape(-1)
-
     def _coerce_host(self, ids) -> np.ndarray:
         return np.asarray(ids, np.int32).reshape(-1)
 
@@ -500,17 +490,12 @@ class ServingEngine(_MicroBatchEngine):
         return self._cold_merge(self.artifact, self._hot_block,
                                 slots_dev, cold_dev, rank_dev)
 
-    def flush(self) -> List:
-        out = super().flush()
-        if (out and self._hot_block is not None and self.hot_refresh_every
-                and self.stats_.flushes % self.hot_refresh_every == 0):
-            self.refresh_hot_rows()
-        return out
-
-    def run_flat(self, flat: np.ndarray, n_valid: Optional[int] = None):
-        out = super().run_flat(flat, n_valid)
-        # same in-flush refresh cadence as flush(); the async front-end
-        # sets hot_refresh_every=0 and refreshes on its own thread
+    def run_flat(self, flat: np.ndarray, n_valid: Optional[int] = None,
+                 n_requests: int = 1):
+        out = super().run_flat(flat, n_valid, n_requests=n_requests)
+        # one refresh cadence for BOTH front-ends — the queueing flush()
+        # routes through here; the async front-end sets
+        # hot_refresh_every=0 and refreshes on its own thread
         if (self._hot_block is not None and self.hot_refresh_every
                 and self.stats_.flushes % self.hot_refresh_every == 0):
             self.refresh_hot_rows()
@@ -621,10 +606,6 @@ class RetrievalEngine(_MicroBatchEngine):
     def staged_mbytes(self) -> float:
         """Total MB staged to device so far (host-staged mode)."""
         return float(getattr(self.index, "staged_bytes", 0)) / 1e6
-
-    def _coerce(self, queries) -> jax.Array:
-        q = jnp.asarray(queries, jnp.float32)
-        return q[None] if q.ndim == 1 else q
 
     def _coerce_host(self, queries) -> np.ndarray:
         q = np.asarray(queries, np.float32)

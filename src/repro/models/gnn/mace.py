@@ -42,7 +42,9 @@ from repro.nn.mlp import mlp, mlp_init
 def bessel_basis(dist: jax.Array, n_rbf: int, r_cut: float) -> jax.Array:
     """(E,) -> (E, n_rbf); sin(n pi r / rc) / r with smooth cutoff."""
     d = jnp.maximum(dist, 1e-6)[..., None]
-    n = jnp.arange(1, n_rbf + 1, dtype=d.dtype)
+    # explicit rank match (sanitizer lane runs rank_promotion='raise')
+    n = jnp.arange(1, n_rbf + 1, dtype=d.dtype).reshape(
+        (1,) * (d.ndim - 1) + (-1,))
     rb = jnp.sqrt(2.0 / r_cut) * jnp.sin(n * jnp.pi * d / r_cut) / d
     # polynomial envelope (p=5) going smoothly to 0 at r_cut
     x = jnp.clip(dist / r_cut, 0.0, 1.0)[..., None]

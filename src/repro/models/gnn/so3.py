@@ -89,8 +89,11 @@ def real_cg(l1: int, l2: int, l3: int) -> np.ndarray:
     cr = np.einsum("am,bn,ck,mnk->abc", u1, u2, np.conj(u3), c)
     re, im = np.real(cr), np.imag(cr)
     if np.abs(im).max() > np.abs(re).max() * 1e-8 + 1e-12:
-        assert np.abs(re).max() < np.abs(im).max() * 1e-8 + 1e-12, \
-            (l1, l2, l3, np.abs(re).max(), np.abs(im).max())
+        if np.abs(re).max() >= np.abs(im).max() * 1e-8 + 1e-12:
+            raise ValueError(
+                f"coupling tensor ({l1},{l2},{l3}) is neither pure-real "
+                f"nor pure-imaginary: |re|={np.abs(re).max():.3e} "
+                f"|im|={np.abs(im).max():.3e}")
         return np.ascontiguousarray(im)
     return np.ascontiguousarray(re)
 

@@ -327,7 +327,8 @@ def chunked_xent(h: jax.Array, labels: jax.Array, w_head: jax.Array,
     b, s, d = h.shape
     chunk = min(chunk, s)
     n_chunks = s // chunk
-    assert s % chunk == 0, (s, chunk)
+    if s % chunk:
+        raise ValueError(f"seq len {s} not a multiple of chunk {chunk}")
     h_c = h.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
     y_c = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
 

@@ -66,8 +66,10 @@ class FieldEmbeddings:
 
     def __init__(self, cfg: RecsysConfig):
         self.cfg = cfg
-        assert len(cfg.field_vocab_sizes) == cfg.n_sparse, \
-            (len(cfg.field_vocab_sizes), cfg.n_sparse)
+        if len(cfg.field_vocab_sizes) != cfg.n_sparse:
+            raise ValueError(
+                f"{len(cfg.field_vocab_sizes)} field vocab sizes for "
+                f"n_sparse={cfg.n_sparse} fields")
         self.embs: List[Embedding] = [
             Embedding(field_embedding_config(cfg, v))
             for v in cfg.field_vocab_sizes]

@@ -30,5 +30,7 @@ def dense_init(key, d_in: int, d_out: int, *, bias: bool = True,
 def dense(params: dict, x: jnp.ndarray) -> jnp.ndarray:
     y = x @ params["w"].astype(x.dtype)
     if "b" in params:
-        y = y + params["b"].astype(x.dtype)
+        # explicit rank match (sanitizer lane: rank_promotion='raise')
+        b = params["b"].astype(x.dtype)
+        y = y + b.reshape((1,) * (y.ndim - 1) + (-1,))
     return y

@@ -156,9 +156,10 @@ def moe_ffn_sharded(params: dict, x: jax.Array, *, top_k: int,
     if expert_par:
         w_spec = P(model_axis, None, None)          # E over model
     else:
-        assert params["w_gate"].shape[-1] % model_n == 0, \
-            ("ffn strategy needs d_ff divisible by the model axis",
-             params["w_gate"].shape, model_n)
+        if params["w_gate"].shape[-1] % model_n:
+            raise ValueError(
+                f"ffn strategy needs d_ff divisible by the model axis: "
+                f"w_gate {params['w_gate'].shape} over {model_n}")
         w_spec = P(None, None, model_axis)          # d_ff over model
     wd_spec = (P(model_axis, None, None) if expert_par
                else P(None, model_axis, None))

@@ -17,7 +17,10 @@ def rms_norm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
     var = jnp.einsum("...d,...d->...", x, x,
                      preferred_element_type=jnp.float32) / x.shape[-1]
     inv = ((var + eps) ** -0.5)[..., None].astype(x.dtype)
-    return x * inv * (1.0 + params["scale"].astype(x.dtype))
+    # explicit rank match (sanitizer lane runs rank_promotion='raise')
+    gain = (1.0 + params["scale"].astype(x.dtype)).reshape(
+        (1,) * (x.ndim - 1) + (-1,))
+    return x * inv * gain
 
 
 def layer_norm_init(dim: int, dtype=jnp.float32) -> dict:
@@ -30,6 +33,8 @@ def layer_norm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.var(xf, axis=-1, keepdims=True)
     y = (xf - mu) * (var + eps) ** -0.5
-    y = (y * params["scale"].astype(jnp.float32)
-         + params["bias"].astype(jnp.float32))
+    # explicit rank match (sanitizer lane runs rank_promotion='raise')
+    lead = (1,) * (y.ndim - 1)
+    y = (y * params["scale"].astype(jnp.float32).reshape(lead + (-1,))
+         + params["bias"].astype(jnp.float32).reshape(lead + (-1,)))
     return y.astype(x.dtype)

@@ -20,9 +20,15 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta) -> jnp.ndarray:
     or (..., seq).  fp32 math, cast back to x.dtype."""
     half = x.shape[-1] // 2
     freqs = rope_freqs(x.shape[-1], theta)                    # (half,)
-    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    # explicit rank match (sanitizer lane runs rank_promotion='raise')
+    pos = positions.astype(jnp.float32)[..., None]            # (..., seq, 1)
+    angles = pos * freqs.reshape((1,) * (pos.ndim - 1) + (-1,))  # (..., seq, half)
     cos = jnp.cos(angles)[..., None, :]                        # (..., seq, 1, half)
     sin = jnp.sin(angles)[..., None, :]
+    if cos.ndim < x.ndim:        # unbatched positions, batched activations
+        lead = (1,) * (x.ndim - cos.ndim)
+        cos = cos.reshape(lead + cos.shape)
+        sin = sin.reshape(lead + sin.shape)
     xf = x.astype(jnp.float32)
     x1, x2 = xf[..., :half], xf[..., half:]
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

@@ -37,7 +37,9 @@ def fit_pq(key: jax.Array, vectors: jax.Array, num_subspaces: int,
     vectors (N, d) -> centroids (D, K, S), S = d / D.
     """
     n, d = vectors.shape
-    assert d % num_subspaces == 0, (d, num_subspaces)
+    if d % num_subspaces:
+        raise ValueError(
+            f"dim {d} does not divide into {num_subspaces} subspaces")
     s = d // num_subspaces
     x = vectors.reshape(n, num_subspaces, s).transpose(1, 0, 2)  # (D, N, S)
 
@@ -90,13 +92,14 @@ def build_corpus_artifact(key: jax.Array, vectors: jax.Array,
 
 def adc_scores(artifact: Dict, query: jax.Array,
                backend: Optional[str] = None,
-               block_n: int = 1024) -> jax.Array:
+               block_n: Optional[int] = None) -> jax.Array:
     """query (d,) -> scores (N,) over the coded corpus.
 
     Scoring runs through the dispatched ``pq_score`` kernel — the LUT
     stays in VMEM on TPU; the XLA reference is the CPU fallback.  The
     codes go in at their stored dtype (uint8); widening happens inside
-    the kernels, per block.
+    the kernels, per block.  ``block_n=None`` resolves through the
+    autotune cache (DESIGN.md §13).
     """
     return score_candidates(query, artifact["centroids"],
                             artifact["codes"],
@@ -106,8 +109,7 @@ def adc_scores(artifact: Dict, query: jax.Array,
 def reconstruction_mse(artifact: Dict, vectors: jax.Array) -> jax.Array:
     """Mean squared quantization error of the coded corpus."""
     from repro.kernels.mgqe_decode.ref import mgqe_decode_ref
-    rec = mgqe_decode_ref(artifact["codes"].astype(jnp.int32),
-                          artifact["centroids"])
+    rec = mgqe_decode_ref(artifact["codes"], artifact["centroids"])
     return jnp.mean(jnp.square(rec - vectors))
 
 

@@ -34,7 +34,8 @@ def dp_axes(multi_pod: bool):
 def _pad_spec(spec: Tuple, ndim: int) -> P:
     """Left-pad a trailing-dims spec with None up to ndim."""
     pad = ndim - len(spec)
-    assert pad >= 0, (spec, ndim)
+    if pad < 0:
+        raise ValueError(f"spec {spec} longer than ndim={ndim}")
     return P(*((None,) * pad + tuple(spec)))
 
 

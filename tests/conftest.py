@@ -1,8 +1,61 @@
 """Test fixtures.  NOTE: no XLA_FLAGS here — smoke tests run on the
 single real CPU device; multi-device sharding tests spawn subprocesses
-with their own flags (test_sharding.py)."""
+with their own flags (test_sharding.py).
+
+Sanitizer lane (DESIGN.md §15): ``pytest --sanitize`` re-runs the fast
+tier under JAX's strict numerics flags —
+
+* ``jax_numpy_rank_promotion="raise"`` turns silent broadcast-rank
+  promotion (the classic (B,) vs (B, 1) recsys bug) into an error;
+* ``jax_debug_nans`` fails the op that PRODUCES a NaN instead of the
+  assertion that later observes it.
+
+Both are session-wide.  ``jax.transfer_guard("disallow")`` is scoped
+tighter: for tests marked ``hot_path`` (the serving-engine suites) the
+guard wraps the engines' ``run_flat`` device leg — the serving
+contract is ONE explicit upload and one fused call per flush, so any
+*implicit* host<->device transfer inside that leg (a numpy operand
+reaching a jitted call, eager scalar mixing) is a smuggled sync point
+on the latency path.  Test-side assertions stay unguarded: eager
+numpy/jax mixing is fine in test code.
+"""
 import jax
 import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sanitize", action="store_true", default=False,
+        help="run under jax_numpy_rank_promotion='raise' + "
+             "jax_debug_nans; wrap hot_path-marked tests' engine "
+             "flush legs in jax.transfer_guard('disallow') "
+             "(DESIGN.md §15)")
+
+
+def pytest_configure(config):
+    if config.getoption("--sanitize"):
+        jax.config.update("jax_numpy_rank_promotion", "raise")
+        jax.config.update("jax_debug_nans", True)
+
+
+@pytest.fixture(autouse=True)
+def _transfer_guard(request, monkeypatch):
+    """Under --sanitize, hot_path-marked tests run every engine
+    ``run_flat`` (the single-upload fused-call flush leg, whichever
+    thread executes it) with implicit transfers disallowed."""
+    if (request.config.getoption("--sanitize")
+            and request.node.get_closest_marker("hot_path")):
+        from repro.launch import engine as engine_mod
+
+        orig = engine_mod._MicroBatchEngine.run_flat
+
+        def guarded(self, *args, **kwargs):
+            with jax.transfer_guard("disallow"):
+                return orig(self, *args, **kwargs)
+
+        monkeypatch.setattr(engine_mod._MicroBatchEngine,
+                            "run_flat", guarded)
+    yield
 
 
 @pytest.fixture

@@ -1,0 +1,460 @@
+"""repro.analysis: the repo-invariant lint engine (DESIGN.md §15).
+
+Coverage in four layers: every rule gets a paired bad fixture (fires)
+and good fixture (stays quiet) driven through ``analyze_source`` with
+virtual repo paths (rules are path-scoped); the suppression and
+baseline machinery round-trips; the registry contract (duplicate ids,
+kind-name superset of the live scheme/index registries) is pinned; and
+the self-check — the linter parses every committed src/tools file and
+reports ZERO diagnostics, the empty-committed-baseline invariant the
+CI ``analysis`` job gates on.
+"""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import (analyze_paths, analyze_source,
+                            filter_baseline, lint_exclusions,
+                            load_baseline, registered_rule_ids,
+                            rule_class, write_baseline)
+from repro.analysis.engine import PARSE_ERROR_RULE, Rule, register_rule
+from repro.analysis.rules import SCHEME_KIND_NAMES
+from repro.analysis.scope import find_repo_root
+
+REPO = find_repo_root(os.path.dirname(__file__))
+
+
+def _ids(path, src, rule=None):
+    """Rule ids fired on dedented ``src`` under virtual ``path``."""
+    diags = analyze_source(path, textwrap.dedent(src),
+                           rule_ids=[rule] if rule else None)
+    return [d.rule_id for d in diags]
+
+
+# ----------------------------------------------------------------------
+# rule fixtures: each bad snippet fires, its good twin does not
+# ----------------------------------------------------------------------
+
+def test_import_time_jax_fires_on_module_constant():
+    bad = """\
+        import jax.numpy as jnp
+        SCALE = jnp.ones((4,))
+    """
+    assert _ids("src/repro/foo.py", bad) == ["import-time-jax"]
+
+
+def test_import_time_jax_fires_on_eager_default_arg():
+    bad = """\
+        import jax.numpy as jnp
+        def f(x=jnp.zeros(3)):
+            return x
+    """
+    assert _ids("src/repro/foo.py", bad) == ["import-time-jax"]
+
+
+def test_import_time_jax_quiet_on_lazy_and_meta_calls():
+    good = """\
+        import jax
+        import jax.numpy as jnp
+        MAX = jnp.iinfo(jnp.int32).max        # dtype meta: no backend
+        def build():
+            return jnp.ones((4,))             # runs at call time
+        step = jax.jit(build)                 # wrapping is lazy
+    """
+    assert _ids("src/repro/foo.py", good) == []
+
+
+def test_kind_dispatch_fires_outside_registries():
+    bad = """\
+        def f(cfg):
+            if cfg.kind == "dpq":
+                return 1
+    """
+    assert _ids("src/repro/launch/foo.py", bad) == ["kind-dispatch"]
+
+
+def test_kind_dispatch_fires_on_membership():
+    bad = """\
+        def f(cfg):
+            return cfg.kind in ("mgqe", "rq")
+    """
+    assert _ids("src/repro/core/foo.py", bad) == ["kind-dispatch"]
+
+
+def test_kind_dispatch_quiet_in_registry_dirs_and_foreign_kinds():
+    text = """\
+        def f(cfg):
+            if cfg.kind == "dpq":
+                return 1
+    """
+    assert _ids("src/repro/core/schemes/foo.py", text) == []
+    assert _ids("src/repro/retrieval/foo.py", text) == []
+    # .kind comparisons against non-scheme strings are not dispatch
+    good = """\
+        def f(shape):
+            if shape.kind == "graph_mini":
+                return 1
+    """
+    assert _ids("src/repro/launch/foo.py", good) == []
+
+
+def test_code_upcast_fires_outside_kernels():
+    bad = """\
+        import jax.numpy as jnp
+        def f(codes_table, ids):
+            return jnp.take(codes_table, ids, axis=0).astype(jnp.int32)
+    """
+    assert _ids("src/repro/core/foo.py", bad) == ["code-upcast"]
+
+
+def test_code_upcast_quiet_in_kernels_and_on_non_codes():
+    text = """\
+        import jax.numpy as jnp
+        def f(codes):
+            return codes.astype(jnp.int32)
+    """
+    assert _ids("src/repro/kernels/foo/foo.py", text) == []
+    good = """\
+        import jax.numpy as jnp
+        def f(rows, codes):
+            return rows.astype(jnp.int32), codes.astype(jnp.float32)
+    """
+    assert _ids("src/repro/core/foo.py", good) == []
+
+
+def test_block_literal_fires_on_signature_default():
+    bad = """\
+        def adc(artifact, q, block_n=1024):
+            return None
+    """
+    assert _ids("src/repro/retrieval/foo.py", bad) == ["block-literal"]
+
+
+def test_block_literal_fires_at_kernel_call_site():
+    bad = """\
+        from repro.kernels.mgqe_decode import decode
+        def f(c, cent):
+            return decode(c, cent, block_b=64)
+    """
+    assert _ids("src/repro/core/foo.py", bad) == ["block-literal"]
+    bad2 = """\
+        def f(dispatch, lut, codes):
+            return dispatch.dispatch("pq_score", lut, codes, block_n=512)
+    """
+    assert _ids("src/repro/core/foo.py", bad2) == ["block-literal"]
+
+
+def test_block_literal_quiet_on_none_pins_and_kernel_internals():
+    good = """\
+        from repro.kernels.mgqe_decode import decode
+        def adc(artifact, q, block_n=None):
+            return decode(q, artifact, block_b=None)
+        def g(cfg, c, cent):
+            return decode(c, cent, block_b=cfg.decode_block_b)
+    """
+    assert _ids("src/repro/core/foo.py", good) == []
+    # kernels may default their own block geometry
+    internal = """\
+        def _impl(lut, codes, block_n=1024):
+            return None
+    """
+    assert _ids("src/repro/kernels/pq/pq.py", internal) == []
+
+
+def test_shard_map_in_jit_fires_on_decorated_and_lambda():
+    bad = """\
+        import jax
+        from jax.experimental.shard_map import shard_map
+        @jax.jit
+        def f(x):
+            return shard_map(g, mesh=m, in_specs=s, out_specs=o)(x)
+    """
+    assert _ids("src/repro/sharding/foo.py", bad) == ["shard-map-in-jit"]
+    bad2 = """\
+        import jax
+        from jax.experimental.shard_map import shard_map
+        h = jax.jit(lambda x: shard_map(g, mesh=m, in_specs=s,
+                                        out_specs=o)(x))
+    """
+    assert _ids("src/repro/sharding/foo.py", bad2) == ["shard-map-in-jit"]
+
+
+def test_shard_map_quiet_as_own_jit():
+    good = """\
+        import jax
+        from jax.experimental.shard_map import shard_map
+        def gather(art, ids):
+            return shard_map(g, mesh=m, in_specs=s, out_specs=o)(art, ids)
+        serve = jax.jit(lambda art, ids: postprocess(art, ids))
+    """
+    assert _ids("src/repro/sharding/foo.py", good) == []
+
+
+def test_pad_in_flush_fires_only_in_launch():
+    bad = """\
+        import jax.numpy as jnp
+        def flush(flat, widths):
+            return jnp.pad(flat, widths)
+    """
+    assert _ids("src/repro/launch/foo.py", bad) == ["pad-in-flush"]
+    assert _ids("src/repro/core/foo.py", bad) == []
+    good = """\
+        import numpy as np
+        def flush(flat, widths):
+            return np.pad(flat, widths)
+    """
+    assert _ids("src/repro/launch/foo.py", good) == []
+
+
+def test_lock_discipline_fires_on_unlocked_write():
+    bad = """\
+        import threading
+        class Engine:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._pending = []
+            def locked_reset(self):
+                with self._lock:
+                    self._pending = []
+            def racy_reset(self):
+                self._pending = [1]
+    """
+    diags = analyze_source("src/repro/launch/foo.py",
+                           textwrap.dedent(bad))
+    assert [d.rule_id for d in diags] == ["lock-discipline"]
+    assert "racy_reset" not in diags[0].message  # message names the attr
+    assert "_pending" in diags[0].message
+
+
+def test_lock_discipline_quiet_when_all_writes_guarded():
+    good = """\
+        import threading
+        class Engine:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._pending = []     # __init__ is pre-thread: exempt
+            def reset(self):
+                with self._lock:
+                    self._pending = []
+            def grow(self):
+                with self._lock:
+                    self._pending += [1]
+            def unrelated(self):
+                self.stats = {}        # never lock-guarded anywhere
+    """
+    assert _ids("src/repro/launch/foo.py", good) == []
+
+
+def test_bare_assert_scoped_to_src():
+    bad = "def f(x):\n    assert x > 0\n"
+    assert _ids("src/repro/foo.py", bad) == ["bare-assert"]
+    assert _ids("tools/foo.py", bad) == []
+    assert _ids("tests/foo.py", bad) == []
+    good = "def f(x):\n    if x <= 0:\n        raise ValueError(x)\n"
+    assert _ids("src/repro/foo.py", good) == []
+
+
+# ----------------------------------------------------------------------
+# suppressions
+# ----------------------------------------------------------------------
+
+BAD_ASSERT = "def f(x):\n    assert x > 0{tail}\n"
+
+
+def test_suppression_same_line():
+    src = BAD_ASSERT.format(tail="  # repro-lint: disable=bare-assert")
+    assert _ids("src/repro/foo.py", src) == []
+
+
+def test_suppression_comment_line_above():
+    src = ("def f(x):\n"
+           "    # repro-lint: disable=bare-assert (sanctioned: demo)\n"
+           "    assert x > 0\n")
+    assert _ids("src/repro/foo.py", src) == []
+
+
+def test_suppression_disable_all_and_wrong_id():
+    src = BAD_ASSERT.format(tail="  # repro-lint: disable=all")
+    assert _ids("src/repro/foo.py", src) == []
+    src = BAD_ASSERT.format(tail="  # repro-lint: disable=pad-in-flush")
+    assert _ids("src/repro/foo.py", src) == ["bare-assert"]
+
+
+# ----------------------------------------------------------------------
+# baseline round-trip
+# ----------------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    src = "def f(x):\n    assert x > 0\n"
+    diags = analyze_source("src/repro/foo.py", src)
+    assert len(diags) == 1
+    bl_path = str(tmp_path / "baseline.json")
+    write_baseline(bl_path, diags)
+    baseline = load_baseline(bl_path)
+    # identical findings are fully absorbed ...
+    new, old = filter_baseline(diags, baseline)
+    assert (new, len(old)) == ([], 1)
+    # ... and stay absorbed when unrelated edits shift line numbers
+    shifted = analyze_source("src/repro/foo.py",
+                             "import os\n\n\n" + src)
+    assert shifted[0].line != diags[0].line
+    new, old = filter_baseline(shifted, baseline)
+    assert (new, len(old)) == ([], 1)
+    # a second, non-baselined finding is NEW
+    two = analyze_source("src/repro/foo.py",
+                         src + "def g(y):\n    assert y\n")
+    new, old = filter_baseline(two, baseline)
+    assert (len(new), len(old)) == (1, 1)
+
+
+def test_baseline_missing_file_is_empty(tmp_path):
+    assert load_baseline(str(tmp_path / "nope.json")) == {}
+    assert load_baseline(None) == {}
+
+
+def test_baseline_rejects_malformed(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"entries": {"k": "not-an-int"}}))
+    with pytest.raises(ValueError):
+        load_baseline(str(p))
+
+
+# ----------------------------------------------------------------------
+# registry contract
+# ----------------------------------------------------------------------
+
+def test_rule_registry_shape():
+    ids = registered_rule_ids()
+    assert len(ids) >= 8
+    for rid in ids:
+        cls = rule_class(rid)
+        assert cls.rule_id == rid
+        assert cls.title and cls.motivation
+
+
+def test_register_rule_rejects_duplicates_and_bad_ids():
+    existing = registered_rule_ids()[0]
+
+    with pytest.raises(ValueError, match="duplicate"):
+        @register_rule
+        class Dup(Rule):
+            rule_id = existing
+            title = "t"
+            motivation = "m"
+
+    with pytest.raises(ValueError, match="kebab-case"):
+        @register_rule
+        class BadId(Rule):
+            rule_id = "Not Kebab"
+            title = "t"
+            motivation = "m"
+
+    with pytest.raises(ValueError, match="reserved"):
+        @register_rule
+        class Reserved(Rule):
+            rule_id = PARSE_ERROR_RULE
+            title = "t"
+            motivation = "m"
+
+    with pytest.raises(ValueError, match="title"):
+        @register_rule
+        class NoDocs(Rule):
+            rule_id = "undocumented-rule"
+
+
+def test_kind_names_superset_of_live_registries():
+    # the linter's literal kind list (it must not import jax) can lag
+    # ahead of the registries but never behind them
+    from repro.core.schemes import registered_kinds
+    from repro.retrieval import registered_index_kinds
+    live = set(registered_kinds()) | set(registered_index_kinds())
+    assert live <= SCHEME_KIND_NAMES
+
+
+def test_parse_error_is_a_diagnostic_not_a_crash():
+    diags = analyze_source("src/repro/foo.py", "def f(:\n")
+    assert [d.rule_id for d in diags] == [PARSE_ERROR_RULE]
+
+
+# ----------------------------------------------------------------------
+# self-check: the committed tree is clean
+# ----------------------------------------------------------------------
+
+def test_committed_tree_has_zero_diagnostics():
+    """The empty-committed-baseline invariant: every rule parses every
+    src/tools file and reports nothing (fix or suppress before commit,
+    never baseline new debt)."""
+    diags, n_files = analyze_paths(
+        [os.path.join(REPO, "src"), os.path.join(REPO, "tools")],
+        root=REPO, exclude=lint_exclusions(REPO))
+    assert n_files > 100           # really scanned the tree
+    assert [d.format() for d in diags] == []
+
+
+def test_shared_exclusion_list_matches_pyproject():
+    exc = lint_exclusions(REPO)
+    assert "tests/_hypothesis_compat.py" in exc
+    with open(os.path.join(REPO, "pyproject.toml")) as f:
+        assert "tests/_hypothesis_compat.py" in f.read()
+
+
+# ----------------------------------------------------------------------
+# CLI
+# ----------------------------------------------------------------------
+
+def test_cli_gate_and_baseline_flow(tmp_path, capsys):
+    from repro.analysis.cli import main
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    (tmp_path / "pyproject.toml").write_text("[tool.ruff]\n")
+    (pkg / "bad.py").write_text("def f(x):\n    assert x\n")
+    bl = str(tmp_path / "baseline.json")
+    report = str(tmp_path / "report.json")
+
+    # violation -> exit 1, diagnostic on stdout, JSON report written
+    rc = main([str(tmp_path / "src"), "--root", str(tmp_path),
+               "--baseline", bl, "--json", report])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "bare-assert" in out
+    with open(report) as f:
+        data = json.load(f)
+    assert data["counts"] == {"new": 1, "baselined": 0}
+    assert data["files_scanned"] == 1
+
+    # accept into baseline -> gate passes, finding reported as baselined
+    assert main([str(tmp_path / "src"), "--root", str(tmp_path),
+                 "--baseline", bl, "--write-baseline"]) == 0
+    capsys.readouterr()
+    rc = main([str(tmp_path / "src"), "--root", str(tmp_path),
+               "--baseline", bl, "--json", report])
+    assert rc == 0
+    with open(report) as f:
+        assert json.load(f)["counts"] == {"new": 0, "baselined": 1}
+
+    # fix the file -> clean even against the stale baseline
+    (pkg / "bad.py").write_text(
+        "def f(x):\n    if not x:\n        raise ValueError(x)\n")
+    assert main([str(tmp_path / "src"), "--root", str(tmp_path),
+                 "--baseline", bl]) == 0
+
+
+def test_cli_list_rules_and_unknown_rule(capsys):
+    from repro.analysis.cli import main
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in registered_rule_ids():
+        assert rid in out
+    with pytest.raises(SystemExit):
+        main([str(REPO) + "/src", "--rule", "no-such-rule"])
+
+
+def test_single_rule_filter():
+    src = ("import jax.numpy as jnp\n"
+           "X = jnp.ones(3)\n"
+           "def f(x):\n    assert x\n")
+    only = analyze_source("src/repro/foo.py", src,
+                          rule_ids=["bare-assert"])
+    assert [d.rule_id for d in only] == ["bare-assert"]

@@ -20,6 +20,9 @@ from repro.launch.async_engine import (AsyncEngineStats, AsyncServingEngine,
                                        FlushPolicy, drive_open_loop)
 from repro.launch.engine import EngineStats, ServingEngine
 
+# sanitizer lane: flush legs run under jax.transfer_guard('disallow')
+pytestmark = pytest.mark.hot_path
+
 
 def _dpq_cfg(**kw):
     return EmbeddingConfig(vocab_size=500, dim=16, kind="dpq",

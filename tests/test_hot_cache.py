@@ -17,6 +17,9 @@ from repro.core import Embedding, EmbeddingConfig
 from repro.core.schemes import registered_kinds, scheme_class
 from repro.launch.engine import ServingEngine, drive_zipf_stream
 
+# sanitizer lane: flush legs run under jax.transfer_guard('disallow')
+pytestmark = pytest.mark.hot_path
+
 
 def _dpq_cfg(**kw):
     return EmbeddingConfig(vocab_size=500, dim=16, kind="dpq",

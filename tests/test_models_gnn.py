@@ -46,7 +46,7 @@ def test_mace_translation_invariance():
     p = m.init(jax.random.PRNGKey(0))
     g = _graph(n_species=cfg.num_species)
     e1 = m.apply(p, g)["energy"]
-    g2 = dict(g, positions=g["positions"] + jnp.asarray([5.0, -3.0, 1.0]))
+    g2 = dict(g, positions=g["positions"] + jnp.asarray([[5.0, -3.0, 1.0]]))
     e2 = m.apply(p, g2)["energy"]
     np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4)
 

@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""Thin wrapper so the linter runs without installing the package:
+
+    python tools/repro_lint.py [src tools ...] [--json report.json]
+
+Equivalent to ``python -m repro.analysis`` (see that module / DESIGN.md
+§15 for rules, suppressions, and the baseline policy).  Stdlib-only —
+safe to run before heavyweight deps are installed.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
